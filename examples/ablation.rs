@@ -1,0 +1,22 @@
+//! Table 2 regeneration: SharePrefill ablations (w/o sharing τ=0,
+//! w/o exclusion δ=1.01, full method) + max-context latency column.
+//!
+//!   cargo run --release --example ablation [samples] [ctx]
+
+use shareprefill::config::Config;
+use shareprefill::eval::{ablation, open_registry};
+use shareprefill::workloads::tasks::TASK_NAMES;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let samples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let tasks: Vec<_> = TASK_NAMES.iter().map(|(t, _)| *t).collect();
+    let latency_ctx = 2048;
+    let rows = ablation::run_ablation(&registry, &cfg, "sim-llama", &tasks,
+                                      samples, ctx, latency_ctx)?;
+    println!("{}", ablation::render(&rows, ctx, latency_ctx));
+    Ok(())
+}

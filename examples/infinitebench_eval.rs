@@ -1,0 +1,23 @@
+//! Table 1 regeneration: InfiniteBench-sim scores for all four methods.
+//!
+//!   cargo run --release --example infinitebench_eval [samples] [ctx]
+
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{infinitebench, open_registry};
+use shareprefill::workloads::tasks::TASK_NAMES;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let samples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let tasks: Vec<_> = TASK_NAMES.iter().map(|(t, _)| *t).collect();
+    for model in ["sim-llama", "sim-qwen"] {
+        let t1 = infinitebench::run_table1(
+            &registry, &cfg, model, &MethodKind::all(), &tasks, samples,
+            ctx)?;
+        println!("{}\n", t1.render());
+    }
+    Ok(())
+}

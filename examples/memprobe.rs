@@ -1,0 +1,20 @@
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::workloads::tasks::latency_prompt;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let mut e = build_engine(&registry, &cfg, "sim-llama", MethodKind::Flash)?;
+    let p = latency_prompt(512);
+    for i in 0..6 {
+        let pre = e.prefill(&p)?;
+        let _ = e.decode(&pre, 2)?;
+        println!("iter {i}: rss {:.0} MB", rss_mb());
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Figure 4 regeneration: PG19-sim perplexity vs. context length.
+//!
+//!   cargo run --release --example perplexity [samples]
+
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{open_registry, perplexity};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let samples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    for (model, ctxs) in [("sim-llama", vec![256usize, 512, 1024, 2048]),
+                          ("sim-qwen", vec![256, 512, 1024])] {
+        let curves = perplexity::run_ppl(&registry, &cfg, model,
+                                         &MethodKind::all(), &ctxs,
+                                         samples)?;
+        println!("{}\n", curves.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! End-to-end serving driver (the DESIGN.md E2E validation): a batched
+//! request stream through router -> batcher -> KV admission -> prefill ->
+//! decode, reporting latency/throughput per method.  Results are recorded
+//! in EXPERIMENTS.md.
+//!
+//!   cargo run --release --example serve_bench [requests] [ctx]
+
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::serving::request::Request;
+use shareprefill::serving::scheduler::Scheduler;
+use shareprefill::serving::server;
+use shareprefill::workloads::tasks::latency_prompt;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+    let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
+
+    for kind in [MethodKind::Flash, MethodKind::SharePrefill] {
+        let cfg = Config::default();
+        let handle = server::spawn(move || {
+            let registry = open_registry(&cfg)?;
+            let engine = build_engine(&registry, &cfg, "sim-llama", kind)?;
+            Ok((Scheduler::new(&cfg.serve), engine))
+        });
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            handle.submit(Request::new(i as u64, latency_prompt(ctx), 4));
+        }
+        let (responses, report) = handle.shutdown_and_report();
+        let wall = t0.elapsed().as_secs_f64();
+        println!("== {} ==", kind.name());
+        println!("{report}");
+        println!("wall {:.1}s for {} requests -> {:.0} prompt tok/s e2e\n",
+                 wall, responses.len(), (n * ctx) as f64 / wall);
+    }
+    Ok(())
+}

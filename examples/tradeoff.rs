@@ -1,0 +1,31 @@
+//! Figure 1 regeneration: accuracy (InfiniteBench-sim avg) vs. prefill
+//! latency scatter for all methods/models.
+//!
+//!   cargo run --release --example tradeoff [samples] [ctx]
+
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{infinitebench, latency, open_registry};
+use shareprefill::workloads::tasks::TASK_NAMES;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let samples: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let tasks: Vec<_> = TASK_NAMES.iter().map(|(t, _)| *t).collect();
+    println!("| model | method | avg score | prefill ms @ {ctx} |");
+    println!("|---|---|---:|---:|");
+    for model in ["sim-llama", "sim-qwen"] {
+        let t1 = infinitebench::run_table1(&registry, &cfg, model,
+                                           &MethodKind::all(), &tasks,
+                                           samples, ctx)?;
+        let lat = latency::run_latency(&registry, &cfg, model,
+                                       &MethodKind::all(), &[ctx], 1)?;
+        for m in MethodKind::all() {
+            println!("| {} | {} | {:.1} | {:.0} |", model, m.name(),
+                     t1.average(m), lat.curves[&m][0].0);
+        }
+    }
+    Ok(())
+}

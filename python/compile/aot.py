@@ -1,0 +1,233 @@
+"""AOT pipeline: lower every L2 stage (and the L1 kernels inside them) to
+HLO **text** artifacts + manifest for the rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ../artifacts):
+
+  {model}_{stage}_s{seq}.hlo.txt          per-seq-bucket stages
+  {model}_attn_s{seq}_b{budget}.hlo.txt   budgeted sparse attention
+  {model}_decode.hlo.txt                  fused decode layer (Smax cache)
+  {model}_lmhead_s1.hlo.txt               single-position lm head
+  manifest.json                           shapes + parameter order
+  golden-{model}.bin                      tenstore golden vectors for the
+                                          rust integration tests
+
+Idempotent: existing files are skipped unless --force.  Python never runs
+after this; the rust binary is self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import tenstore
+from .configs import BLOCK_SIZE, CONFIGS
+from .kernels import ref as kref
+from .kernels.probes import flex_probe, pattern_probe, vslash_probe
+from .kernels.sparse_attn import dense_causal_indices, sparse_attention
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest = {"block_size": BLOCK_SIZE, "models": {},
+                         "artifacts": []}
+
+    def emit(self, name: str, fn, params, outputs, meta):
+        """Lower fn at the given arg specs and write {name}.hlo.txt."""
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = f"{name}.hlo.txt"
+        entry["params"] = [
+            {"name": n, "dtype": "i32" if s.dtype == I32 else "f32",
+             "shape": list(s.shape)} for n, s in params]
+        entry["outputs"] = [
+            {"dtype": "i32" if s.dtype == I32 else "f32",
+             "shape": list(s.shape)} for s in outputs]
+        self.manifest["artifacts"].append(entry)
+        if os.path.exists(path) and not self.force:
+            return
+        lowered = jax.jit(fn).lower(*[s for _, s in params])
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        print(f"  wrote {entry['file']}")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def emit_model(em: Emitter, cfg):
+    n = cfg.name.replace("-", "")
+    em.manifest["models"][cfg.name] = {
+        "prefix": n,
+        "num_layers": cfg.num_layers, "num_heads": cfg.num_heads,
+        "num_kv_heads": cfg.num_kv_heads, "head_dim": cfg.head_dim,
+        "hidden": cfg.hidden, "ffn": cfg.ffn, "vocab": cfg.vocab,
+        "max_seq": cfg.max_seq, "seq_buckets": list(cfg.seq_buckets),
+        "budgets": {str(s): cfg.budgets(s) for s in cfg.seq_buckets},
+        "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+        "weights_file": f"weights-{cfg.name}.bin",
+    }
+    H, Hkv, D, Dm, F, V = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                           cfg.hidden, cfg.ffn, cfg.vocab)
+    BS = BLOCK_SIZE
+
+    for seq in cfg.seq_buckets:
+        nb = cfg.num_blocks(seq)
+        base = {"model": cfg.name, "seq": seq}
+        em.emit(f"{n}_embed_s{seq}", M.stage_embed,
+                [("tokens", spec((seq,), I32)), ("table", spec((V, Dm)))],
+                [spec((seq, Dm))], {**base, "stage": "embed"})
+        em.emit(f"{n}_qkv_s{seq}", M.stage_qkv(cfg),
+                [("x", spec((seq, Dm))), ("ln_w", spec((Dm,))),
+                 ("wq", spec((Dm, H * D))), ("wk", spec((Dm, Hkv * D))),
+                 ("wv", spec((Dm, Hkv * D)))],
+                [spec((H, seq, D)), spec((Hkv, seq, D)), spec((Hkv, seq, D))],
+                {**base, "stage": "qkv"})
+        em.emit(f"{n}_postattn_s{seq}", M.stage_post_attn(cfg),
+                [("attn_out", spec((H, seq, D))), ("resid", spec((seq, Dm))),
+                 ("wo", spec((H * D, Dm))), ("ln2_w", spec((Dm,))),
+                 ("w_gate", spec((Dm, F))), ("w_up", spec((Dm, F))),
+                 ("w_down", spec((F, Dm)))],
+                [spec((seq, Dm))], {**base, "stage": "post_attn"})
+        em.emit(f"{n}_lmhead_s{seq}", M.stage_lm_head(cfg),
+                [("x", spec((seq, Dm))), ("ln_w", spec((Dm,))),
+                 ("w_out", spec((Dm, V)))],
+                [spec((seq, V))], {**base, "stage": "lm_head"})
+        em.emit(f"{n}_patternprobe_s{seq}", pattern_probe,
+                [("qh", spec((H, BS, D))), ("k", spec((H, seq, D)))],
+                [spec((H, nb))], {**base, "stage": "pattern_probe"})
+        em.emit(f"{n}_vslashprobe_s{seq}", vslash_probe,
+                [("qh", spec((H, BS, D))), ("k", spec((H, seq, D)))],
+                [spec((H, BS, seq))], {**base, "stage": "vslash_probe"})
+        em.emit(f"{n}_flexprobe_s{seq}", flex_probe,
+                [("q", spec((H, seq, D))), ("k", spec((H, seq, D)))],
+                [spec((H, nb, nb))], {**base, "stage": "flex_probe"})
+        for b in cfg.budgets(seq):
+            em.emit(f"{n}_attn_s{seq}_b{b}", sparse_attention,
+                    [("q", spec((seq, D))), ("k", spec((seq, D))),
+                     ("v", spec((seq, D))), ("idx", spec((nb, b), I32)),
+                     ("valid", spec((nb, b)))],
+                    [spec((seq, D)), spec((nb, b))],
+                    {**base, "stage": "attn", "budget": b})
+
+    em.emit(f"{n}_lmhead_s1", M.stage_lm_head(cfg),
+            [("x", spec((1, Dm))), ("ln_w", spec((Dm,))),
+             ("w_out", spec((Dm, V)))],
+            [spec((1, V))], {"model": cfg.name, "stage": "lm_head", "seq": 1})
+    Smax = cfg.max_seq
+    em.emit(f"{n}_decode", M.stage_decode_step(cfg, Smax),
+            [("x", spec((1, Dm))), ("ln_w", spec((Dm,))),
+             ("wq", spec((Dm, H * D))), ("wk", spec((Dm, Hkv * D))),
+             ("wv", spec((Dm, Hkv * D))), ("wo", spec((H * D, Dm))),
+             ("ln2_w", spec((Dm,))), ("w_gate", spec((Dm, F))),
+             ("w_up", spec((Dm, F))), ("w_down", spec((F, Dm))),
+             ("kcache", spec((Hkv, Smax, D))), ("vcache", spec((Hkv, Smax, D))),
+             ("pos", spec((), I32))],
+            [spec((1, Dm)), spec((Hkv, D)), spec((Hkv, D))],
+            {"model": cfg.name, "stage": "decode", "seq": Smax})
+
+
+def emit_golden(em: Emitter, cfg, seq: int = 256):
+    """Golden vectors the rust integration tests replay through the compiled
+    artifacts: random inputs + oracle outputs (all f32 via tenstore; the
+    int inputs are stored as f32 and cast on the rust side)."""
+    path = os.path.join(em.out_dir, f"golden-{cfg.name}.bin")
+    if os.path.exists(path) and not em.force:
+        return
+    rng = np.random.default_rng(42)
+    D = cfg.head_dim
+    nb = seq // BLOCK_SIZE
+    q = rng.standard_normal((seq, D)).astype(np.float32)
+    k = rng.standard_normal((seq, D)).astype(np.float32)
+    v = rng.standard_normal((seq, D)).astype(np.float32)
+    idx, valid = dense_causal_indices(seq)
+    o_dense, abar_dense = kref.sparse_attention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), idx, valid)
+    # a sparse pattern: diagonal + sink + one random mid block, budget nb//4
+    b = max(2, nb // 4)
+    sidx = np.zeros((nb, b), np.int32)
+    svalid = np.zeros((nb, b), np.float32)
+    for i in range(nb):
+        picks = [i, 0] + list(rng.integers(0, i + 1, size=max(0, b - 2)))
+        for s, p in enumerate(picks[:b]):
+            sidx[i, s] = p
+            svalid[i, s] = 1.0
+    o_sp, abar_sp = kref.sparse_attention_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(sidx), jnp.asarray(svalid))
+    H = cfg.num_heads
+    qh = rng.standard_normal((H, BLOCK_SIZE, D)).astype(np.float32)
+    kh = rng.standard_normal((H, seq, D)).astype(np.float32)
+    probe = kref.pattern_probe_ref(jnp.asarray(qh), jnp.asarray(kh))
+    flexq = rng.standard_normal((H, seq, D)).astype(np.float32)
+    flex = kref.flex_probe_ref(jnp.asarray(flexq), jnp.asarray(kh))
+    tenstore.write(path, {
+        "seq": np.array([seq], np.float32),
+        "q": q, "k": k, "v": v,
+        "dense_idx": np.asarray(idx, np.float32),
+        "dense_valid": np.asarray(valid, np.float32),
+        "dense_o": np.asarray(o_dense),
+        "dense_abar": np.nan_to_num(np.asarray(abar_dense), neginf=-1e30),
+        "sparse_idx": sidx.astype(np.float32),
+        "sparse_valid": svalid,
+        "sparse_o": np.asarray(o_sp),
+        "sparse_abar": np.nan_to_num(np.asarray(abar_sp), neginf=-1e30),
+        "probe_qh": qh, "probe_k": kh,
+        "probe_ahat": np.asarray(probe),
+        "flex_q": flexq,
+        "flex_map": np.nan_to_num(np.asarray(flex), neginf=-1e30),
+    })
+    print(f"  wrote golden-{cfg.name}.bin")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out, args.force)
+    names = list(CONFIGS) if args.models == "all" else args.models.split(",")
+    for name in names:
+        cfg = CONFIGS[name]
+        print(f"model {name}")
+        emit_model(em, cfg)
+        if not args.skip_golden:
+            emit_golden(em, cfg)
+    em.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Model configurations shared by the L2 model, the trainer and the AOT
+pipeline.
+
+Two tiny byte-level transformer configs stand in for the paper's
+Llama-3-8B-Instruct-262k and Qwen2.5-7B-Instruct (see DESIGN.md
+"Substitutions").  ``sim_qwen`` exercises GQA (num_kv_heads < num_heads).
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+# Block size of the block-sparse attention grid.  Shared constant across all
+# three layers (L1 kernel, L2 artifact shapes, L3 coordinator).
+BLOCK_SIZE = 64
+
+# Budget buckets as fractions of the number of kv blocks.  The coordinator
+# picks the smallest bucket >= the per-head required block count.
+BUDGET_FRACTIONS = (0.125, 0.25, 0.5, 1.0)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    hidden: int
+    ffn: int
+    vocab: int
+    max_seq: int
+    seq_buckets: Tuple[int, ...] = ()
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def group(self) -> int:
+        """Number of query heads sharing one kv head."""
+        return self.num_heads // self.num_kv_heads
+
+    def num_blocks(self, seq: int) -> int:
+        assert seq % BLOCK_SIZE == 0, f"seq {seq} not a multiple of {BLOCK_SIZE}"
+        return seq // BLOCK_SIZE
+
+    def budgets(self, seq: int):
+        """Distinct budget bucket sizes (in kv blocks) for a sequence bucket."""
+        nb = self.num_blocks(seq)
+        out = []
+        for f in BUDGET_FRACTIONS:
+            b = max(1, int(round(nb * f)))
+            if b not in out:
+                out.append(b)
+        return out
+
+
+SIM_LLAMA = ModelConfig(
+    name="sim-llama",  # stands in for Llama-3-8B-Instruct-262k
+    num_layers=6,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=32,
+    hidden=256,
+    ffn=512,
+    vocab=512,
+    max_seq=4096,
+    seq_buckets=(256, 512, 1024, 2048, 4096),
+)
+
+SIM_QWEN = ModelConfig(
+    name="sim-qwen",  # stands in for Qwen2.5-7B-Instruct (exercises GQA)
+    num_layers=4,
+    num_heads=6,
+    num_kv_heads=2,
+    head_dim=32,
+    hidden=192,
+    ffn=384,
+    vocab=512,
+    max_seq=2048,
+    seq_buckets=(256, 512, 1024, 2048),
+)
+
+CONFIGS = {c.name: c for c in (SIM_LLAMA, SIM_QWEN)}

@@ -1,0 +1,136 @@
+"""Synthetic byte-level training corpus.
+
+The corpus is engineered so the tiny models develop the attention behaviours
+the paper's evaluation stresses (see DESIGN.md "Substitutions"):
+
+  * retrieval / copy structure (``<KEY:name=digits> ... <GET:name>digits``)
+    so induction-style heads form — these drive the Retr.* tasks;
+  * locally-coherent "English-like" prose (vertical/slash/local patterns);
+  * dialogue turns (staircase patterns, En.Dia analog);
+  * code-like nested text (irregular long-range patterns, Code.Debug
+    analog).
+
+Tokens are raw bytes (0..255) inside a 512-entry vocab; the upper half of
+the vocab is reserved/unused, matching the rust-side tokenizer
+(``rust/src/workloads/``).  Generation is fully deterministic given a seed —
+python (training) and rust (evaluation) implement the same generators with
+the same archetype mix but independent seeds; only the *distribution*
+matters, not byte-identity.
+"""
+
+import numpy as np
+
+WORDS = (
+    "the of and to in is was he for it with as his on be at by had not are "
+    "but from or have an they which one you were all her she there would "
+    "their we him been has when who will no more if out so up said what its "
+    "about than into them can only other time new some could these two may "
+    "first then do any like my now over such our man me even most made after "
+    "also did many off before must well back through years where much your "
+    "way down should because each just those people how too good".split()
+)
+
+NAMES = (
+    "alder birch cedar dahlia elm fern gingko hazel iris juniper kale lotus "
+    "maple nettle oak poplar quince rowan sage tulip".split()
+)
+
+
+class Corpus:
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    # -- component generators -------------------------------------------
+    def prose(self, n_words: int) -> str:
+        words = self.rng.choice(WORDS, size=n_words)
+        out, line = [], []
+        for w in words:
+            line.append(w)
+            if self.rng.random() < 0.08:
+                line[-1] += "."
+            if sum(len(x) + 1 for x in line) > 70:
+                out.append(" ".join(line))
+                line = []
+        if line:
+            out.append(" ".join(line))
+        return "\n".join(out)
+
+    def kv_pairs(self, n: int):
+        """Returns (definitions, queries) for retrieval structure."""
+        defs, queries = [], []
+        for _ in range(n):
+            name = self.rng.choice(NAMES) + str(self.rng.integers(10, 99))
+            val = "".join(str(d) for d in self.rng.integers(0, 10, size=6))
+            defs.append(f"<KEY:{name}={val}>")
+            queries.append((f"<GET:{name}>", val))
+        return defs, queries
+
+    def dialogue(self, n_turns: int) -> str:
+        speakers = ["ann", "bob", "eve", "dan"]
+        lines = []
+        for _ in range(n_turns):
+            s = self.rng.choice(speakers)
+            lines.append(f"{s}: {self.prose(int(self.rng.integers(4, 12)))}")
+        return "\n".join(lines)
+
+    def codeish(self, n_stmts: int) -> str:
+        lines = []
+        depth = 0
+        for _ in range(n_stmts):
+            v = self.rng.choice(NAMES)
+            r = self.rng.random()
+            if r < 0.2 and depth < 3:
+                lines.append("  " * depth + f"fn {v}() {{")
+                depth += 1
+            elif r < 0.3 and depth > 0:
+                depth -= 1
+                lines.append("  " * depth + "}")
+            else:
+                a, b = self.rng.choice(NAMES), self.rng.choice(NAMES)
+                lines.append("  " * depth + f"let {v} = {a} + {b};")
+        lines.extend("}" for _ in range(depth))
+        return "\n".join(lines)
+
+    # -- documents -------------------------------------------------------
+    def document(self, approx_len: int) -> str:
+        """One mixed document: prose with embedded kv retrieval, dialogue
+        and code sections; queries appear *after* long spans so the model
+        must learn long-range copy."""
+        parts = []
+        defs, queries = self.kv_pairs(int(self.rng.integers(2, 5)))
+        parts.extend(defs)
+        while sum(len(p) for p in parts) < approx_len * 0.8:
+            r = self.rng.random()
+            if r < 0.5:
+                parts.append(self.prose(int(self.rng.integers(30, 90))))
+            elif r < 0.75:
+                parts.append(self.dialogue(int(self.rng.integers(3, 8))))
+            else:
+                parts.append(self.codeish(int(self.rng.integers(8, 24))))
+        for qm, val in queries:
+            parts.append(qm + val)
+        return "\n".join(parts)
+
+    def tokens(self, n_tokens: int) -> np.ndarray:
+        """A contiguous token stream of length >= n_tokens."""
+        chunks = []
+        total = 0
+        while total < n_tokens:
+            doc = self.document(int(self.rng.integers(800, 3000)))
+            b = np.frombuffer(doc.encode("utf-8", "ignore"), dtype=np.uint8)
+            chunks.append(b.astype(np.int32))
+            total += len(b)
+        return np.concatenate(chunks)[:n_tokens]
+
+
+def batches(seed: int, seq: int, batch: int, steps: int):
+    """Yield (tokens[batch, seq+1] int32) training batches."""
+    c = Corpus(seed)
+    stream = c.tokens((seq + 1) * batch * steps + 1)
+    per = seq + 1
+    for s in range(steps):
+        rows = []
+        for b in range(batch):
+            off = (s * batch + b) * per
+            rows.append(stream[off:off + per])
+        yield np.stack(rows)

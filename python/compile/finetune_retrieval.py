@@ -1,0 +1,56 @@
+"""Retrieval-dense fine-tune: teaches the <KEY:name=val>/<GET:name>val
+induction behaviour the Retr.* evaluations need (the base mix has too few
+retrieval tokens for it to emerge in 500 steps)."""
+import sys, time
+import jax, jax.numpy as jnp
+import numpy as np
+
+from . import corpus, tenstore
+from .configs import CONFIGS
+from . import model as M
+from .train import adamw_init, train_step, flatten_params
+
+def retrieval_batch(rng, seq, batch):
+    rows = []
+    for _ in range(batch):
+        c = corpus.Corpus(int(rng.integers(1 << 30)))
+        s = ""
+        while len(s) < seq + 1:
+            defs, queries = c.kv_pairs(int(rng.integers(2, 6)))
+            block = "\n".join(defs) + "\n"
+            block += c.prose(int(rng.integers(10, 60))) + "\n"
+            block += "".join(q + v + "\n" for q, v in queries)
+            s += block
+        b = np.frombuffer(s.encode()[:seq + 1], dtype=np.uint8)
+        rows.append(b.astype(np.int32))
+    return np.stack(rows)
+
+def main():
+    name = sys.argv[1] if len(sys.argv) > 1 else "sim-llama"
+    steps = int(sys.argv[2]) if len(sys.argv) > 2 else 120
+    cfg = CONFIGS[name]
+    ts = tenstore.read(f"../artifacts/weights-{name}.bin")
+    layers = [M.LayerParams(**{f: jnp.asarray(ts[f"layer{i}.{f}"])
+                               for f in M.LayerParams._fields})
+              for i in range(cfg.num_layers)]
+    params = M.Params(embed=jnp.asarray(ts["embed"]), layers=layers,
+                      ln_f=jnp.asarray(ts["ln_f"]),
+                      w_out=jnp.asarray(ts["w_out"]))
+    m, v = adamw_init(params)
+    rng = np.random.default_rng(99)
+    t0 = time.time()
+    for step in range(steps):
+        rows = retrieval_batch(rng, 512, 4)
+        params, m, v, loss = train_step(cfg, params, m, v,
+                                        jnp.asarray(rows),
+                                        jnp.float32(1e-4), jnp.int32(step))
+        if step % 20 == 0 or step == steps - 1:
+            print(f"[ft {name}] {step}/{steps} loss {float(loss):.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    tenstore.write(f"../artifacts/weights-{name}.bin",
+                   {k: np.asarray(w) for k, w in
+                    flatten_params(cfg, params).items()})
+    print("saved")
+
+if __name__ == "__main__":
+    main()

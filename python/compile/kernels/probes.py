@@ -1,0 +1,100 @@
+"""Probe computations: the cheap attention statistics the coordinator
+uses to *decide* patterns before paying for sparse attention.
+
+Three probes, all batched over query heads ``H`` (kv repeated to H by L2
+for GQA models):
+
+  * ``pattern_probe`` — the paper's :math:`\\hat a` (Alg. 3 line 3):
+    softmax of the block-pooled scores of the *last query row-block*
+    :math:`\\hat Q` against all of K.  Output ``[H, NB]``.  Feeds the JS
+    sparsity / similarity tests.
+  * ``vslash_probe`` — the softmaxed last-block attention map
+    :math:`\\hat A` (Alg. 5 line 2), ``[H, BS, S]``.  The coordinator sums
+    it along vertical / slash directions to search the conservative
+    vertical-slash pattern (also the MInference baseline's dynamic index).
+  * ``flex_probe`` — the FlexPrefill baseline's pooled block map
+    ``pool(Q)·pool(K)`` over *all* row-blocks, ``[H, NB, NB]``, causal
+    −inf, row-softmaxed.  This is the estimator whose token-alignment /
+    smoothing inaccuracies Section 3 of the paper critiques — reproduced
+    faithfully so the accuracy gap is measurable.
+
+Unlike the attention hot-spot (the Pallas kernel in sparse_attn.py), the
+probes are a single tiny batched matmul each (< 20 MFLOP at the largest
+bucket) — they lower as plain fused XLA ops, where the CPU backend runs
+them at memory bandwidth.  An earlier Pallas-interpret version cost
+~30 ms/call from interpreter overhead vs ~2 ms fused (EXPERIMENTS.md
+§Perf); on real TPUs these would live in the same Mosaic kernel family as
+the attention kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import BLOCK_SIZE
+
+NEG_INF = float("-inf")
+
+
+def _last_block_mask(bs: int, seq: int):
+    """Causal mask of the last query row-block vs all keys: [bs, S]."""
+    qpos = (seq - bs) + jnp.arange(bs)[:, None]
+    kpos = jnp.arange(seq)[None, :]
+    return kpos <= qpos
+
+
+def pattern_probe(qh, k, *, block_size: int = BLOCK_SIZE,
+                  interpret: bool = True):
+    """Block-pooled last-row-block attention estimate per head.
+
+    Args:
+      qh: ``[H, BS, D]`` — the last query row-block per head.
+      k:  ``[H, S, D]``.
+
+    Returns:
+      ``[H, NB]`` — softmax over kv blocks of the pooled scores.
+    """
+    del interpret  # plain jnp; kept for signature compatibility
+    h, bs, d = qh.shape
+    _, seq, _ = k.shape
+    nb = seq // block_size
+    s = jnp.einsum("hqd,hkd->hqk", qh, k) / (d ** 0.5)  # [H, bs, S]
+    m = _last_block_mask(bs, seq)[None]
+    blk = jnp.where(m, s, 0.0).reshape(h, bs, nb, block_size)
+    cnt = m.reshape(1, bs, nb, block_size).sum((1, 3))  # [1, nb]
+    pooled = blk.sum((1, 3)) / jnp.maximum(cnt, 1)      # [H, nb]
+    return jax.nn.softmax(pooled, axis=-1)
+
+
+def vslash_probe(qh, k, *, block_size: int = BLOCK_SIZE,
+                 interpret: bool = True):
+    """Softmaxed last-row-block attention map per head: ``[H, BS, S]``."""
+    del interpret
+    h, bs, d = qh.shape
+    _, seq, _ = k.shape
+    s = jnp.einsum("hqd,hkd->hqk", qh, k) / (d ** 0.5)
+    s = jnp.where(_last_block_mask(bs, seq)[None], s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def flex_probe(q, k, *, block_size: int = BLOCK_SIZE, interpret: bool = True):
+    """FlexPrefill-style pooled block map per head.
+
+    Args:
+      q, k: ``[H, S, D]``.
+
+    Returns:
+      ``[H, NB, NB]`` row-softmaxed pooled block scores (upper triangle
+      masked).  Mean-pooling happens *before* the QK product — deliberately
+      reproducing the estimator (and its failure modes) from the paper's
+      Section 3.
+    """
+    del interpret
+    h, seq, d = q.shape
+    nb = seq // block_size
+    qp = jnp.mean(q.reshape(h, nb, block_size, d), axis=2)
+    kp = jnp.mean(k.reshape(h, nb, block_size, d), axis=2)
+    s = jnp.einsum("hqd,hkd->hqk", qp, kp) / (d ** 0.5)
+    i = jnp.arange(nb)[:, None]
+    j = jnp.arange(nb)[None, :]
+    s = jnp.where((j <= i)[None], s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)

@@ -1,0 +1,154 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness signal.
+
+Nothing here uses Pallas; these are straight-line dense implementations the
+pytest / hypothesis suites compare the kernels against (and that the rust
+integration tests compare the *artifacts* against, via golden vectors
+exported by aot.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import BLOCK_SIZE
+
+NEG_INF = float("-inf")
+
+
+def causal_mask(seq: int):
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    return j <= i
+
+
+def block_mask_from_indices(idx, valid, seq: int,
+                            block_size: int = BLOCK_SIZE):
+    """Expand ``(idx, valid)`` into a dense ``[S, S]`` boolean mask."""
+    nb = seq // block_size
+    bm = jnp.zeros((nb, nb), bool)
+    for i in range(nb):
+        for s in range(idx.shape[1]):
+            bm = bm.at[i, idx[i, s]].set(
+                jnp.logical_or(bm[i, idx[i, s]], valid[i, s] > 0))
+    full = jnp.repeat(jnp.repeat(bm, block_size, 0), block_size, 1)
+    return full & causal_mask(seq)
+
+
+def dense_attention(q, k, v):
+    """Vanilla causal attention for one head: ``[S, D]`` inputs."""
+    seq, d = q.shape
+    s = (q @ k.T) / (d ** 0.5)
+    s = jnp.where(causal_mask(seq), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def sparse_attention_ref(q, k, v, idx, valid, block_size: int = BLOCK_SIZE):
+    """Oracle for kernels.sparse_attn.sparse_attention.
+
+    Returns ``(o, abar)`` with identical semantics: rows that attend to
+    nothing produce zeros; ``abar`` is the block-mean of raw scaled scores
+    over causally-valid positions of visited blocks, −inf elsewhere.
+    """
+    seq, d = q.shape
+    nb, budget = idx.shape
+    s = (q @ k.T) / (d ** 0.5)
+    mask = block_mask_from_indices(idx, valid, seq, block_size)
+    sm = jnp.where(mask, s, NEG_INF)
+    rowmax = jnp.max(sm, axis=-1)
+    any_row = jnp.isfinite(rowmax)
+    p = jnp.where(
+        jnp.isfinite(sm),
+        jnp.exp(sm - jnp.where(any_row, rowmax, 0.0)[:, None]), 0.0)
+    denom = jnp.sum(p, axis=-1)
+    o = (p @ v) / jnp.maximum(denom, 1e-30)[:, None]
+
+    cm = causal_mask(seq)
+    abar = jnp.full((nb, budget), NEG_INF)
+    for i in range(nb):
+        for slot in range(budget):
+            jb = idx[i, slot]
+            blk_s = jax.lax.dynamic_slice(
+                s, (i * block_size, jb * block_size),
+                (block_size, block_size))
+            blk_m = jax.lax.dynamic_slice(
+                cm, (i * block_size, jb * block_size),
+                (block_size, block_size))
+            blk_m = blk_m & (valid[i, slot] > 0)
+            n = jnp.sum(blk_m)
+            val = jnp.where(
+                n > 0,
+                jnp.sum(jnp.where(blk_m, blk_s, 0.0)) / jnp.maximum(n, 1),
+                NEG_INF)
+            abar = abar.at[i, slot].set(val)
+    return o, abar
+
+
+def pattern_probe_ref(qh, k, block_size: int = BLOCK_SIZE):
+    """Oracle for probes.pattern_probe: ``[H, NB]``."""
+    h, bs, d = qh.shape
+    _, seq, _ = k.shape
+    nb = seq // block_size
+    out = []
+    for hh in range(h):
+        s = (qh[hh] @ k[hh].T) / (d ** 0.5)  # [bs, S]
+        qpos = (nb - 1) * block_size + jnp.arange(bs)[:, None]
+        kpos = jnp.arange(seq)[None, :]
+        m = kpos <= qpos
+        pooled = []
+        for j in range(nb):
+            blk = s[:, j * block_size:(j + 1) * block_size]
+            bm = m[:, j * block_size:(j + 1) * block_size]
+            n = jnp.sum(bm)
+            pooled.append(jnp.sum(jnp.where(bm, blk, 0.0)) / jnp.maximum(n, 1))
+        out.append(jax.nn.softmax(jnp.stack(pooled)))
+    return jnp.stack(out)
+
+
+def vslash_probe_ref(qh, k, block_size: int = BLOCK_SIZE):
+    """Oracle for probes.vslash_probe: ``[H, BS, S]``."""
+    h, bs, d = qh.shape
+    _, seq, _ = k.shape
+    nb = seq // block_size
+    out = []
+    for hh in range(h):
+        s = (qh[hh] @ k[hh].T) / (d ** 0.5)
+        qpos = (nb - 1) * block_size + jnp.arange(bs)[:, None]
+        kpos = jnp.arange(seq)[None, :]
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        out.append(jax.nn.softmax(s, axis=-1))
+    return jnp.stack(out)
+
+
+def flex_probe_ref(q, k, block_size: int = BLOCK_SIZE):
+    """Oracle for probes.flex_probe: ``[H, NB, NB]``."""
+    h, seq, d = q.shape
+    nb = seq // block_size
+    out = []
+    for hh in range(h):
+        qp = jnp.mean(q[hh].reshape(nb, block_size, d), axis=1)
+        kp = jnp.mean(k[hh].reshape(nb, block_size, d), axis=1)
+        s = (qp @ kp.T) / (d ** 0.5)
+        i = jnp.arange(nb)[:, None]
+        j = jnp.arange(nb)[None, :]
+        s = jnp.where(j <= i, s, NEG_INF)
+        out.append(jax.nn.softmax(s, axis=-1))
+    return jnp.stack(out)
+
+
+def block_average_map_ref(q, k, block_size: int = BLOCK_SIZE):
+    """Full ``[NB, NB]`` block-averaged raw-score map (dense heads' Ã)."""
+    seq, d = q.shape
+    nb = seq // block_size
+    s = (q @ k.T) / (d ** 0.5)
+    cm = causal_mask(seq)
+    out = jnp.full((nb, nb), NEG_INF)
+    for i in range(nb):
+        for j in range(i + 1):
+            blk = s[i * block_size:(i + 1) * block_size,
+                    j * block_size:(j + 1) * block_size]
+            bm = cm[i * block_size:(i + 1) * block_size,
+                    j * block_size:(j + 1) * block_size]
+            n = jnp.sum(bm)
+            out = out.at[i, j].set(
+                jnp.sum(jnp.where(bm, blk, 0.0)) / jnp.maximum(n, 1))
+    return out

@@ -1,0 +1,139 @@
+"""L1 Pallas kernel: block-sparse causal flash attention with a gather budget.
+
+This is the paper's sparse attention kernel (Section 5.2 "Sparse Attention
+Computation"): a FlashAttention-2-style block online-softmax loop that
+
+  * visits, for every query row-block, only the kv-block indices supplied by
+    the L3 coordinator (``idx``/``valid``), and
+  * emits the block-averaged raw QK scores ``abar`` the paper calls
+    :math:`\\tilde A` — the input to "Construct Pivotal Pattern" (Alg. 2).
+    Skipped / unvisited blocks get ``-inf``.
+
+Block-skipping is *executed*, not simulated: valid slots form a prefix of
+each row (the rust ``BlockMask::pack`` invariant) and the inner loop is a
+``lax.while_loop`` over that prefix, so the compiled HLO runs exactly
+``cnt[i]`` block iterations per row-block — measured latency tracks the
+sparsity the coordinator achieves, which is what the paper's latency
+claims are about.
+
+Structure note (CPU-interpret specific): the kernel is a *single program*
+(``grid=()``) with an outer ``fori_loop`` over query row-blocks and
+``pl.ds`` dynamic-slice gathers for kv tiles.  A grid-per-row-block
+variant (the natural TPU mapping — see DESIGN.md §Hardware-Adaptation)
+materializes its full-K/V block inputs per grid step under interpret mode,
+which is memcpy-bound on CPU; the single-program form keeps K/V staged
+once per call while expressing the identical HBM→VMEM tile schedule.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the rust
+runtime executes it (numerics identical, verified against ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BLOCK_SIZE
+
+NEG_INF = float("-inf")
+
+
+def _sparse_attn_kernel(idx_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                        abar_ref, *, budget: int, block_size: int,
+                        head_dim: int, num_blocks: int, softscale: float):
+    bs, d = block_size, head_dim
+    abar_ref[...] = jnp.full((num_blocks, budget), NEG_INF, jnp.float32)
+
+    def row(qb, _):
+        q = pl.load(q_ref, (pl.ds(qb * bs, bs), slice(None)))  # [bs, d]
+        valid_row = pl.load(valid_ref, (pl.ds(qb, 1), slice(None)))  # [1, B]
+        idx_row = pl.load(idx_ref, (pl.ds(qb, 1), slice(None)))
+        # padded slots are a suffix: run exactly cnt block iterations
+        cnt = jnp.sum(valid_row > 0).astype(jnp.int32)
+
+        def body(carry):
+            j, m_i, l_i, acc = carry
+            kb = idx_row[0, j]
+            k = pl.load(k_ref, (pl.ds(kb * bs, bs), slice(None)))
+            v = pl.load(v_ref, (pl.ds(kb * bs, bs), slice(None)))
+            s = jnp.dot(q, k.T) * softscale  # [bs, bs]
+            qpos = qb * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+            kpos = kb * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+            mask = kpos <= qpos
+            nvalid = jnp.sum(mask)
+            # block-mean of raw scaled scores over causally-valid positions
+            abar = jnp.where(
+                nvalid > 0,
+                jnp.sum(jnp.where(mask, s, 0.0)) / jnp.maximum(nvalid, 1),
+                NEG_INF)
+            pl.store(abar_ref, (pl.ds(qb, 1), pl.ds(j, 1)),
+                     abar[None, None])
+
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(s), jnp.exp(s - safe_m[:, None]), 0.0)
+            alpha = jnp.where(jnp.isfinite(m_i), jnp.exp(m_i - safe_m),
+                              jnp.zeros_like(m_i))
+            l_new = l_i * alpha + jnp.sum(p, axis=1)
+            acc = acc * alpha[:, None] + jnp.dot(p, v)
+            return j + 1, m_new, l_new, acc
+
+        m0 = jnp.full((bs,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((bs,), jnp.float32)
+        acc0 = jnp.zeros((bs, d), jnp.float32)
+        _, _, l, acc = jax.lax.while_loop(
+            lambda c: c[0] < cnt, body, (jnp.int32(0), m0, l0, acc0))
+        o = acc / jnp.maximum(l, 1e-30)[:, None]
+        pl.store(o_ref, (pl.ds(qb * bs, bs), slice(None)), o)
+        return 0
+
+    jax.lax.fori_loop(0, num_blocks, row, 0)
+
+
+def sparse_attention(q, k, v, idx, valid, *, block_size: int = BLOCK_SIZE,
+                     interpret: bool = True):
+    """Block-sparse causal attention for a single head.
+
+    Args:
+      q, k, v: ``[S, D]`` float32.
+      idx: ``[NB, B]`` int32 — kv-block indices to visit per row-block
+        (values in ``[0, NB)``).
+      valid: ``[NB, B]`` float32 — 1.0 for live slots, 0.0 padding.  Live
+        slots MUST form a prefix of each row (``BlockMask::pack`` packs
+        them that way); suffix slots are never visited.
+
+    Returns:
+      ``(o [S, D], abar [NB, B])`` — attention output and block-averaged
+      raw QK scores (−inf for unvisited slots / fully-masked blocks).
+      Rows whose pattern visits nothing output zeros.
+    """
+    seq, head_dim = q.shape
+    nb, budget = idx.shape
+    assert seq % block_size == 0 and nb == seq // block_size
+    kernel = functools.partial(
+        _sparse_attn_kernel, budget=budget, block_size=block_size,
+        head_dim=head_dim, num_blocks=nb, softscale=1.0 / (head_dim ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((seq, head_dim), jnp.float32),
+            jax.ShapeDtypeStruct((nb, budget), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, valid, q, k, v)
+
+
+def dense_causal_indices(seq: int, block_size: int = BLOCK_SIZE):
+    """Full causal ``(idx, valid)`` at budget == NB (the dense pattern).
+
+    Row-block ``i`` visits blocks ``0..i`` (valid prefix) and pads the rest.
+    Used for the paper's dense "pivotal" heads and the FlashAttn baseline.
+    """
+    nb = seq // block_size
+    idx = jnp.tile(jnp.arange(nb, dtype=jnp.int32)[None, :], (nb, 1))
+    valid = (jnp.arange(nb)[None, :] <= jnp.arange(nb)[:, None]).astype(
+        jnp.float32)
+    return idx, valid

@@ -1,0 +1,246 @@
+"""L2: the JAX model — a tiny Llama-style transformer decomposed into the
+weight-as-input stage functions that aot.py lowers to HLO artifacts.
+
+Design (see DESIGN.md): every stage takes its *weights as runtime inputs*,
+so a single compiled executable serves all layers of a model; the rust
+coordinator owns the weight store and feeds the right layer's tensors per
+call.  Stages are shape-specialized per sequence bucket (and per budget
+bucket for attention), which is the only compile-time specialization.
+
+Stages
+------
+  embed       tokens[S] i32, table[V,Dm]                        -> x[S,Dm]
+  qkv         x[S,Dm], ln_w, wq, wk, wv                         -> q[H,S,D] (roped),
+                                                                   k[Hkv,S,D] (roped), v[Hkv,S,D]
+  attention   (L1 kernel, per head)                             -> o[S,D], abar[NB,B]
+  post_attn   attn_out[H,S,D], resid[S,Dm], wo, ln2_w, w_gate,
+              w_up, w_down                                      -> x[S,Dm]
+  lm_head     x[S,Dm], ln_w, w_out                              -> logits[S,V]
+  decode_step x[1,Dm], layer weights, kcache, vcache, pos       -> x[1,Dm], k_new, v_new
+
+``full_forward`` chains the stages in pure JAX (dense attention) — the
+training forward and the oracle the integration tests compare the staged
+pipeline against.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref as kref
+from .kernels.sparse_attn import dense_causal_indices, sparse_attention
+
+
+# --------------------------------------------------------------------------
+# Primitives
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope_tables(seq: int, head_dim: int, theta: float = 10000.0):
+    """Standard RoPE sin/cos tables, computed in-graph from iota."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]  # [S, 1]
+    ang = pos * freqs[None, :]  # [S, half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., S, D] with D split into two halves (rotate-half convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def silu_mlp(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# --------------------------------------------------------------------------
+# Stage functions (each lowered to one artifact by aot.py)
+# --------------------------------------------------------------------------
+
+def stage_embed(tokens, table):
+    return jnp.take(table, tokens, axis=0)
+
+
+def stage_qkv(cfg: ModelConfig):
+    def fn(x, ln_w, wq, wk, wv):
+        seq = x.shape[0]
+        xn = rmsnorm(x, ln_w, cfg.norm_eps)
+        q = (xn @ wq).reshape(seq, cfg.num_heads, cfg.head_dim)
+        k = (xn @ wk).reshape(seq, cfg.num_kv_heads, cfg.head_dim)
+        v = (xn @ wv).reshape(seq, cfg.num_kv_heads, cfg.head_dim)
+        sin, cos = rope_tables(seq, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q.transpose(1, 0, 2), sin, cos)  # [H, S, D]
+        k = apply_rope(k.transpose(1, 0, 2), sin, cos)  # [Hkv, S, D]
+        v = v.transpose(1, 0, 2)
+        return q, k, v
+    return fn
+
+
+def stage_post_attn(cfg: ModelConfig):
+    def fn(attn_out, resid, wo, ln2_w, w_gate, w_up, w_down):
+        seq = resid.shape[0]
+        merged = attn_out.transpose(1, 0, 2).reshape(seq, cfg.q_dim)
+        x = resid + merged @ wo
+        x = x + silu_mlp(rmsnorm(x, ln2_w, cfg.norm_eps), w_gate, w_up, w_down)
+        return x
+    return fn
+
+
+def stage_lm_head(cfg: ModelConfig):
+    def fn(x, ln_w, w_out):
+        return rmsnorm(x, ln_w, cfg.norm_eps) @ w_out
+    return fn
+
+
+def stage_decode_step(cfg: ModelConfig, max_seq: int):
+    """Fused single-token transformer layer over a KV cache.
+
+    Decode is not the paper's contribution (all baselines fall back to
+    dense attention after prefill), so this is plain masked jnp attention.
+    ``pos`` is the index of the new token; the cache rows ``[0, pos)`` are
+    live.  Returns the layer output and the roped k / v rows for the rust
+    side to write into its host cache at row ``pos``.
+    """
+    def fn(x, ln_w, wq, wk, wv, wo, ln2_w, w_gate, w_up, w_down,
+           kcache, vcache, pos):
+        xn = rmsnorm(x, ln_w, cfg.norm_eps)  # [1, Dm]
+        q = (xn @ wq).reshape(cfg.num_heads, cfg.head_dim)
+        k = (xn @ wk).reshape(cfg.num_kv_heads, cfg.head_dim)
+        v = (xn @ wv).reshape(cfg.num_kv_heads, cfg.head_dim)
+        half = cfg.head_dim // 2
+        freqs = 1.0 / (cfg.rope_theta ** (
+            jnp.arange(half, dtype=jnp.float32) / half))
+        ang = pos.astype(jnp.float32) * freqs
+        sin, cos = jnp.sin(ang), jnp.cos(ang)
+
+        def rope1(t):
+            t1, t2 = t[..., :half], t[..., half:]
+            return jnp.concatenate([t1 * cos - t2 * sin, t2 * cos + t1 * sin], -1)
+
+        q, k_new = rope1(q), rope1(k)
+        # repeat kv heads to H query heads
+        kc = jnp.repeat(kcache, cfg.group, axis=0)  # [H, Smax, D]
+        vc = jnp.repeat(vcache, cfg.group, axis=0)
+        kn = jnp.repeat(k_new, cfg.group, axis=0)   # [H, D]
+        vn = jnp.repeat(v, cfg.group, axis=0)
+        scale = 1.0 / (cfg.head_dim ** 0.5)
+        s_cache = jnp.einsum("hd,hsd->hs", q, kc) * scale  # [H, Smax]
+        live = jnp.arange(max_seq)[None, :] < pos
+        s_cache = jnp.where(live, s_cache, -jnp.inf)
+        s_self = jnp.sum(q * kn, axis=-1, keepdims=True) * scale  # [H, 1]
+        s = jnp.concatenate([s_cache, s_self], axis=1)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hs,hsd->hd", p[:, :max_seq], vc) + p[:, max_seq:] * vn
+        x = x + o.reshape(1, cfg.q_dim) @ wo
+        x = x + silu_mlp(rmsnorm(x, ln2_w, cfg.norm_eps), w_gate, w_up, w_down)
+        return x, k_new, v
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Whole-model forward (training + oracle for the staged pipeline)
+# --------------------------------------------------------------------------
+
+class LayerParams(NamedTuple):
+    ln1: jax.Array
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+    ln2: jax.Array
+    w_gate: jax.Array
+    w_up: jax.Array
+    w_down: jax.Array
+
+
+class Params(NamedTuple):
+    embed: jax.Array
+    layers: list  # [LayerParams]
+    ln_f: jax.Array
+    w_out: jax.Array
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    def dense(key, fan_in, shape):
+        return jax.random.normal(key, shape, jnp.float32) / (fan_in ** 0.5)
+
+    keys = jax.random.split(key, 3 + 9 * cfg.num_layers)
+    layers = []
+    for i in range(cfg.num_layers):
+        k = keys[3 + 9 * i: 3 + 9 * (i + 1)]
+        layers.append(LayerParams(
+            ln1=jnp.ones(cfg.hidden),
+            wq=dense(k[0], cfg.hidden, (cfg.hidden, cfg.q_dim)),
+            wk=dense(k[1], cfg.hidden, (cfg.hidden, cfg.kv_dim)),
+            wv=dense(k[2], cfg.hidden, (cfg.hidden, cfg.kv_dim)),
+            wo=dense(k[3], cfg.q_dim, (cfg.q_dim, cfg.hidden)),
+            ln2=jnp.ones(cfg.hidden),
+            w_gate=dense(k[4], cfg.hidden, (cfg.hidden, cfg.ffn)),
+            w_up=dense(k[5], cfg.hidden, (cfg.hidden, cfg.ffn)),
+            w_down=dense(k[6], cfg.ffn, (cfg.ffn, cfg.hidden)),
+        ))
+    return Params(
+        embed=0.02 * jax.random.normal(keys[0], (cfg.vocab, cfg.hidden)),
+        layers=layers,
+        ln_f=jnp.ones(cfg.hidden),
+        w_out=dense(keys[1], cfg.hidden, (cfg.hidden, cfg.vocab)),
+    )
+
+
+def attention_dense(cfg: ModelConfig, q, k, v):
+    """Dense causal attention used by the training forward: [H,S,D] inputs."""
+    kq = jnp.repeat(k, cfg.group, axis=0)
+    vq = jnp.repeat(v, cfg.group, axis=0)
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q, kq) * scale
+    seq = q.shape[1]
+    mask = kref.causal_mask(seq)
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vq)
+
+
+def full_forward(cfg: ModelConfig, params: Params, tokens):
+    """Dense forward over a token batch element: tokens [S] -> logits [S,V]."""
+    x = stage_embed(tokens, params.embed)
+    qkv = stage_qkv(cfg)
+    post = stage_post_attn(cfg)
+    for lp in params.layers:
+        q, k, v = qkv(x, lp.ln1, lp.wq, lp.wk, lp.wv)
+        o = attention_dense(cfg, q, k, v)
+        x = post(o, x, lp.wo, lp.ln2, lp.w_gate, lp.w_up, lp.w_down)
+    return stage_lm_head(cfg)(x, params.ln_f, params.w_out)
+
+
+def staged_forward_sparse(cfg: ModelConfig, params: Params, tokens,
+                          idx, valid, interpret: bool = True):
+    """Forward through the *staged* pipeline with the L1 sparse kernel using
+    a shared (idx, valid) pattern for every head — a python-side mirror of
+    what the rust coordinator executes, used by integration tests."""
+    x = stage_embed(tokens, params.embed)
+    qkv = stage_qkv(cfg)
+    post = stage_post_attn(cfg)
+    for lp in params.layers:
+        q, k, v = qkv(x, lp.ln1, lp.wq, lp.wk, lp.wv)
+        kq = jnp.repeat(k, cfg.group, axis=0)
+        vq = jnp.repeat(v, cfg.group, axis=0)
+        outs = []
+        for h in range(cfg.num_heads):
+            o, _ = sparse_attention(q[h], kq[h], vq[h], idx, valid,
+                                    interpret=interpret)
+            outs.append(o)
+        x = post(jnp.stack(outs), x, lp.wo, lp.ln2, lp.w_gate, lp.w_up,
+                 lp.w_down)
+    return stage_lm_head(cfg)(x, params.ln_f, params.w_out)
+
+
+def dense_pattern(seq: int):
+    return dense_causal_indices(seq)

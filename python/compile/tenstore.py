@@ -1,0 +1,57 @@
+"""Writer for the ``tenstore`` weight archive consumed by the rust runtime.
+
+Format (little-endian):
+
+    8 bytes   magic ``b"TENSTOR1"``
+    8 bytes   u64 header length
+    N bytes   JSON header: {"tensors": {name: {dtype, shape, offset, nbytes}}}
+    payload   raw tensor bytes, offsets relative to payload start
+
+Only float32 is stored (the whole stack runs f32 on the CPU backend — see
+DESIGN.md §Hardware-Adaptation for the bf16 story on real hardware).
+The rust-side reader lives in ``rust/src/substrate/tenstore.rs``; the two
+are round-trip tested via golden files emitted by aot.py.
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"TENSTOR1"
+
+
+def write(path: str, tensors: dict) -> None:
+    """Write ``{name: np.ndarray}`` to ``path``."""
+    header = {"tensors": {}}
+    payload = bytearray()
+    for name, arr in sorted(tensors.items()):
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        header["tensors"][name] = {
+            "dtype": "f32",
+            "shape": list(arr.shape),
+            "offset": len(payload),
+            "nbytes": arr.nbytes,
+        }
+        payload.extend(arr.tobytes())
+    hdr = json.dumps(header, sort_keys=True).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(hdr)))
+        f.write(hdr)
+        f.write(bytes(payload))
+
+
+def read(path: str) -> dict:
+    """Read back (python-side verification / tests)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    (hlen,) = struct.unpack("<Q", data[8:16])
+    header = json.loads(data[16:16 + hlen])
+    base = 16 + hlen
+    out = {}
+    for name, meta in header["tensors"].items():
+        raw = data[base + meta["offset"]: base + meta["offset"] + meta["nbytes"]]
+        out[name] = np.frombuffer(raw, dtype=np.float32).reshape(meta["shape"])
+    return out

@@ -1,0 +1,122 @@
+"""Build-time trainer for the two tiny models.
+
+Runs once under ``make artifacts`` (skipped when ``artifacts/weights-*.bin``
+already exist).  AdamW + cosine schedule, next-byte cross-entropy on the
+synthetic corpus.  The loss curve is appended to ``artifacts/train_log.txt``
+and copied into EXPERIMENTS.md.
+
+Usage: python -m compile.train [--model NAME] [--steps N] [--out DIR]
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, tenstore
+from .configs import CONFIGS, ModelConfig
+from .model import Params, full_forward, init_params
+
+TRAIN_DEFAULTS = {
+    # name: (phases [(seq, batch, steps)], lr, seed).  The bulk of training
+    # runs at short context (cheap on 1 CPU core); a final long-context
+    # phase teaches the RoPE range the evaluations use.
+    "sim-llama": ([(512, 4, 240), (2048, 1, 40)], 3e-4, 1),
+    "sim-qwen": ([(512, 4, 180), (1024, 2, 30)], 3e-4, 2),
+}
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens):
+    """tokens: [B, S+1] — next-byte CE averaged over the batch."""
+    def one(row):
+        logits = full_forward(cfg, params, row[:-1])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, row[1:, None], axis=-1))
+    return jnp.mean(jax.vmap(one)(tokens))
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return zeros, jax.tree.map(jnp.zeros_like, params)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2, 3))
+def train_step(cfg, params, m, v, tokens, lr, step):
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens))(params)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    t = step + 1
+    mhat = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p),
+        params, mhat, vhat)
+    return params, m, v, loss
+
+
+def flatten_params(cfg: ModelConfig, params: Params) -> dict:
+    out = {"embed": params.embed, "ln_f": params.ln_f, "w_out": params.w_out}
+    for i, lp in enumerate(params.layers):
+        for field in lp._fields:
+            out[f"layer{i}.{field}"] = getattr(lp, field)
+    return out
+
+
+def train(cfg: ModelConfig, steps_override: int, out_dir: str, log) -> dict:
+    phases, lr0, seed = TRAIN_DEFAULTS[cfg.name]
+    if steps_override:
+        phases = [(phases[0][0], phases[0][1], steps_override)]
+    total = sum(p[2] for p in phases)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    m, v = adamw_init(params)
+    t0 = time.time()
+    step = 0
+    for pi, (seq, batch, steps) in enumerate(phases):
+        for rows in corpus.batches(seed * 1000 + 7 + pi, seq, batch, steps):
+            warm = min(1.0, (step + 1) / 20)
+            lr = lr0 * warm * 0.5 * (1 + np.cos(np.pi * step / total))
+            params, m, v, loss = train_step(
+                cfg, params, m, v, jnp.asarray(rows), jnp.float32(lr),
+                jnp.int32(step))
+            if step % 10 == 0 or step == total - 1:
+                msg = (f"[{cfg.name}] step {step:4d}/{total} seq {seq} "
+                       f"loss {float(loss):.4f} lr {lr:.2e} "
+                       f"({time.time() - t0:.0f}s)")
+                print(msg, flush=True)
+                log.write(msg + "\n")
+                log.flush()
+            step += 1
+    return flatten_params(cfg, params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="all")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = list(CONFIGS) if args.model == "all" else [args.model]
+    with open(os.path.join(args.out, "train_log.txt"), "a") as log:
+        for name in names:
+            cfg = CONFIGS[name]
+            path = os.path.join(args.out, f"weights-{name}.bin")
+            if os.path.exists(path):
+                print(f"{path} exists, skipping")
+                continue
+            tensors = train(cfg, args.steps, args.out, log)
+            tenstore.write(path, {k: np.asarray(v)
+                                  for k, v in tensors.items()})
+            print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

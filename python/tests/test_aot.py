@@ -1,0 +1,51 @@
+"""aot.py manifest/emitter logic (no heavy lowering — structure only)."""
+
+import json
+import os
+
+import numpy as np
+
+from compile.aot import Emitter, spec
+from compile.configs import SIM_LLAMA
+
+
+def test_emitter_manifest_records_params(tmp_path):
+    em = Emitter(str(tmp_path), force=False)
+    import jax.numpy as jnp
+
+    def fn(x, y):
+        return (x @ y,)
+
+    em.emit("t_fn", fn, [("x", spec((2, 3))), ("y", spec((3, 4)))],
+            [spec((2, 4))], {"model": "m", "stage": "s", "seq": 2})
+    em.write_manifest()
+    man = json.load(open(tmp_path / "manifest.json"))
+    (a,) = man["artifacts"]
+    assert a["name"] == "t_fn"
+    assert a["params"][0] == {"name": "x", "dtype": "f32", "shape": [2, 3]}
+    assert a["outputs"] == [{"dtype": "f32", "shape": [2, 4]}]
+    assert os.path.exists(tmp_path / "t_fn.hlo.txt")
+    text = open(tmp_path / "t_fn.hlo.txt").read()
+    assert "HloModule" in text
+
+
+def test_emitter_idempotent(tmp_path):
+    em = Emitter(str(tmp_path), force=False)
+
+    def fn(x):
+        return (x + 1.0,)
+
+    em.emit("t_id", fn, [("x", spec((2,)))], [spec((2,))],
+            {"model": "m", "stage": "s", "seq": 2})
+    mtime = os.path.getmtime(tmp_path / "t_id.hlo.txt")
+    em2 = Emitter(str(tmp_path), force=False)
+    em2.emit("t_id", fn, [("x", spec((2,)))], [spec((2,))],
+             {"model": "m", "stage": "s", "seq": 2})
+    assert os.path.getmtime(tmp_path / "t_id.hlo.txt") == mtime
+
+
+def test_budget_manifest_consistency():
+    for s in SIM_LLAMA.seq_buckets:
+        budgets = SIM_LLAMA.budgets(s)
+        nb = SIM_LLAMA.num_blocks(s)
+        assert budgets[-1] == nb and all(b <= nb for b in budgets)

@@ -1,0 +1,38 @@
+"""Synthetic corpus generator invariants."""
+
+import numpy as np
+
+from compile.corpus import Corpus, batches
+
+
+def test_deterministic():
+    a = Corpus(7).tokens(2000)
+    b = Corpus(7).tokens(2000)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_token_range():
+    t = Corpus(1).tokens(5000)
+    assert t.dtype == np.int32
+    assert t.min() >= 0 and t.max() < 256  # raw bytes in a 512 vocab
+
+
+def test_documents_contain_retrieval_structure():
+    doc = Corpus(3).document(4000)
+    assert "<KEY:" in doc and "<GET:" in doc
+    # every GET's name was defined by a KEY earlier, and the value follows
+    import re
+    keys = dict(re.findall(r"<KEY:([a-z]+\d+)=(\d{6})>", doc))
+    gets = re.findall(r"<GET:([a-z]+\d+)>(\d{6})", doc)
+    assert gets, "no queries emitted"
+    for name, val in gets:
+        assert keys.get(name) == val
+
+
+def test_batches_shapes_and_coverage():
+    rows = list(batches(0, seq=64, batch=3, steps=4))
+    assert len(rows) == 4
+    for r in rows:
+        assert r.shape == (3, 65)
+    # batches must not repeat data between steps
+    assert not np.array_equal(rows[0], rows[1])

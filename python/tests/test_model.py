@@ -1,0 +1,150 @@
+"""L2 stage functions: staged pipeline == monolithic forward, decode ==
+prefill, GQA handling, RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import SIM_LLAMA, SIM_QWEN, ModelConfig
+from compile.kernels.sparse_attn import dense_causal_indices
+
+TINY = ModelConfig(name="tiny-test", num_layers=2, num_heads=4,
+                   num_kv_heads=2, head_dim=16, hidden=64, ffn=128,
+                   vocab=512, max_seq=256, seq_buckets=(128, 256))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, jax.random.PRNGKey(0))
+
+
+def toks(rng, seq):
+    return jnp.asarray(rng.integers(0, 256, size=seq), jnp.int32)
+
+
+def test_staged_equals_full_forward(params):
+    """Running embed->qkv->dense attention->post_attn->lm_head through the
+    stage functions must equal the monolithic training forward."""
+    rng = np.random.default_rng(0)
+    tokens = toks(rng, 128)
+    want = M.full_forward(TINY, params, tokens)
+
+    x = M.stage_embed(tokens, params.embed)
+    qkv, post = M.stage_qkv(TINY), M.stage_post_attn(TINY)
+    for lp in params.layers:
+        q, k, v = qkv(x, lp.ln1, lp.wq, lp.wk, lp.wv)
+        o = M.attention_dense(TINY, q, k, v)
+        x = post(o, x, lp.wo, lp.ln2, lp.w_gate, lp.w_up, lp.w_down)
+    got = M.stage_lm_head(TINY)(x, params.ln_f, params.w_out)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_sparse_staged_dense_budget_equals_full(params):
+    """The L1 kernel at the dense pattern inside the staged pipeline equals
+    the monolithic dense forward — the end-to-end numerics contract the
+    rust coordinator relies on."""
+    rng = np.random.default_rng(1)
+    tokens = toks(rng, 128)
+    idx, valid = dense_causal_indices(128)
+    got = M.staged_forward_sparse(TINY, params, tokens, idx, valid)
+    want = M.full_forward(TINY, params, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_decode_step_matches_prefill(params):
+    """Fused decode over a KV cache reproduces the prefill logits for the
+    final position — validates cache layout, GQA repeat and RoPE-at-pos."""
+    rng = np.random.default_rng(2)
+    seq = 64
+    max_seq = TINY.max_seq
+    tokens = toks(rng, seq)
+    want_logits = M.full_forward(TINY, params, tokens)[-1]
+
+    # prefill seq-1 tokens through the stage pipeline collecting the cache
+    x = M.stage_embed(tokens[:-1], params.embed)
+    qkv, post = M.stage_qkv(TINY), M.stage_post_attn(TINY)
+    caches = []
+    for lp in params.layers:
+        q, k, v = qkv(x, lp.ln1, lp.wq, lp.wk, lp.wv)
+        kc = jnp.zeros((TINY.num_kv_heads, max_seq, TINY.head_dim))
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :seq - 1].set(k)
+        vc = vc.at[:, :seq - 1].set(v)
+        caches.append((kc, vc))
+        o = M.attention_dense(TINY, q, k, v)
+        x = post(o, x, lp.wo, lp.ln2, lp.w_gate, lp.w_up, lp.w_down)
+
+    # decode the final token
+    step = M.stage_decode_step(TINY, max_seq)
+    x1 = M.stage_embed(tokens[-1:], params.embed)
+    pos = jnp.int32(seq - 1)
+    for lp, (kc, vc) in zip(params.layers, caches):
+        x1, _, _ = step(x1, lp.ln1, lp.wq, lp.wk, lp.wv, lp.wo, lp.ln2,
+                        lp.w_gate, lp.w_up, lp.w_down, kc, vc, pos)
+    got = M.stage_lm_head(TINY)(x1, params.ln_f, params.w_out)[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_logits),
+                               atol=2e-3)
+
+
+def test_decode_returns_cache_rows(params):
+    """k_new/v_new from decode equal the qkv-stage rows at that position."""
+    rng = np.random.default_rng(3)
+    seq = 32
+    tokens = toks(rng, seq)
+    x = M.stage_embed(tokens, params.embed)
+    lp = params.layers[0]
+    q, k, v = M.stage_qkv(TINY)(x, lp.ln1, lp.wq, lp.wk, lp.wv)
+
+    step = M.stage_decode_step(TINY, TINY.max_seq)
+    xlast = M.stage_embed(tokens[seq - 1:seq], params.embed)
+    kc = jnp.zeros((TINY.num_kv_heads, TINY.max_seq, TINY.head_dim))
+    kc = kc.at[:, :seq - 1].set(k[:, :seq - 1])
+    vc = jnp.zeros_like(kc).at[:, :seq - 1].set(v[:, :seq - 1])
+    _, k_new, v_new = step(xlast, lp.ln1, lp.wq, lp.wk, lp.wv, lp.wo,
+                           lp.ln2, lp.w_gate, lp.w_up, lp.w_down, kc, vc,
+                           jnp.int32(seq - 1))
+    np.testing.assert_allclose(np.asarray(k_new), np.asarray(k[:, -1]),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v_new), np.asarray(v[:, -1]),
+                               atol=1e-4)
+
+
+def test_rope_relative_property():
+    """RoPE: <rope(q,m), rope(k,n)> depends only on m-n (shift both by s)."""
+    d = 16
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    sin, cos = M.rope_tables(64, d)
+
+    def at(x, pos):
+        return M.apply_rope(x, sin[pos:pos + 1], cos[pos:pos + 1])
+
+    dot1 = float(jnp.sum(at(q, 10) * at(k, 3)))
+    dot2 = float(jnp.sum(at(q, 30) * at(k, 23)))
+    assert abs(dot1 - dot2) < 1e-4
+
+
+@pytest.mark.parametrize("cfg", [SIM_LLAMA, SIM_QWEN], ids=lambda c: c.name)
+def test_config_shapes(cfg):
+    assert cfg.q_dim == cfg.num_heads * cfg.head_dim
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    for s in cfg.seq_buckets:
+        assert s % 64 == 0
+        budgets = cfg.budgets(s)
+        assert budgets[-1] == cfg.num_blocks(s)
+        assert all(b1 < b2 for b1, b2 in zip(budgets, budgets[1:]))
+
+
+def test_gqa_repeat_matches_mha_when_kv_equal():
+    """With num_kv_heads == num_heads, GQA path == MHA path."""
+    cfg = ModelConfig(name="t", num_layers=1, num_heads=2, num_kv_heads=2,
+                      head_dim=8, hidden=16, ffn=32, vocab=512, max_seq=64,
+                      seq_buckets=(64,))
+    p = M.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(5)
+    tokens = toks(rng, 64)
+    logits = M.full_forward(cfg, p, tokens)
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,106 @@
+"""Probe kernels vs. oracles + distribution invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import BLOCK_SIZE
+from compile.kernels import ref
+from compile.kernels.probes import flex_probe, pattern_probe, vslash_probe
+
+ATOL = 2e-5
+
+
+def rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@pytest.mark.parametrize("h,seq,d", [(2, 128, 32), (4, 256, 32), (3, 192, 16)])
+def test_pattern_probe_matches_ref(h, seq, d):
+    rng = np.random.default_rng(h * seq)
+    qh, k = rand(rng, (h, BLOCK_SIZE, d)), rand(rng, (h, seq, d))
+    got = jax.jit(pattern_probe)(qh, k)
+    want = ref.pattern_probe_ref(qh, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_pattern_probe_is_distribution():
+    rng = np.random.default_rng(0)
+    qh, k = rand(rng, (4, BLOCK_SIZE, 32)), rand(rng, (4, 256, 32))
+    a = np.asarray(jax.jit(pattern_probe)(qh, k))
+    assert (a >= 0).all()
+    np.testing.assert_allclose(a.sum(-1), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("h,seq", [(2, 128), (4, 256)])
+def test_vslash_probe_matches_ref(h, seq):
+    rng = np.random.default_rng(seq)
+    qh, k = rand(rng, (h, BLOCK_SIZE, 32)), rand(rng, (h, seq, 32))
+    got = jax.jit(vslash_probe)(qh, k)
+    want = ref.vslash_probe_ref(qh, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_vslash_probe_causal_rows():
+    """Row r of the last block attends to exactly seq-BS+r+1 positions."""
+    rng = np.random.default_rng(1)
+    seq = 192
+    qh, k = rand(rng, (1, BLOCK_SIZE, 32)), rand(rng, (1, seq, 32))
+    a = np.asarray(jax.jit(vslash_probe)(qh, k))[0]
+    for r in range(BLOCK_SIZE):
+        live = seq - BLOCK_SIZE + r + 1
+        assert (a[r, :live] > 0).all()
+        np.testing.assert_allclose(a[r, live:], 0.0, atol=1e-8)
+        np.testing.assert_allclose(a[r].sum(), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("h,seq", [(2, 128), (4, 256)])
+def test_flex_probe_matches_ref(h, seq):
+    rng = np.random.default_rng(seq + 1)
+    q, k = rand(rng, (h, seq, 32)), rand(rng, (h, seq, 32))
+    got = jax.jit(flex_probe)(q, k)
+    want = ref.flex_probe_ref(q, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_flex_probe_reproduces_pooling_failure_modes():
+    """Section 3 of the paper: pooling mis-estimates block importance.
+
+    Construct the paper's token-alignment counterexample at block scale:
+    Q rows/K rows arranged so pool(Q)·pool(K) is nonzero while every
+    token-level score inside the block is ~zero relative to a control
+    block.  The flex estimator must rank the control block wrong vs. the
+    exact block average — the measurable inaccuracy SharePrefill avoids."""
+    bs = BLOCK_SIZE
+    seq = 2 * bs
+    d = 4
+    q = np.zeros((seq, d), np.float32)
+    k = np.zeros((seq, d), np.float32)
+    # block 0 of K: mean is large but each token orthogonal to each q token
+    # (alternating +e0/-e0 in q, all e1 in k-block0 -> token scores 0)
+    q[bs:, 0] = np.tile([1.0, -1.0], bs // 2)   # row-block 1 queries
+    k[:bs, 1] = 1.0                              # k block 0
+    # block 1 of K aligned with q tokens -> real attention mass
+    k[bs:, 0] = np.tile([1.0, -1.0], bs // 2)
+    qj, kj = jnp.asarray(q[None]), jnp.asarray(k[None])
+    est = np.asarray(jax.jit(flex_probe)(qj, kj))[0]       # [2, 2]
+    exact = np.asarray(ref.block_average_map_ref(qj[0], kj[0]))
+    # exact: for row-block 1, block 1 (diag, aligned) carries the mass
+    assert exact[1, 1] > exact[1, 0]
+    # pooled estimator collapses the +1/-1 structure: pool(q) ~ 0 so the
+    # aligned block's advantage is lost (scores ~equal) — the failure mode.
+    assert abs(est[1, 1] - est[1, 0]) < 0.05
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), h=st.integers(1, 4),
+       seq=st.sampled_from([128, 192, 256]))
+def test_hypothesis_probe_distributions(seed, h, seq):
+    rng = np.random.default_rng(seed)
+    qh, k = rand(rng, (h, BLOCK_SIZE, 32)), rand(rng, (h, seq, 32))
+    a = np.asarray(jax.jit(pattern_probe)(qh, k))
+    assert a.shape == (h, seq // BLOCK_SIZE)
+    assert (a >= 0).all()
+    np.testing.assert_allclose(a.sum(-1), 1.0, atol=1e-5)

@@ -1,0 +1,58 @@
+"""tenstore round-trip + format invariants (the rust reader mirrors these)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import tenstore
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "t.bin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.c": np.ones((2, 2, 2), np.float32),
+        "scalarish": np.array([3.5], np.float32),
+    }
+    tenstore.write(p, tensors)
+    back = tenstore.read(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_header_layout(tmp_path):
+    p = str(tmp_path / "t.bin")
+    tenstore.write(p, {"x": np.zeros((4,), np.float32)})
+    raw = open(p, "rb").read()
+    assert raw[:8] == b"TENSTOR1"
+    (hlen,) = struct.unpack("<Q", raw[8:16])
+    header = raw[16:16 + hlen]
+    assert b'"x"' in header and b'"f32"' in header
+    assert len(raw) == 16 + hlen + 16  # 4 f32 payload
+
+
+def test_non_f32_is_coerced(tmp_path):
+    p = str(tmp_path / "t.bin")
+    tenstore.write(p, {"i": np.arange(4, dtype=np.int64)})
+    back = tenstore.read(p)
+    assert back["i"].dtype == np.float32
+    np.testing.assert_array_equal(back["i"], [0, 1, 2, 3])
+
+
+def test_deterministic_bytes(tmp_path):
+    """Same tensors -> byte-identical file (sorted names, sorted header)."""
+    a = {"z": np.ones(3, np.float32), "a": np.zeros(2, np.float32)}
+    p1, p2 = str(tmp_path / "1.bin"), str(tmp_path / "2.bin")
+    tenstore.write(p1, a)
+    tenstore.write(p2, dict(reversed(list(a.items()))))
+    assert open(p1, "rb").read() == open(p2, "rb").read()
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(b"NOTMAGIC" + b"\0" * 16)
+    with pytest.raises(AssertionError):
+        tenstore.read(p)

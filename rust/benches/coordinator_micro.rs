@@ -1,0 +1,72 @@
+//! L3 coordinator micro-bench: pattern-engine costs that must never rival
+//! the attention compute — vslash search, pivotal construction, packing,
+//! JS decisions, KV allocator churn, clustering.
+
+use shareprefill::attention::{construct_pivotal, decide_pattern,
+                              search_vslash, PivotalDict};
+use shareprefill::bench::Bench;
+use shareprefill::clustering::cluster_heads;
+use shareprefill::serving::kvcache::KvAllocator;
+use shareprefill::util::rng::Rng;
+use shareprefill::BLOCK_SIZE;
+
+fn main() {
+    let mut b = Bench::new("coordinator micro").with_iters(2, 5);
+    let mut rng = Rng::new(1);
+    let seq = 4096;
+    let nb = seq / BLOCK_SIZE;
+    let bs = BLOCK_SIZE;
+
+    let amap: Vec<f32> = (0..bs * seq).map(|_| rng.f32()).collect();
+    b.case("vslash_search @4096", || {
+        std::hint::black_box(search_vslash(&amap, bs, seq, 0.65));
+        1
+    });
+
+    let abar: Vec<f32> = (0..nb * nb).map(|_| rng.normal() as f32).collect();
+    b.case("pivotal_construct @64x64", || {
+        std::hint::black_box(construct_pivotal(&abar, nb, 0.65, (0, 0)));
+        1
+    });
+
+    let mask = construct_pivotal(&abar, nb, 0.65, (0, 0)).mask;
+    b.case("pack @64x64", || {
+        std::hint::black_box(mask.pack(nb / 2));
+        nb
+    });
+
+    let ahat: Vec<f32> = {
+        let mut v: Vec<f32> = (0..nb).map(|_| rng.f32() + 0.01).collect();
+        let s: f32 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    };
+    let dict = PivotalDict::new();
+    b.case("decide_pattern x48", || {
+        for _ in 0..48 {
+            std::hint::black_box(decide_pattern(&ahat, Some(0), &dict,
+                                                0.3, 0.2));
+        }
+        48
+    });
+
+    b.case("kv alloc/release x1000", || {
+        let mut a = KvAllocator::new(4096);
+        for _ in 0..1000 {
+            let blk = a.alloc(16).unwrap();
+            a.release(&blk).unwrap();
+        }
+        1000
+    });
+
+    let maps: Vec<Vec<f32>> = (0..48)
+        .map(|_| (0..nb * nb).map(|_| rng.normal() as f32).collect())
+        .collect();
+    b.case("offline clustering 48 heads", || {
+        std::hint::black_box(cluster_heads("m", 6, 8, &maps, nb, 16, 64,
+                                           0.6, 5));
+        48
+    });
+
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,26 @@
+//! Figure 1 bench: latency side of the accuracy/latency tradeoff (the
+//! accuracy side comes from `--example tradeoff`).
+
+use shareprefill::bench::Bench;
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::workloads::tasks::latency_prompt;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let ctx = if std::env::var("BENCH_FAST").is_ok() { 512 } else { 1024 };
+    let mut b = Bench::new(&format!("fig1: per-method latency @ {ctx}"))
+        .with_iters(1, 2);
+    for model in ["sim-llama", "sim-qwen"] {
+        for kind in MethodKind::all() {
+            let mut engine = build_engine(&registry, &cfg, model, kind)?;
+            let prompt = latency_prompt(ctx);
+            b.case(&format!("{model}/{}", kind.name()), || {
+                engine.prefill(&prompt).unwrap().real_len
+            });
+        }
+    }
+    println!("\n{}", b.report());
+    Ok(())
+}

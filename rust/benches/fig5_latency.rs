@@ -1,0 +1,28 @@
+//! Figure 5 bench: prefill latency vs. context length per method.
+//! `cargo bench --bench fig5_latency` (BENCH_FAST=1 for a quick pass).
+
+use shareprefill::bench::Bench;
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::workloads::tasks::latency_prompt;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let registry = open_registry(&cfg)?;
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let ctxs: &[usize] = if fast { &[512, 1024] } else { &[512, 1024, 2048] };
+    let mut b = Bench::new("fig5: prefill latency (sim-llama)")
+        .with_iters(1, if fast { 1 } else { 3 });
+    for kind in MethodKind::all() {
+        let mut engine = build_engine(&registry, &cfg, "sim-llama", kind)?;
+        for &ctx in ctxs {
+            let prompt = latency_prompt(ctx);
+            b.case(&format!("{}/{}", kind.name(), ctx), || {
+                let pre = engine.prefill(&prompt).unwrap();
+                pre.real_len
+            });
+        }
+    }
+    println!("\n{}", b.report());
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! L1 kernel micro-bench: budgeted attention artifact cost vs. budget —
+//! verifies executed cost tracks the block budget (the §6.1 speedup
+//! mechanism) and measures probe overhead.
+
+use shareprefill::attention::BlockMask;
+use shareprefill::bench::Bench;
+use shareprefill::config::Config;
+use shareprefill::eval::open_registry;
+use shareprefill::runtime::Tensor;
+use shareprefill::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let registry = open_registry(&Config::default())?;
+    let spec = registry.model("sim-llama")?.clone();
+    let seq = if std::env::var("BENCH_FAST").is_ok() { 1024 } else { 2048 };
+    let nb = seq / shareprefill::BLOCK_SIZE;
+    let d = spec.head_dim;
+    let mut rng = Rng::new(5);
+    let rand = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    };
+    let q = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
+    let k = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
+    let v = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
+
+    let mut b = Bench::new(&format!("kernel: attn artifact @ seq {seq}"))
+        .with_iters(1, 3);
+    for frac in [8usize, 4, 2, 1] {
+        let budget = spec.budget_bucket_for(seq, nb / frac);
+        // diagonal-band mask filling the budget
+        let mut mask = BlockMask::empty(nb);
+        for i in 0..nb {
+            for j in i.saturating_sub(budget - 1)..=i {
+                mask.insert(i, j);
+            }
+        }
+        let (idx, valid) = mask.pack(budget);
+        let name = format!("{}_attn_s{}_b{}", spec.prefix, seq, budget);
+        let (q2, k2, v2) = (q.clone(), k.clone(), v.clone());
+        b.case(&format!("budget {budget}/{nb}"), || {
+            registry.execute(&name, &[q2.clone(), k2.clone(), v2.clone(),
+                                      idx.clone(), valid.clone()])
+                .unwrap();
+            mask.count()
+        });
+    }
+    // probe artifacts
+    let h = spec.num_heads;
+    let qh = Tensor::f32(vec![h, 64, d], rand(&mut rng, h * 64 * d));
+    let kh = Tensor::f32(vec![h, seq, d], rand(&mut rng, h * seq * d));
+    let name = format!("{}_patternprobe_s{}", spec.prefix, seq);
+    b.case("pattern_probe", || {
+        registry.execute(&name, &[qh.clone(), kh.clone()]).unwrap();
+        1
+    });
+    let name = format!("{}_vslashprobe_s{}", spec.prefix, seq);
+    b.case("vslash_probe", || {
+        registry.execute(&name, &[qh.clone(), kh.clone()]).unwrap();
+        1
+    });
+    println!("\n{}", b.report());
+    Ok(())
+}

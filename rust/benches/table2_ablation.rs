@@ -1,0 +1,26 @@
+//! Table 2 latency column: prefill latency of the ablation variants.
+
+use shareprefill::bench::Bench;
+use shareprefill::config::{Config, MethodKind};
+use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::workloads::tasks::latency_prompt;
+
+fn main() -> anyhow::Result<()> {
+    let registry = open_registry(&Config::default())?;
+    let ctx = if std::env::var("BENCH_FAST").is_ok() { 1024 } else { 2048 };
+    let prompt = latency_prompt(ctx);
+    let mut b = Bench::new(&format!("table2: ablation latency @ {ctx}"))
+        .with_iters(1, 2);
+    let variants = [("ours", 0.2, 0.3), ("wo_sharing(tau=0)", 0.0, 0.3),
+                    ("wo_exclusion(delta=1.01)", 0.2, 1.01)];
+    for (name, tau, delta) in variants {
+        let mut cfg = Config::default();
+        cfg.method.tau = tau;
+        cfg.method.delta = delta;
+        let mut engine = build_engine(&registry, &cfg, "sim-llama",
+                                      MethodKind::SharePrefill)?;
+        b.case(name, || engine.prefill(&prompt).unwrap().real_len);
+    }
+    println!("\n{}", b.report());
+    Ok(())
+}

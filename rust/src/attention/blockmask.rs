@@ -1,0 +1,294 @@
+//! Causal block-sparse pattern: per query row-block, the sorted set of kv
+//! blocks to compute.  This is the paper's mask `M` at block granularity,
+//! plus the packing that turns it into the L1 kernel's `(idx, valid)`
+//! budget tensors.
+
+use crate::runtime::Tensor;
+
+/// Block-sparse causal mask over an `nb × nb` grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockMask {
+    pub nb: usize,
+    /// Sorted, deduped kv-block indices per row-block; all entries `<= row`.
+    rows: Vec<Vec<u32>>,
+}
+
+impl BlockMask {
+    pub fn empty(nb: usize) -> Self {
+        BlockMask { nb, rows: vec![Vec::new(); nb] }
+    }
+
+    /// Full causal (dense) pattern: row i computes blocks 0..=i.
+    pub fn dense(nb: usize) -> Self {
+        BlockMask {
+            nb,
+            rows: (0..nb).map(|i| (0..=i as u32).collect()).collect(),
+        }
+    }
+
+    /// Build from an iterator of (row, col) pairs; clamps to causal.
+    pub fn from_pairs(nb: usize, pairs: impl IntoIterator<Item = (usize, usize)>)
+                      -> Self {
+        let mut m = BlockMask::empty(nb);
+        for (i, j) in pairs {
+            m.insert(i, j);
+        }
+        m
+    }
+
+    /// Insert block (row, col); ignored if above the diagonal or OOB.
+    pub fn insert(&mut self, row: usize, col: usize) {
+        if row >= self.nb || col > row {
+            return;
+        }
+        let r = &mut self.rows[row];
+        match r.binary_search(&(col as u32)) {
+            Ok(_) => {}
+            Err(pos) => r.insert(pos, col as u32),
+        }
+    }
+
+    pub fn contains(&self, row: usize, col: usize) -> bool {
+        self.rows[row].binary_search(&(col as u32)).is_ok()
+    }
+
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.rows[i]
+    }
+
+    /// Ensure every row contains its diagonal block (self-attention is
+    /// always computed — keeps softmax well-defined for every query).
+    pub fn ensure_diagonal(&mut self) {
+        for i in 0..self.nb {
+            self.insert(i, i);
+        }
+    }
+
+    /// Union in-place with another mask of the same grid.
+    pub fn union(&mut self, other: &BlockMask) {
+        assert_eq!(self.nb, other.nb);
+        for i in 0..self.nb {
+            for &j in &other.rows[i] {
+                self.insert(i, j as usize);
+            }
+        }
+    }
+
+    /// Number of computed blocks.
+    pub fn count(&self) -> usize {
+        self.rows.iter().map(Vec::len).sum()
+    }
+
+    /// Max row population — determines the budget bucket.
+    pub fn max_row(&self) -> usize {
+        self.rows.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Fraction of the causal lower triangle that is computed.
+    pub fn density(&self) -> f64 {
+        let total = self.nb * (self.nb + 1) / 2;
+        self.count() as f64 / total.max(1) as f64
+    }
+
+    /// Jaccard similarity of computed-block sets (paper Figure 2b metric:
+    /// |intersection| / |union| — robust to the many zeros in sparse maps).
+    pub fn jaccard(&self, other: &BlockMask) -> f64 {
+        assert_eq!(self.nb, other.nb);
+        let mut inter = 0usize;
+        let mut uni = 0usize;
+        for i in 0..self.nb {
+            let a = &self.rows[i];
+            let b = &other.rows[i];
+            let (mut x, mut y) = (0usize, 0usize);
+            while x < a.len() && y < b.len() {
+                match a[x].cmp(&b[y]) {
+                    std::cmp::Ordering::Equal => {
+                        inter += 1;
+                        uni += 1;
+                        x += 1;
+                        y += 1;
+                    }
+                    std::cmp::Ordering::Less => {
+                        uni += 1;
+                        x += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        uni += 1;
+                        y += 1;
+                    }
+                }
+            }
+            uni += a.len() - x + b.len() - y;
+        }
+        if uni == 0 {
+            1.0
+        } else {
+            inter as f64 / uni as f64
+        }
+    }
+
+    /// Pack into the L1 kernel's `(idx, valid)` tensors at `budget` slots
+    /// per row.  Rows with more than `budget` live blocks are truncated
+    /// keeping the **latest** blocks (the local/diagonal end carries the
+    /// most attention mass under causal masking); rows with fewer are
+    /// padded with `valid = 0` (idx repeats the row's diagonal, harmless).
+    pub fn pack(&self, budget: usize) -> (Tensor, Tensor) {
+        let nb = self.nb;
+        let mut idx = vec![0i32; nb * budget];
+        let mut valid = vec![0f32; nb * budget];
+        for i in 0..nb {
+            let r = &self.rows[i];
+            let keep = if r.len() > budget {
+                &r[r.len() - budget..]
+            } else {
+                &r[..]
+            };
+            for (s, &j) in keep.iter().enumerate() {
+                idx[i * budget + s] = j as i32;
+                valid[i * budget + s] = 1.0;
+            }
+            // pad remaining slots with the diagonal index (masked out)
+            for s in keep.len()..budget {
+                idx[i * budget + s] = i as i32;
+            }
+        }
+        (Tensor::i32(vec![nb, budget], idx),
+         Tensor::f32(vec![nb, budget], valid))
+    }
+
+    /// Flatten to a row-major boolean grid (for rendering / features).
+    pub fn to_grid(&self) -> Vec<bool> {
+        let mut g = vec![false; self.nb * self.nb];
+        for i in 0..self.nb {
+            for &j in &self.rows[i] {
+                g[i * self.nb + j as usize] = true;
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{property, Gen};
+
+    #[test]
+    fn dense_counts() {
+        let m = BlockMask::dense(4);
+        assert_eq!(m.count(), 10);
+        assert_eq!(m.max_row(), 4);
+        assert!((m.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn insert_respects_causality() {
+        let mut m = BlockMask::empty(4);
+        m.insert(1, 3); // above diagonal -> ignored
+        assert_eq!(m.count(), 0);
+        m.insert(3, 1);
+        assert!(m.contains(3, 1));
+        m.insert(3, 1); // dedup
+        assert_eq!(m.count(), 1);
+    }
+
+    #[test]
+    fn jaccard_basics() {
+        let a = BlockMask::dense(4);
+        assert!((a.jaccard(&a) - 1.0).abs() < 1e-12);
+        let b = BlockMask::empty(4);
+        assert_eq!(a.jaccard(&b), 0.0);
+        assert_eq!(b.jaccard(&b), 1.0); // empty vs empty
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let m = BlockMask::from_pairs(4, [(0, 0), (2, 0), (2, 2), (3, 1)]);
+        let (idx, valid) = m.pack(2);
+        let idx = idx.as_i32().unwrap().to_vec();
+        let valid = valid.as_f32().unwrap().to_vec();
+        // row 2: blocks {0, 2}
+        assert_eq!(&idx[4..6], &[0, 2]);
+        assert_eq!(&valid[4..6], &[1.0, 1.0]);
+        // row 1: nothing
+        assert_eq!(&valid[2..4], &[0.0, 0.0]);
+        // row 3: one block
+        assert_eq!(idx[6], 1);
+        assert_eq!(valid[7], 0.0);
+    }
+
+    #[test]
+    fn pack_truncates_keeping_latest() {
+        let m = BlockMask::dense(4);
+        let (idx, valid) = m.pack(2);
+        let idx = idx.as_i32().unwrap();
+        // row 3 has 4 blocks, keeps {2, 3}
+        assert_eq!(&idx[6..8], &[2, 3]);
+        assert!(valid.as_f32().unwrap()[6..8].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn union_monotone() {
+        let mut a = BlockMask::from_pairs(4, [(1, 0)]);
+        let b = BlockMask::from_pairs(4, [(2, 1), (1, 0)]);
+        a.union(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn prop_pack_valid_entries_match_mask() {
+        property("pack validity", 100, |g: &mut Gen| {
+            let nb = g.usize_in(1..12);
+            let mut m = BlockMask::empty(nb);
+            for _ in 0..g.usize_in(0..30) {
+                let i = g.usize_in(0..nb);
+                let j = g.usize_in(0..nb);
+                m.insert(i, j);
+            }
+            let budget = g.usize_in(1..nb + 1);
+            let (idx, valid) = m.pack(budget);
+            let idx = idx.as_i32().unwrap();
+            let valid = valid.as_f32().unwrap();
+            for i in 0..nb {
+                for s in 0..budget {
+                    let v = valid[i * budget + s];
+                    let j = idx[i * budget + s] as usize;
+                    assert!(j < nb);
+                    if v > 0.0 {
+                        assert!(m.contains(i, j),
+                                "valid slot not in mask ({i},{j})");
+                        assert!(j <= i, "causality violated");
+                    }
+                }
+                // all live slots present when budget suffices
+                if m.row(i).len() <= budget {
+                    let live = valid[i * budget..(i + 1) * budget]
+                        .iter().filter(|&&v| v > 0.0).count();
+                    assert_eq!(live, m.row(i).len());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_jaccard_bounds_and_symmetry() {
+        property("jaccard bounds", 100, |g: &mut Gen| {
+            let nb = g.usize_in(1..10);
+            let mut a = BlockMask::empty(nb);
+            let mut b = BlockMask::empty(nb);
+            for _ in 0..g.usize_in(0..20) {
+                let (i, j) = (g.usize_in(0..nb), g.usize_in(0..nb));
+                if g.bool() {
+                    a.insert(i, j);
+                } else {
+                    b.insert(i, j);
+                }
+            }
+            let jab = a.jaccard(&b);
+            let jba = b.jaccard(&a);
+            assert!((jab - jba).abs() < 1e-12);
+            assert!((0.0..=1.0).contains(&jab));
+            assert!((a.jaccard(&a) - 1.0).abs() < 1e-12);
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Algorithm 3 — **Determine Sparse Pattern** — and Algorithm 4's
+//! dense-bootstrap rule.
+//!
+//! Per head: compare the probe distribution â (block-pooled last-row-block
+//! attention) against (a) the uniform distribution — the *sparsity* test
+//! `d_sparse = sqrt(JSD(â ‖ u))` — and (b) the cluster's pivotal
+//! representative ã — the *similarity* test `d_sim = sqrt(JSD(â ‖ ã))`.
+//!
+//! * noise cluster, or `d_sparse ≥ δ` (highly sparse head, excluded for
+//!   efficiency) → conservative vertical-slash pattern;
+//! * pivot exists and `d_sim < τ` → share the pivotal pattern;
+//! * pivot exists but dissimilar → vertical-slash;
+//! * no pivot yet → this head runs **dense** and becomes the cluster's
+//!   pivot (Alg. 4: "assign a dense pattern to the first head").
+
+use super::pivotal::PivotalDict;
+use crate::util::math::{js_distance, uniform};
+
+/// Outcome of the per-head pattern decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Compute full attention; construct + publish the pivotal pattern.
+    Dense,
+    /// Reuse the cluster's pivotal mask.
+    SharedPivot,
+    /// Fall back to vertical-slash search.
+    VSlash,
+}
+
+/// Diagnostic record of one decision (drives Figure 6 and the metrics).
+#[derive(Debug, Clone)]
+pub struct DecisionInfo {
+    pub decision: Decision,
+    pub d_sparse: f64,
+    pub d_sim: Option<f64>,
+    pub cluster: Option<usize>,
+}
+
+/// Apply Algorithm 3 for one head.
+///
+/// * `ahat` — probe distribution over kv blocks (sums to 1).
+/// * `cluster` — offline cluster id; `None` = noise cluster.
+/// * `dict` — the evolving pivotal dictionary.
+pub fn decide_pattern(ahat: &[f32], cluster: Option<usize>,
+                      dict: &PivotalDict, delta: f64, tau: f64)
+                      -> DecisionInfo {
+    let u = uniform(ahat.len());
+    let d_sparse = js_distance(ahat, &u);
+    let Some(c) = cluster else {
+        return DecisionInfo {
+            decision: Decision::VSlash, d_sparse, d_sim: None, cluster: None,
+        };
+    };
+    // Highly sparse heads are excluded from sharing: full attention on them
+    // is not cost-effective, and vslash approximates them well (§5.2).
+    if d_sparse >= delta {
+        return DecisionInfo {
+            decision: Decision::VSlash, d_sparse, d_sim: None,
+            cluster: Some(c),
+        };
+    }
+    match dict.get(&c) {
+        Some(entry) => {
+            // Guard against bucket-length mismatch (cannot happen within one
+            // prefill; defensive for reuse across requests).
+            if entry.ahat_last.len() != ahat.len() {
+                return DecisionInfo {
+                    decision: Decision::VSlash, d_sparse, d_sim: None,
+                    cluster: Some(c),
+                };
+            }
+            let d_sim = js_distance(ahat, &entry.ahat_last);
+            let decision = if d_sim < tau {
+                Decision::SharedPivot
+            } else {
+                Decision::VSlash
+            };
+            DecisionInfo { decision, d_sparse, d_sim: Some(d_sim),
+                           cluster: Some(c) }
+        }
+        None => DecisionInfo {
+            decision: Decision::Dense, d_sparse, d_sim: None,
+            cluster: Some(c),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::pivotal::PivotalEntry;
+    use crate::attention::BlockMask;
+
+    fn peaked(n: usize, at: usize) -> Vec<f32> {
+        let mut v = vec![0.01 / (n - 1) as f32; n];
+        v[at] = 0.99;
+        v
+    }
+
+    fn flat(n: usize) -> Vec<f32> {
+        vec![1.0 / n as f32; n]
+    }
+
+    fn dict_with(c: usize, ahat: Vec<f32>) -> PivotalDict {
+        let nb = ahat.len();
+        let mut d = PivotalDict::new();
+        d.insert(c, PivotalEntry {
+            ahat_last: ahat,
+            mask: BlockMask::dense(nb),
+            source: (0, 0),
+        });
+        d
+    }
+
+    #[test]
+    fn noise_cluster_goes_vslash() {
+        let info = decide_pattern(&flat(8), None, &PivotalDict::new(),
+                                  0.3, 0.2);
+        assert_eq!(info.decision, Decision::VSlash);
+        assert!(info.cluster.is_none());
+    }
+
+    #[test]
+    fn first_head_in_cluster_goes_dense() {
+        let info = decide_pattern(&flat(8), Some(3), &PivotalDict::new(),
+                                  0.3, 0.2);
+        assert_eq!(info.decision, Decision::Dense);
+    }
+
+    #[test]
+    fn similar_head_shares() {
+        let dict = dict_with(1, flat(8));
+        let info = decide_pattern(&flat(8), Some(1), &dict, 0.3, 0.2);
+        assert_eq!(info.decision, Decision::SharedPivot);
+        assert!(info.d_sim.unwrap() < 1e-6);
+    }
+
+    #[test]
+    fn dissimilar_head_falls_back() {
+        let dict = dict_with(1, peaked(8, 0));
+        // flat â vs peaked ã: very different, but flat is NOT highly sparse
+        let info = decide_pattern(&flat(8), Some(1), &dict, 0.9, 0.1);
+        assert_eq!(info.decision, Decision::VSlash);
+        assert!(info.d_sim.unwrap() > 0.1);
+    }
+
+    #[test]
+    fn highly_sparse_head_excluded() {
+        // peaked â = far from uniform = highly sparse -> vslash even though
+        // the dict has an identical pivot (δ gate comes first)
+        let dict = dict_with(1, peaked(8, 2));
+        let info = decide_pattern(&peaked(8, 2), Some(1), &dict, 0.3, 0.9);
+        assert_eq!(info.decision, Decision::VSlash);
+        assert!(info.d_sparse >= 0.3);
+        assert!(info.d_sim.is_none());
+    }
+
+    #[test]
+    fn delta_above_one_disables_exclusion() {
+        // the paper's "w/o exclusion" ablation: δ=1.01 (d_sparse ≤ 1 always)
+        let dict = dict_with(1, peaked(8, 2));
+        let info = decide_pattern(&peaked(8, 2), Some(1), &dict, 1.01, 0.9);
+        assert_eq!(info.decision, Decision::SharedPivot);
+    }
+
+    #[test]
+    fn tau_zero_disables_sharing() {
+        // the paper's "w/o sharing" ablation: τ=0 → nothing passes d_sim<τ…
+        let dict = dict_with(1, flat(8));
+        let info = decide_pattern(&flat(8), Some(1), &dict, 1.01, 0.0);
+        assert_eq!(info.decision, Decision::VSlash);
+    }
+
+    #[test]
+    fn mismatched_pivot_length_is_safe() {
+        let dict = dict_with(1, flat(4));
+        let info = decide_pattern(&flat(8), Some(1), &dict, 1.01, 0.5);
+        assert_eq!(info.decision, Decision::VSlash);
+    }
+}

@@ -1,0 +1,13 @@
+//! The pattern engine: block masks, budget packing, and the paper's
+//! Algorithms 2 (pivotal pattern construction), 3 (pattern decision),
+//! 4 (sharing) and 5 (vertical-slash search).
+
+pub mod blockmask;
+pub mod decide;
+pub mod pivotal;
+pub mod vslash;
+
+pub use blockmask::BlockMask;
+pub use decide::{decide_pattern, Decision};
+pub use pivotal::{construct_pivotal, PivotalDict, PivotalEntry};
+pub use vslash::search_vslash;

@@ -1,0 +1,183 @@
+//! Algorithm 2 — **Construct Pivotal Pattern** — and the evolving pivotal
+//! pattern dictionary (Algorithm 4's storage).
+//!
+//! When a head runs with the *dense* pattern, its block-averaged QK map Ã
+//! is complete.  We then: row-softmax Ã into block-averaged attention
+//! scores, keep the last row as the pivotal representative ã (used for the
+//! JS similarity check of Alg. 3), flatten + normalize the whole map, sort
+//! descending, take the minimal prefix whose cumulative mass ≥ γ, and store
+//! the resulting block mask keyed by the head's cluster.
+
+use std::collections::HashMap;
+
+use crate::util::math::{cumulative_select, softmax_inplace, NEG_INF};
+
+use super::BlockMask;
+
+/// Dictionary entry: the pivotal representative ã (last-row block-averaged
+/// attention distribution) and the constructed mask M.
+#[derive(Debug, Clone)]
+pub struct PivotalEntry {
+    pub ahat_last: Vec<f32>,
+    pub mask: BlockMask,
+    /// (layer, head) that produced this pivot — observability only.
+    pub source: (usize, usize),
+}
+
+/// cluster id → pivotal entry.  Reset per request: patterns are
+/// input-dependent (the paper's dictionary evolves during one prefill).
+pub type PivotalDict = HashMap<usize, PivotalEntry>;
+
+/// Construct a pivotal pattern from a *full* block-averaged QK map
+/// (`abar[i*nb + j]`, `-inf` above the diagonal), per Algorithm 2.
+///
+/// Returns the entry; the caller stores it under the head's cluster id.
+pub fn construct_pivotal(abar: &[f32], nb: usize, gamma: f32,
+                         source: (usize, usize)) -> PivotalEntry {
+    debug_assert_eq!(abar.len(), nb * nb);
+    // Row-softmax: Ã = softmax(block-averaged QK) per query row-block —
+    // attention semantics at block granularity.
+    let mut scores = abar.to_vec();
+    for i in 0..nb {
+        softmax_inplace(&mut scores[i * nb..(i + 1) * nb]);
+    }
+    // Pivotal representative: last row.
+    let ahat_last = scores[(nb - 1) * nb..].to_vec();
+    // Flatten + normalize, then minimal cumulative-γ selection.
+    let total: f32 = scores.iter().sum();
+    if total > 0.0 {
+        scores.iter_mut().for_each(|x| *x /= total);
+    }
+    let selected = cumulative_select(&scores, gamma);
+    let mut mask = BlockMask::empty(nb);
+    for flat in selected {
+        mask.insert(flat / nb, flat % nb);
+    }
+    // Self-attention blocks must always be computed for well-defined rows.
+    mask.ensure_diagonal();
+    PivotalEntry { ahat_last, mask, source }
+}
+
+/// Assemble a full `[nb, nb]` abar map from a budgeted kernel output:
+/// `abar_slots[i*budget + s]` corresponds to `idx[i*budget + s]`.
+/// Unvisited blocks are `-inf`. Used when a head ran dense (budget == nb,
+/// causal idx) or to scatter any sparse result for inspection.
+pub fn scatter_abar(abar_slots: &[f32], idx: &[i32], valid: &[f32],
+                    nb: usize, budget: usize) -> Vec<f32> {
+    let mut full = vec![NEG_INF; nb * nb];
+    for i in 0..nb {
+        for s in 0..budget {
+            let off = i * budget + s;
+            if valid[off] > 0.0 && abar_slots[off].is_finite() {
+                let j = idx[off] as usize;
+                full[i * nb + j] = abar_slots[off];
+            }
+        }
+    }
+    full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{property, Gen};
+
+    fn uniform_map(nb: usize) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = 0.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn gamma_one_selects_everything_causal() {
+        let nb = 4;
+        let e = construct_pivotal(&uniform_map(nb), nb, 1.0, (0, 0));
+        assert_eq!(e.mask.count(), nb * (nb + 1) / 2);
+    }
+
+    #[test]
+    fn low_gamma_selects_few() {
+        let nb = 4;
+        let mut m = uniform_map(nb);
+        // one dominant block per row
+        for i in 0..nb {
+            m[i * nb] = 10.0;
+        }
+        let e = construct_pivotal(&m, nb, 0.5, (1, 2));
+        assert!(e.mask.density() < 1.0);
+        // the dominant sink column dominates the selection: at least half
+        // of the rows keep their sink block at γ=0.5
+        let sinks = (1..nb).filter(|&i| e.mask.contains(i, 0)).count();
+        assert!(sinks >= nb / 2 - 1, "only {sinks} sink blocks selected");
+        assert_eq!(e.source, (1, 2));
+    }
+
+    #[test]
+    fn ahat_last_is_distribution() {
+        let nb = 5;
+        let e = construct_pivotal(&uniform_map(nb), nb, 0.9, (0, 0));
+        let s: f32 = e.ahat_last.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert_eq!(e.ahat_last.len(), nb);
+    }
+
+    #[test]
+    fn diagonal_always_present() {
+        let nb = 4;
+        let mut m = uniform_map(nb);
+        m[nb + 0] = 100.0; // row 1 mass entirely on block 0
+        let e = construct_pivotal(&m, nb, 0.1, (0, 0));
+        for i in 0..nb {
+            assert!(e.mask.contains(i, i), "diag missing at {i}");
+        }
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let nb = 3;
+        let budget = 2;
+        let idx = vec![0, 0, /*row0*/ 0, 1, /*row1*/ 1, 2 /*row2*/];
+        let valid = vec![1., 0., 1., 1., 1., 1.];
+        let slots = vec![0.5, 9.9, 0.1, 0.2, 0.3, 0.4];
+        let full = scatter_abar(&slots, &idx, &valid, nb, budget);
+        assert_eq!(full[0], 0.5);
+        assert_eq!(full[nb], 0.1);
+        assert_eq!(full[nb + 1], 0.2);
+        assert_eq!(full[2 * nb + 1], 0.3);
+        assert_eq!(full[2 * nb + 2], 0.4);
+        assert_eq!(full[1], NEG_INF); // masked slot not scattered
+    }
+
+    #[test]
+    fn prop_selection_covers_gamma() {
+        property("pivotal covers gamma", 60, |g: &mut Gen| {
+            let nb = g.usize_in(2..9);
+            let mut m = vec![NEG_INF; nb * nb];
+            for i in 0..nb {
+                for j in 0..=i {
+                    m[i * nb + j] = g.f32_in(-3.0, 3.0);
+                }
+            }
+            let gamma = g.f32_in(0.3, 0.99);
+            let e = construct_pivotal(&m, nb, gamma, (0, 0));
+            // recompute normalized score mass covered by the mask
+            let mut scores = m.clone();
+            for i in 0..nb {
+                crate::util::math::softmax_inplace(
+                    &mut scores[i * nb..(i + 1) * nb]);
+            }
+            let total: f32 = scores.iter().sum();
+            let covered: f32 = (0..nb)
+                .flat_map(|i| (0..=i).map(move |j| (i, j)))
+                .filter(|&(i, j)| e.mask.contains(i, j))
+                .map(|(i, j)| scores[i * nb + j])
+                .sum();
+            assert!(covered / total >= gamma - 1e-4,
+                    "covered {} < gamma {}", covered / total, gamma);
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Algorithm 5 — **Search Vertical Slash Pattern** (also the MInference
+//! baseline's dynamic index, and SharePrefill's conservative fallback).
+//!
+//! Input: the softmaxed last-row-block attention map Â `[BS, S]` from the
+//! vslash probe.  Vertical scores sum Â per key column; slash scores sum Â
+//! per diagonal offset (qpos − kpos).  Each is normalized; the minimal
+//! cumulative-γ prefix of each sorted list is selected; the union of the
+//! chosen vertical columns and slash diagonals, mapped to block
+//! granularity, forms the mask.
+
+use crate::util::math::cumulative_select;
+use crate::BLOCK_SIZE;
+
+use super::BlockMask;
+
+/// Search a vertical-slash pattern from the probe map.
+///
+/// * `amap` — `[bs, seq]` row-softmaxed last-block attention.
+/// * `seq` — sequence length; `nb = seq / BLOCK_SIZE`.
+/// * `gamma` — cumulative attention threshold.
+pub fn search_vslash(amap: &[f32], bs: usize, seq: usize, gamma: f32)
+                     -> BlockMask {
+    let nb = seq / BLOCK_SIZE;
+    debug_assert_eq!(amap.len(), bs * seq);
+    let q0 = seq - bs; // qpos of probe row 0
+
+    // vertical: total mass per key position
+    let mut vert = vec![0f32; seq];
+    // slash: total mass per diagonal offset d = qpos - kpos ∈ [0, seq)
+    let mut slash = vec![0f32; seq];
+    for r in 0..bs {
+        let qpos = q0 + r;
+        let row = &amap[r * seq..(r + 1) * seq];
+        for (kpos, &a) in row.iter().enumerate().take(qpos + 1) {
+            vert[kpos] += a;
+            slash[qpos - kpos] += a;
+        }
+    }
+    let sel_v = cumulative_select(&vert, gamma);
+    let sel_s = cumulative_select(&slash, gamma);
+
+    let mut mask = BlockMask::empty(nb);
+    // vertical token columns -> block columns, for every row-block at or
+    // below which the column is causal
+    for &col in &sel_v {
+        let jb = col / BLOCK_SIZE;
+        for i in jb..nb {
+            mask.insert(i, jb);
+        }
+    }
+    // slash offsets -> per row-block, the kv blocks its tokens reach at
+    // that offset (the diagonal stripe crosses up to two blocks per row)
+    for &d in &sel_s {
+        for i in 0..nb {
+            let row_lo = i * BLOCK_SIZE;
+            let row_hi = row_lo + BLOCK_SIZE - 1;
+            if row_hi < d {
+                continue; // offset reaches above position 0 for all rows
+            }
+            let k_hi = row_hi - d;
+            let jb_hi = k_hi / BLOCK_SIZE;
+            mask.insert(i, jb_hi.min(i));
+            if row_lo >= d {
+                let jb_lo = (row_lo - d) / BLOCK_SIZE;
+                mask.insert(i, jb_lo.min(i));
+            }
+        }
+    }
+    mask.ensure_diagonal();
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{property, Gen};
+
+    /// Â with all mass on key column `col`.
+    fn column_map(bs: usize, seq: usize, col: usize) -> Vec<f32> {
+        let mut m = vec![0f32; bs * seq];
+        for r in 0..bs {
+            m[r * seq + col] = 1.0;
+        }
+        m
+    }
+
+    #[test]
+    fn pure_vertical_selects_column_block() {
+        let (bs, seq) = (BLOCK_SIZE, 4 * BLOCK_SIZE);
+        let m = column_map(bs, seq, 10); // block 0
+        let mask = search_vslash(&m, bs, seq, 0.9);
+        let nb = seq / BLOCK_SIZE;
+        for i in 0..nb {
+            assert!(mask.contains(i, 0), "vertical col missing at row {i}");
+        }
+    }
+
+    #[test]
+    fn pure_slash_selects_diagonal_stripe() {
+        let (bs, seq) = (BLOCK_SIZE, 4 * BLOCK_SIZE);
+        // all mass on the self-position (offset 0 diagonal)
+        let mut m = vec![0f32; bs * seq];
+        let q0 = seq - bs;
+        for r in 0..bs {
+            m[r * seq + q0 + r] = 1.0;
+        }
+        let mask = search_vslash(&m, bs, seq, 0.9);
+        let nb = seq / BLOCK_SIZE;
+        for i in 0..nb {
+            assert!(mask.contains(i, i), "diag missing at row {i}");
+        }
+        // offset-0 slash shouldn't light distant off-diagonal blocks
+        assert!(!mask.contains(nb - 1, 1) || nb <= 2);
+    }
+
+    #[test]
+    fn gamma_monotone_in_mask_size() {
+        let (bs, seq) = (BLOCK_SIZE, 4 * BLOCK_SIZE);
+        let mut g = Gen::from_seed(9);
+        let mut m = vec![0f32; bs * seq];
+        let q0 = seq - bs;
+        for r in 0..bs {
+            for k in 0..=q0 + r {
+                m[r * seq + k] = g.f32_in(0.0, 1.0);
+            }
+        }
+        let small = search_vslash(&m, bs, seq, 0.5).count();
+        let large = search_vslash(&m, bs, seq, 0.95).count();
+        assert!(small <= large, "γ=0.5 -> {small}, γ=0.95 -> {large}");
+    }
+
+    #[test]
+    fn prop_mask_causal_and_diagonal() {
+        property("vslash causal+diag", 40, |g: &mut Gen| {
+            let nbs = [2usize, 3, 4];
+            let nb = nbs[g.usize_in(0..3)];
+            let seq = nb * BLOCK_SIZE;
+            let bs = BLOCK_SIZE;
+            let q0 = seq - bs;
+            let mut m = vec![0f32; bs * seq];
+            for r in 0..bs {
+                for k in 0..=q0 + r {
+                    m[r * seq + k] = g.f32_in(0.0, 1.0);
+                }
+            }
+            let gamma = g.f32_in(0.3, 0.99);
+            let mask = search_vslash(&m, bs, seq, gamma);
+            for i in 0..nb {
+                assert!(mask.contains(i, i));
+                for &j in mask.row(i) {
+                    assert!((j as usize) <= i);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vertical_coverage_property() {
+        // The union of selected vertical columns must cover >= γ of the
+        // vertical mass (Alg. 5's selection invariant).
+        let (bs, seq) = (BLOCK_SIZE, 3 * BLOCK_SIZE);
+        let mut g = Gen::from_seed(11);
+        let q0 = seq - bs;
+        let mut m = vec![0f32; bs * seq];
+        for r in 0..bs {
+            for k in 0..=q0 + r {
+                m[r * seq + k] = g.f32_in(0.0, 1.0);
+            }
+        }
+        let gamma = 0.8f32;
+        let mut vert = vec![0f32; seq];
+        for r in 0..bs {
+            for k in 0..=q0 + r {
+                vert[k] += m[r * seq + k];
+            }
+        }
+        let sel = cumulative_select(&vert, gamma);
+        let total: f32 = vert.iter().sum();
+        let covered: f32 = sel.iter().map(|&c| vert[c]).sum();
+        assert!(covered >= gamma * total - 1e-3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal benchmarking harness: warmup + timed iterations + summary
+//! statistics, markdown report, optional JSON dump for regression diffs.
+
+use std::time::Instant;
+
+use crate::substrate::json::Json;
+use crate::util::ascii::markdown_table;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub std_ms: f64,
+    /// Optional derived metric (e.g. tokens/s) set by the caller.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    pub group: String,
+    warmup: usize,
+    iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        // BENCH_FAST=1 trims iterations (CI smoke mode).
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Bench {
+            group: group.to_string(),
+            warmup: if fast { 1 } else { 2 },
+            iters: if fast { 2 } else { 5 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Bench {
+        self.warmup = warmup;
+        self.iters = iters;
+        self
+    }
+
+    /// Time `f`; it may return a unit count for throughput reporting.
+    pub fn case<F>(&mut self, name: &str, mut f: F)
+    where
+        F: FnMut() -> usize,
+    {
+        let mut units = 0usize;
+        for _ in 0..self.warmup {
+            units = f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            units = f();
+            s.add(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean_ms = s.mean();
+        let throughput = if units > 0 && mean_ms > 0.0 {
+            Some((units as f64 / (mean_ms / 1e3), "units/s"))
+        } else {
+            None
+        };
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ms,
+            p50_ms: s.p50(),
+            p99_ms: s.percentile(99.0),
+            std_ms: s.std(),
+            throughput,
+        };
+        println!("  {:40} {:>10.2} ms ±{:>6.2}", r.name, r.mean_ms, r.std_ms);
+        self.results.push(r);
+    }
+
+    pub fn report(&self) -> String {
+        let rows: Vec<Vec<String>> = self.results.iter().map(|r| {
+            vec![
+                r.name.clone(),
+                format!("{:.2}", r.mean_ms),
+                format!("{:.2}", r.p50_ms),
+                format!("{:.2}", r.p99_ms),
+                format!("{:.2}", r.std_ms),
+                r.throughput.map(|(v, u)| format!("{v:.0} {u}"))
+                    .unwrap_or_default(),
+            ]
+        }).collect();
+        format!("## {}\n\n{}", self.group, markdown_table(
+            &["case", "mean ms", "p50 ms", "p99 ms", "std", "throughput"],
+            &rows))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("group", Json::str(self.group.clone())),
+            ("results", Json::Arr(self.results.iter().map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("mean_ms", Json::num(r.mean_ms)),
+                    ("p99_ms", Json::num(r.p99_ms)),
+                ])
+            }).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_cases_and_reports() {
+        let mut b = Bench::new("g").with_iters(1, 3);
+        let mut n = 0;
+        b.case("busy", || {
+            n += 1;
+            std::hint::black_box((0..1000).sum::<usize>());
+            1000
+        });
+        assert_eq!(n, 4); // 1 warmup + 3 timed
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].throughput.is_some());
+        let rep = b.report();
+        assert!(rep.contains("busy"));
+        let j = b.to_json().to_string();
+        assert!(j.contains("mean_ms"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Criterion-style micro/end-to-end bench harness (the offline vendor set
+//! has no `criterion`; `benches/*.rs` use this with `harness = false`).
+
+pub mod harness;
+
+pub use harness::{Bench, BenchResult};

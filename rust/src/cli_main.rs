@@ -1,0 +1,322 @@
+//! CLI dispatcher for the `shareprefill` binary.
+
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::eval::{ablation, build_engine, infinitebench, latency,
+                  open_registry, perplexity};
+use crate::methods::{HeadPlan, PatternStrategy, Probes};
+use crate::serving::request::Request;
+use crate::serving::{scheduler::Scheduler, server, Engine};
+use crate::substrate::cli::Args;
+use crate::util::ascii::{heatmap, mask_map};
+use crate::workloads::corpus::detokenize;
+use crate::workloads::tasks::{self, Task, TASK_NAMES};
+
+const USAGE: &str = "\
+shareprefill — SharePrefill serving stack (paper reproduction)
+
+USAGE: shareprefill <subcommand> [options]
+
+SUBCOMMANDS
+  serve     run the serving engine on a synthetic request stream
+            [--model M] [--method ours|flash|minference|flexprefill]
+            [--requests N] [--ctx L] [--decode-tokens N]
+  eval      Table 1: InfiniteBench-sim suite
+            [--model M] [--methods a,b,..] [--samples N] [--ctx L]
+  ablate    Table 2: ablations [--model M] [--samples N] [--ctx L]
+  ppl       Figure 4: perplexity sweep [--model M] [--ctxs 256,512,..]
+  latency   Figure 5: latency sweep [--model M] [--ctxs ...] [--repeats N]
+  patterns  Figures 2 & 6: pattern maps [--similarity] [--distribution]
+            [--model M] [--ctx L] [--task Retr.KV]
+  cluster   offline head clustering -> artifacts/head_clusters-{model}.json
+            [--model M] [--ctx L] [--threshold T] [--min-size N]
+  inspect   artifact registry info
+  golden    golden-vector integration check [--model M]
+
+COMMON  --artifacts DIR   (default: artifacts)
+        --config FILE     TOML config
+        --tau/--delta/--gamma overrides";
+
+pub fn run_cli() -> Result<()> {
+    let args = Args::from_env(&["help", "verbose", "similarity",
+                                "distribution"])?;
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = Config::load(&args)?;
+    match args.subcommand()? {
+        "serve" => cmd_serve(&args, &cfg),
+        "eval" => cmd_eval(&args, &cfg),
+        "ablate" => cmd_ablate(&args, &cfg),
+        "ppl" => cmd_ppl(&args, &cfg),
+        "latency" => cmd_latency(&args, &cfg),
+        "patterns" => cmd_patterns(&args, &cfg),
+        "cluster" => cmd_cluster(&args, &cfg),
+        "inspect" => cmd_inspect(&cfg),
+        "golden" => cmd_golden(&args, &cfg),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn parse_methods(args: &Args) -> Result<Vec<MethodKind>> {
+    args.list_or("methods", &["flash", "minference", "flexprefill", "ours"])
+        .iter()
+        .map(|s| MethodKind::parse(s))
+        .collect()
+}
+
+fn parse_tasks(args: &Args) -> Vec<Task> {
+    match args.opt("tasks") {
+        None => TASK_NAMES.iter().map(|(t, _)| *t).collect(),
+        Some(list) => list.split(',')
+            .filter_map(|n| Task::by_name(n.trim()))
+            .collect(),
+    }
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let model = args.str_or("model", "sim-llama");
+    let n = args.usize_or("requests", 8)?;
+    let ctx = args.usize_or("ctx", 1024)?;
+    let cfg2 = cfg.clone();
+    let model2 = model.clone();
+    let handle = server::spawn(move || {
+        let registry = open_registry(&cfg2)?;
+        let engine = build_engine(&registry, &cfg2, &model2,
+                                  cfg2.method.kind)?;
+        Ok((Scheduler::new(&cfg2.serve), engine))
+    });
+    println!("serving {n} requests @ ctx {ctx}, model {model}, method {}",
+             cfg.method.kind.name());
+    for i in 0..n {
+        let prompt = tasks::latency_prompt(ctx);
+        handle.submit(Request::new(i as u64, prompt,
+                                   cfg.serve.decode_tokens));
+    }
+    let (responses, report) = handle.shutdown_and_report();
+    for r in &responses {
+        println!("req {:3}: prefill {:7.1} ms, decode {:6.1} ms, \
+                  density {:.2}, gen {:?}",
+                 r.id, r.prefill_us as f64 / 1e3, r.decode_us as f64 / 1e3,
+                 r.density, detokenize(&r.generated));
+    }
+    println!("\n{report}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let methods = parse_methods(args)?;
+    let tasks_v = parse_tasks(args);
+    let samples = args.usize_or("samples", 3)?;
+    let ctx = args.usize_or("ctx", 1024)?;
+    let t1 = infinitebench::run_table1(&registry, cfg, &model, &methods,
+                                       &tasks_v, samples, ctx)?;
+    println!("{}", t1.render());
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let samples = args.usize_or("samples", 2)?;
+    let ctx = args.usize_or("ctx", 1024)?;
+    let spec = registry.model(&model)?.clone();
+    let latency_ctx = args.usize_or("latency-ctx", spec.max_seq)?;
+    let tasks_v = parse_tasks(args);
+    let rows = ablation::run_ablation(&registry, cfg, &model, &tasks_v,
+                                      samples, ctx, latency_ctx)?;
+    println!("{}", ablation::render(&rows, ctx, latency_ctx));
+    Ok(())
+}
+
+fn cmd_ppl(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let methods = parse_methods(args)?;
+    let ctxs: Vec<usize> = args.list_or("ctxs", &["256", "512", "1024"])
+        .iter().map(|s| s.parse().unwrap_or(512)).collect();
+    let samples = args.usize_or("samples", 2)?;
+    let curves = perplexity::run_ppl(&registry, cfg, &model, &methods,
+                                     &ctxs, samples)?;
+    println!("{}", curves.render());
+    Ok(())
+}
+
+fn cmd_latency(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let methods = parse_methods(args)?;
+    let ctxs: Vec<usize> = args
+        .list_or("ctxs", &["512", "1024", "2048"])
+        .iter().map(|s| s.parse().unwrap_or(512)).collect();
+    let repeats = args.usize_or("repeats", 2)?;
+    let curves = latency::run_latency(&registry, cfg, &model, &methods,
+                                      &ctxs, repeats)?;
+    println!("{}", curves.render());
+    println!("speedups vs FlashAttn @ {} tok:",
+             curves.ctx_lens.last().unwrap());
+    for (m, s) in curves.speedups() {
+        println!("  {:14} {s:.2}x", m.name());
+    }
+    Ok(())
+}
+
+/// Strategy that runs every head dense and collects the full abar maps —
+/// the calibration path for `cluster` and `patterns`.
+pub struct DenseCollector {
+    pub maps: Rc<RefCell<Vec<Vec<f32>>>>,
+}
+
+impl PatternStrategy for DenseCollector {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Flash
+    }
+
+    fn begin_request(&mut self, _seq: usize) {
+        self.maps.borrow_mut().clear();
+    }
+
+    fn plan_layer(&mut self, _l: usize, _s: usize, h: usize,
+                  _p: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+        Ok((0..h).map(|_| HeadPlan::dense(true)).collect())
+    }
+
+    fn publish_abar(&mut self, _layer: usize, _head: usize, _nb: usize,
+                    abar: &[f32]) {
+        self.maps.borrow_mut().push(abar.to_vec());
+    }
+}
+
+/// Collect each head's dense block-average map on one prompt.
+pub fn collect_head_maps(registry: &Rc<crate::runtime::Registry>,
+                         model: &str, prompt: &[i32])
+                         -> Result<(Vec<Vec<f32>>, usize)> {
+    let maps = Rc::new(RefCell::new(Vec::new()));
+    let strategy = Box::new(DenseCollector { maps: maps.clone() });
+    let mut engine = Engine::new(registry.clone(), model, strategy)?;
+    let pre = engine.prefill(prompt)?;
+    let nb = pre.seq / crate::BLOCK_SIZE;
+    let out = maps.borrow().clone();
+    Ok((out, nb))
+}
+
+fn cmd_patterns(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let ctx = args.usize_or("ctx", 1024)?;
+    let task = Task::by_name(&args.str_or("task", "Retr.KV"))
+        .unwrap_or(Task::RetrKV);
+    let spec = registry.model(&model)?.clone();
+    let s = tasks::sample(task, 1, ctx);
+    let gamma = cfg.method.gamma;
+
+    if args.flag("distribution") {
+        // Figure 6: pattern distribution under SharePrefill per task
+        println!("### Figure 6 — pattern distribution, {model} @ ctx {ctx}\n");
+        println!("| task | dense | shared | vslash |");
+        println!("|---|---:|---:|---:|");
+        for (t, name) in TASK_NAMES {
+            let mut e = build_engine(&registry, cfg, &model,
+                                     MethodKind::SharePrefill)?;
+            let sm = tasks::sample(t, 3, ctx);
+            let pre = e.prefill(&sm.prompt)?;
+            println!("| {} | {} | {} | {} |", name, pre.stats.dense,
+                     pre.stats.shared, pre.stats.vslash);
+        }
+        return Ok(());
+    }
+
+    let (maps, nb) = collect_head_maps(&registry, &model, &s.prompt)?;
+    let patterns: Vec<_> = maps.iter()
+        .map(|m| crate::clustering::pattern_of_map(m, nb, gamma))
+        .collect();
+
+    if args.flag("similarity") {
+        // Figure 2b: head × head Jaccard matrix
+        let m = crate::clustering::jaccard_matrix(&patterns);
+        let n = patterns.len();
+        println!("### Figure 2b — Jaccard similarity, {n} heads, task {}\n",
+                 task.name());
+        let f32m: Vec<f32> = m.iter().map(|&x| x as f32).collect();
+        println!("{}", heatmap(&f32m, n, n));
+        let off: Vec<f64> = (0..n)
+            .flat_map(|i| (0..n).filter(move |&j| j != i)
+                .map(move |j| (i, j)))
+            .map(|(i, j)| m[i * n + j])
+            .collect();
+        let above = off.iter().filter(|&&x| x > 0.5).count();
+        println!("off-diagonal pairs with similarity > 0.5: {:.2}",
+                 above as f64 / off.len().max(1) as f64);
+    } else {
+        // Figure 2a: a few heads' patterns
+        println!("### Figure 2a — block patterns (γ={gamma}), task {}, \
+                  {} heads × {} layers\n",
+                 task.name(), spec.num_heads, spec.num_layers);
+        for (i, p) in patterns.iter().enumerate().take(6) {
+            let (l, h) = (i / spec.num_heads, i % spec.num_heads);
+            println!("(L{l}, H{h}) density {:.2}", p.density());
+            println!("{}", mask_map(&p.to_grid(), nb));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let ctx = args.usize_or("ctx", 1024)?;
+    let threshold = args.f64_or("threshold", 0.6)?;
+    let min_size = args.usize_or("min-size", 5)?;
+    let spec = registry.model(&model)?.clone();
+    // calibration sample: Retr.KV, as in the paper (Section 5.2)
+    let s = tasks::sample(Task::RetrKV, 7, ctx);
+    let (maps, nb) = collect_head_maps(&registry, &model, &s.prompt)?;
+    let hc = crate::clustering::cluster_heads(
+        &model, spec.num_layers, spec.num_heads, &maps, nb, 16, 64,
+        threshold, min_size);
+    let path = cfg.paths.artifacts
+        .join(format!("head_clusters-{model}.json"));
+    crate::clustering::save_clusters(&hc, &path)?;
+    println!("clustered {} heads -> {} clusters (noise: {}) @ {:?}",
+             maps.len(), hc.num_clusters,
+             hc.assignment.iter().filter(|a| a.is_none()).count(), path);
+    for (i, sz) in hc.sizes().iter().enumerate() {
+        println!("  cluster {i}: {sz} heads");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    println!("artifacts dir: {:?}", cfg.paths.artifacts);
+    for (name, m) in &registry.models {
+        println!("model {name}: {}L x {}H (kv {}), d{} hidden {}, vocab {}, \
+                  buckets {:?}",
+                 m.num_layers, m.num_heads, m.num_kv_heads, m.head_dim,
+                 m.hidden, m.vocab, m.seq_buckets);
+    }
+    println!("{} artifacts", registry.artifacts.len());
+    let mut by_stage: std::collections::BTreeMap<&str, usize> =
+        Default::default();
+    for a in registry.artifacts.values() {
+        *by_stage.entry(a.stage.as_str()).or_default() += 1;
+    }
+    for (s, n) in by_stage {
+        println!("  {s}: {n}");
+    }
+    Ok(())
+}
+
+fn cmd_golden(args: &Args, cfg: &Config) -> Result<()> {
+    let registry = open_registry(cfg)?;
+    let model = args.str_or("model", "sim-llama");
+    let report = crate::eval::golden::run_golden(&registry, &model)?;
+    println!("{report}");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Feature extraction for head clustering: block-averaged attention map →
+//! fixed-size pooled grid (dimension-independent across seq buckets) →
+//! flattened feature vector.
+
+use crate::util::math::softmax_inplace;
+
+/// Pool an `[nb, nb]` row-softmaxed attention map onto a fixed `g × g`
+/// grid by averaging cells (g defaults to 16 in the pipeline).  The map is
+/// first row-softmaxed from raw block-averaged QK values so features are
+/// scale-free.
+pub fn head_features(abar: &[f32], nb: usize, g: usize) -> Vec<f64> {
+    debug_assert_eq!(abar.len(), nb * nb);
+    let mut scores = abar.to_vec();
+    for i in 0..nb {
+        softmax_inplace(&mut scores[i * nb..(i + 1) * nb]);
+    }
+    let g = g.min(nb);
+    let mut out = vec![0f64; g * g];
+    let mut counts = vec![0usize; g * g];
+    for i in 0..nb {
+        for j in 0..nb {
+            let gi = i * g / nb;
+            let gj = j * g / nb;
+            out[gi * g + gj] += scores[i * nb + j] as f64;
+            counts[gi * g + gj] += 1;
+        }
+    }
+    for (o, c) in out.iter_mut().zip(&counts) {
+        if *c > 0 {
+            *o /= *c as f64;
+        }
+    }
+    // L2 normalize (the paper normalizes compressed representations)
+    let norm: f64 = out.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        out.iter_mut().for_each(|x| *x /= norm);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::NEG_INF;
+
+    fn causal_map(nb: usize, f: impl Fn(usize, usize) -> f32) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn features_unit_norm() {
+        let m = causal_map(8, |_, _| 1.0);
+        let f = head_features(&m, 8, 4);
+        let n: f64 = f.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((n - 1.0).abs() < 1e-9);
+        assert_eq!(f.len(), 16);
+    }
+
+    #[test]
+    fn similar_maps_have_close_features() {
+        let a = causal_map(8, |i, j| if j == 0 { 5.0 } else { 0.0 });
+        let b = causal_map(8, |i, j| if j == 0 { 4.8 } else { 0.05 });
+        let c = causal_map(8, |i, j| if i == j { 5.0 } else { 0.0 });
+        let fa = head_features(&a, 8, 4);
+        let fb = head_features(&b, 8, 4);
+        let fc = head_features(&c, 8, 4);
+        let dab = crate::linalg::euclidean(&fa, &fb);
+        let dac = crate::linalg::euclidean(&fa, &fc);
+        assert!(dab < dac, "sink≈sink ({dab}) should beat sink vs diag ({dac})");
+    }
+
+    #[test]
+    fn g_clamped_to_nb() {
+        let m = causal_map(2, |_, _| 1.0);
+        let f = head_features(&m, 2, 16);
+        assert_eq!(f.len(), 4);
+    }
+}

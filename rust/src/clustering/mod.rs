@@ -1,0 +1,19 @@
+//! Offline head clustering (paper Section 5.2 "Offline Clustering of
+//! Similar Heads") and the Figure 2 similarity analysis.
+//!
+//! Pipeline (`shareprefill cluster`): run a dense prefill on a calibration
+//! sample (the paper uses one Retr.KV sample), collect each head's
+//! block-averaged attention map, compress (block-pooled features + PCA —
+//! the linear stand-in for the paper's conv autoencoder, DESIGN.md
+//! "Substitutions"), L2-normalize, agglomerative-cluster with a distance
+//! threshold, and dissolve clusters smaller than 5 into noise.  Only the
+//! (layer, head) → cluster table is persisted; actual patterns are always
+//! constructed online from live inputs.
+
+pub mod features;
+pub mod offline;
+pub mod similarity;
+
+pub use features::head_features;
+pub use offline::{cluster_heads, load_clusters, save_clusters, HeadClusters};
+pub use similarity::{jaccard_matrix, pattern_of_map};

@@ -1,0 +1,181 @@
+//! The offline clustering pipeline + the persisted cluster table.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::linalg::cluster::{agglomerative, NOISE};
+use crate::linalg::pca::pca;
+use crate::linalg::{euclidean, Mat};
+use crate::substrate::json::{self, Json};
+
+use super::features::head_features;
+
+/// Persisted result: (layer * num_heads + head) → cluster (None = noise).
+#[derive(Debug, Clone)]
+pub struct HeadClusters {
+    pub model: String,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub num_clusters: usize,
+    pub assignment: Vec<Option<usize>>,
+}
+
+impl HeadClusters {
+    pub fn cluster_of(&self, layer: usize, head: usize) -> Option<usize> {
+        self.assignment[layer * self.num_heads + head]
+    }
+
+    /// Heads per cluster (observability).
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0; self.num_clusters];
+        for a in self.assignment.iter().flatten() {
+            s[*a] += 1;
+        }
+        s
+    }
+}
+
+/// Cluster heads from their block-averaged attention maps.
+///
+/// * `maps[i]` — head i's `[nb, nb]` raw block-averaged QK map (dense run
+///   on the calibration sample), i = layer * num_heads + head.
+/// * `grid` — pooled feature grid (paper's AE latent ≈ 64 → 16×16 grid
+///   reduced to `pca_dims`).
+/// * `threshold` — agglomerative distance threshold.
+/// * `min_size` — clusters smaller than this become noise (paper: 5).
+pub fn cluster_heads(model: &str, num_layers: usize, num_heads: usize,
+                     maps: &[Vec<f32>], nb: usize, grid: usize,
+                     pca_dims: usize, threshold: f64, min_size: usize)
+                     -> HeadClusters {
+    assert_eq!(maps.len(), num_layers * num_heads);
+    let feats: Vec<Vec<f64>> =
+        maps.iter().map(|m| head_features(m, nb, grid)).collect();
+    let x = Mat::from_rows(feats);
+    let (scores, _) = pca(&x, pca_dims);
+    // L2-normalize the compressed representations (as the paper does)
+    let mut rows: Vec<Vec<f64>> = (0..scores.rows)
+        .map(|i| scores.row(i).to_vec())
+        .collect();
+    for r in rows.iter_mut() {
+        let n: f64 = r.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if n > 0.0 {
+            r.iter_mut().for_each(|x| *x /= n);
+        }
+    }
+    let c = agglomerative(rows.len(), threshold, min_size,
+                          |i, j| euclidean(&rows[i], &rows[j]));
+    HeadClusters {
+        model: model.to_string(),
+        num_layers,
+        num_heads,
+        num_clusters: c.num_clusters,
+        assignment: c.assignment.iter()
+            .map(|&a| if a == NOISE { None } else { Some(a) })
+            .collect(),
+    }
+}
+
+pub fn save_clusters(hc: &HeadClusters, path: &Path) -> Result<()> {
+    let assignment: Vec<Json> = hc.assignment.iter()
+        .map(|a| match a {
+            Some(c) => Json::num(*c as f64),
+            None => Json::num(-1.0),
+        })
+        .collect();
+    let j = Json::obj(vec![
+        ("model", Json::str(hc.model.clone())),
+        ("num_layers", Json::num(hc.num_layers as f64)),
+        ("num_heads", Json::num(hc.num_heads as f64)),
+        ("num_clusters", Json::num(hc.num_clusters as f64)),
+        ("assignment", Json::Arr(assignment)),
+    ]);
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+pub fn load_clusters(path: &Path) -> Result<HeadClusters> {
+    let j = json::parse(&std::fs::read_to_string(path)?)?;
+    let num_layers = j.req("num_layers")?.as_usize()?;
+    let num_heads = j.req("num_heads")?.as_usize()?;
+    let assignment: Vec<Option<usize>> = j.req("assignment")?
+        .as_arr()?
+        .iter()
+        .map(|v| {
+            let n = v.as_f64()?;
+            Ok(if n < 0.0 { None } else { Some(n as usize) })
+        })
+        .collect::<Result<_>>()?;
+    if assignment.len() != num_layers * num_heads {
+        bail!("cluster table length mismatch");
+    }
+    Ok(HeadClusters {
+        model: j.req("model")?.as_str()?.to_string(),
+        num_layers,
+        num_heads,
+        num_clusters: j.req("num_clusters")?.as_usize()?,
+        assignment,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::NEG_INF;
+
+    fn sink_map(nb: usize, strength: f32) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = if j == 0 { strength } else { 0.0 };
+            }
+        }
+        m
+    }
+
+    fn diag_map(nb: usize) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = if j == i { 5.0 } else { 0.0 };
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn groups_sink_and_diag_heads() {
+        let nb = 8;
+        // 2 layers × 4 heads: heads 0,1 sink-like, heads 2,3 diagonal-like
+        let mut maps = Vec::new();
+        for _layer in 0..2 {
+            maps.push(sink_map(nb, 5.0));
+            maps.push(sink_map(nb, 4.5));
+            maps.push(diag_map(nb));
+            maps.push(diag_map(nb));
+        }
+        let hc = cluster_heads("m", 2, 4, &maps, nb, 4, 8, 0.5, 2);
+        assert!(hc.num_clusters >= 2, "found {}", hc.num_clusters);
+        // sink heads in both layers share a cluster
+        assert_eq!(hc.cluster_of(0, 0), hc.cluster_of(1, 1));
+        assert_eq!(hc.cluster_of(0, 2), hc.cluster_of(1, 3));
+        assert_ne!(hc.cluster_of(0, 0), hc.cluster_of(0, 2));
+    }
+
+    #[test]
+    fn roundtrip_persistence() {
+        let hc = HeadClusters {
+            model: "m".into(),
+            num_layers: 1,
+            num_heads: 3,
+            num_clusters: 1,
+            assignment: vec![Some(0), None, Some(0)],
+        };
+        let path = std::env::temp_dir().join("hc_test.json");
+        save_clusters(&hc, &path).unwrap();
+        let back = load_clusters(&path).unwrap();
+        assert_eq!(back.assignment, hc.assignment);
+        assert_eq!(back.num_clusters, 1);
+        assert_eq!(back.sizes(), vec![2]);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,85 @@
+//! Figure 2 machinery: binarized patterns from attention maps and the
+//! head × head Jaccard similarity matrix.
+
+use crate::attention::BlockMask;
+use crate::util::math::{cumulative_select, softmax_inplace};
+
+/// Binarize an `[nb, nb]` raw block-averaged QK map into a pattern via the
+/// same row-softmax + flatten + cumulative-γ selection Alg. 2 uses.
+pub fn pattern_of_map(abar: &[f32], nb: usize, gamma: f32) -> BlockMask {
+    let mut scores = abar.to_vec();
+    for i in 0..nb {
+        softmax_inplace(&mut scores[i * nb..(i + 1) * nb]);
+    }
+    let total: f32 = scores.iter().sum();
+    if total > 0.0 {
+        scores.iter_mut().for_each(|x| *x /= total);
+    }
+    let mut mask = BlockMask::empty(nb);
+    for flat in cumulative_select(&scores, gamma) {
+        mask.insert(flat / nb, flat % nb);
+    }
+    mask
+}
+
+/// Pairwise Jaccard similarity of patterns: `[n, n]` row-major.
+pub fn jaccard_matrix(patterns: &[BlockMask]) -> Vec<f64> {
+    let n = patterns.len();
+    let mut m = vec![0f64; n * n];
+    for i in 0..n {
+        m[i * n + i] = 1.0;
+        for j in (i + 1)..n {
+            let s = patterns[i].jaccard(&patterns[j]);
+            m[i * n + j] = s;
+            m[j * n + i] = s;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::NEG_INF;
+
+    fn map_with(nb: usize, hot: &[(usize, usize)]) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = 0.0;
+            }
+        }
+        for &(i, j) in hot {
+            m[i * nb + j] = 8.0;
+        }
+        m
+    }
+
+    #[test]
+    fn pattern_selects_hot_blocks() {
+        let nb = 4;
+        let m = map_with(nb, &[(2, 0), (3, 0)]);
+        let p = pattern_of_map(&m, nb, 0.5);
+        assert!(p.contains(2, 0));
+        assert!(p.contains(3, 0));
+        assert!(p.density() < 1.0);
+    }
+
+    #[test]
+    fn matrix_symmetric_unit_diagonal() {
+        let nb = 4;
+        let a = pattern_of_map(&map_with(nb, &[(2, 0)]), nb, 0.6);
+        let b = pattern_of_map(&map_with(nb, &[(3, 3)]), nb, 0.6);
+        let c = pattern_of_map(&map_with(nb, &[(2, 0)]), nb, 0.6);
+        let m = jaccard_matrix(&[a, b, c]);
+        for i in 0..3 {
+            assert!((m[i * 3 + i] - 1.0).abs() < 1e-12);
+            for j in 0..3 {
+                assert!((m[i * 3 + j] - m[j * 3 + i]).abs() < 1e-12);
+            }
+        }
+        // identical patterns 0 and 2 more similar than 0 and 1
+        assert!(m[2] > m[1]);
+        assert!((m[2] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,236 @@
+//! Config system: method hyper-parameters (the paper's τ, δ, γ), serving
+//! parameters, and path wiring.  Loaded from a TOML file (`--config`) with
+//! CLI overrides; every field has the paper's default.
+
+use crate::substrate::{cli::Args, tomlmini};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Which sparse-attention method drives prefill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MethodKind {
+    /// Dense FlashAttention-2 baseline.
+    Flash,
+    /// MInference: per-head dynamic vertical-slash (default config of the
+    /// paper's comparison).
+    MInference,
+    /// FlexPrefill: pooled query-aware block patterns + vslash fallback.
+    FlexPrefill,
+    /// The paper's contribution.
+    SharePrefill,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "flash" | "flashattn" | "dense" => MethodKind::Flash,
+            "minference" => MethodKind::MInference,
+            "flexprefill" | "flex" => MethodKind::FlexPrefill,
+            "shareprefill" | "ours" | "share" => MethodKind::SharePrefill,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Flash => "FlashAttn",
+            MethodKind::MInference => "MInference",
+            MethodKind::FlexPrefill => "FlexPrefill",
+            MethodKind::SharePrefill => "SharePrefill",
+        }
+    }
+
+    pub fn all() -> [MethodKind; 4] {
+        [MethodKind::Flash, MethodKind::MInference, MethodKind::FlexPrefill,
+         MethodKind::SharePrefill]
+    }
+}
+
+/// Hyper-parameters of the pattern engine (paper Section 6.1 defaults).
+#[derive(Debug, Clone)]
+pub struct MethodConfig {
+    pub kind: MethodKind,
+    /// Similarity threshold τ (JS distance below which patterns are shared).
+    pub tau: f64,
+    /// Sparsity threshold δ (JS distance to uniform above which a head is
+    /// "highly sparse" and excluded from sharing).
+    pub delta: f64,
+    /// Cumulative attention threshold γ for pattern construction.
+    /// Paper default is 0.9 on 128K-context 8B models; on this testbed's
+    /// tiny models / short buckets the attention distributions are flatter,
+    /// so γ=0.65 reproduces the paper's *kept-density regime* (~10–40%
+    /// of blocks).  Pass --gamma 0.9 for the literal paper value.
+    pub gamma: f32,
+    /// FlexPrefill's pattern-decision threshold (its own τ).
+    pub flex_tau: f64,
+    /// Path to the offline cluster file (SharePrefill only).
+    pub clusters_file: Option<PathBuf>,
+}
+
+impl Default for MethodConfig {
+    fn default() -> Self {
+        MethodConfig {
+            kind: MethodKind::SharePrefill,
+            tau: 0.2,
+            delta: 0.3,
+            gamma: 0.65,
+            flex_tau: 0.1,
+            clusters_file: None,
+        }
+    }
+}
+
+/// Serving engine parameters.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Token budget per prefill batch admitted by the dynamic batcher.
+    pub max_batch_tokens: usize,
+    /// Max requests admitted per scheduling round.
+    pub max_batch_requests: usize,
+    /// Queue capacity before admission rejects.
+    pub queue_capacity: usize,
+    /// Decode steps per request after prefill.
+    pub decode_tokens: usize,
+    /// KV cache capacity in blocks (paged allocator).
+    pub kv_blocks: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch_tokens: 8192,
+            max_batch_requests: 8,
+            queue_capacity: 256,
+            decode_tokens: 8,
+            kv_blocks: 1024,
+        }
+    }
+}
+
+/// Paths to build outputs.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Paths { artifacts: PathBuf::from("artifacts") }
+    }
+}
+
+/// Full runtime configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub method: MethodConfig,
+    pub serve: ServeConfig,
+    pub paths: Paths,
+}
+
+impl Config {
+    /// Load from optional TOML file, then apply CLI overrides.
+    pub fn load(args: &Args) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.opt("config") {
+            let text = std::fs::read_to_string(path)?;
+            cfg.apply_toml(&tomlmini::parse(&text)?)?;
+        }
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, t: &tomlmini::Toml) -> Result<()> {
+        if let Some(v) = t.get("method.kind") {
+            self.method.kind = MethodKind::parse(v.as_str()?)?;
+        }
+        self.method.tau = t.f64_or("method.tau", self.method.tau);
+        self.method.delta = t.f64_or("method.delta", self.method.delta);
+        self.method.gamma = t.f64_or("method.gamma",
+                                     self.method.gamma as f64) as f32;
+        self.method.flex_tau = t.f64_or("method.flex_tau",
+                                        self.method.flex_tau);
+        if let Some(v) = t.get("method.clusters_file") {
+            self.method.clusters_file = Some(PathBuf::from(v.as_str()?));
+        }
+        self.serve.max_batch_tokens =
+            t.usize_or("serve.max_batch_tokens", self.serve.max_batch_tokens);
+        self.serve.max_batch_requests = t.usize_or(
+            "serve.max_batch_requests", self.serve.max_batch_requests);
+        self.serve.queue_capacity =
+            t.usize_or("serve.queue_capacity", self.serve.queue_capacity);
+        self.serve.decode_tokens =
+            t.usize_or("serve.decode_tokens", self.serve.decode_tokens);
+        self.serve.kv_blocks =
+            t.usize_or("serve.kv_blocks", self.serve.kv_blocks);
+        if let Some(v) = t.get("paths.artifacts") {
+            self.paths.artifacts = PathBuf::from(v.as_str()?);
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(m) = args.opt("method") {
+            self.method.kind = MethodKind::parse(m)?;
+        }
+        self.method.tau = args.f64_or("tau", self.method.tau)?;
+        self.method.delta = args.f64_or("delta", self.method.delta)?;
+        self.method.gamma = args.f64_or("gamma",
+                                        self.method.gamma as f64)? as f32;
+        if let Some(p) = args.opt("clusters") {
+            self.method.clusters_file = Some(PathBuf::from(p));
+        }
+        if let Some(p) = args.opt("artifacts") {
+            self.paths.artifacts = PathBuf::from(p);
+        }
+        self.serve.decode_tokens =
+            args.usize_or("decode-tokens", self.serve.decode_tokens)?;
+        self.serve.max_batch_tokens =
+            args.usize_or("max-batch-tokens", self.serve.max_batch_tokens)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.method.kind, MethodKind::SharePrefill);
+        assert!((c.method.tau - 0.2).abs() < 1e-12);
+        assert!((c.method.delta - 0.3).abs() < 1e-12);
+        assert!((c.method.gamma - 0.65).abs() < 1e-6);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let t = tomlmini::parse(
+            "[method]\nkind = \"flexprefill\"\ntau = 0.5\n\
+             [serve]\ndecode_tokens = 3\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&t).unwrap();
+        assert_eq!(c.method.kind, MethodKind::FlexPrefill);
+        assert!((c.method.tau - 0.5).abs() < 1e-12);
+        assert_eq!(c.serve.decode_tokens, 3);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["x", "--method", "flash", "--gamma", "0.8"]
+                .map(String::from), &[]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.method.kind, MethodKind::Flash);
+        assert!((c.method.gamma - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn method_parse_aliases() {
+        assert_eq!(MethodKind::parse("ours").unwrap(),
+                   MethodKind::SharePrefill);
+        assert_eq!(MethodKind::parse("dense").unwrap(), MethodKind::Flash);
+        assert!(MethodKind::parse("bogus").is_err());
+    }
+}

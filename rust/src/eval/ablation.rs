@@ -1,0 +1,105 @@
+//! Table 2: ablation variants of SharePrefill.
+//!
+//! * "Ours w/o Sharing"  — τ = 0 (pure vertical-slash, no pivotal sharing)
+//! * "Ours w/o Exclusion" — δ = 1.01 (highly sparse heads also share)
+//! * "Ours"               — paper defaults τ=0.2, δ=0.3
+//!
+//! Reports the task-suite scores plus the prefill latency at the largest
+//! bucket (the paper's "128K latency" column, scaled to this testbed).
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::runtime::Registry;
+use crate::util::ascii::markdown_table;
+use crate::workloads::tasks::{Task, TASK_NAMES};
+
+use super::infinitebench::run_table1;
+use super::latency::run_latency;
+
+pub struct AblationRow {
+    pub name: &'static str,
+    pub tau: f64,
+    pub delta: f64,
+    pub scores: Vec<(String, f64)>,
+    pub avg: f64,
+    pub max_ctx_latency_ms: f64,
+}
+
+pub fn run_ablation(registry: &Rc<Registry>, cfg: &Config, model: &str,
+                    tasks: &[Task], samples_per_task: usize,
+                    ctx_len: usize, latency_ctx: usize)
+                    -> Result<Vec<AblationRow>> {
+    let variants: [(&'static str, f64, f64); 3] = [
+        ("Ours w/o Sharing (tau=0)", 0.0, cfg.method.delta),
+        ("Ours w/o Exclusion (delta=1.01)", cfg.method.tau, 1.01),
+        ("Ours", cfg.method.tau, cfg.method.delta),
+    ];
+    let mut rows = Vec::new();
+    for (name, tau, delta) in variants {
+        let mut vcfg = cfg.clone();
+        vcfg.method.tau = tau;
+        vcfg.method.delta = delta;
+        let t1 = run_table1(registry, &vcfg, model,
+                            &[MethodKind::SharePrefill], tasks,
+                            samples_per_task, ctx_len)?;
+        let lat = run_latency(registry, &vcfg, model,
+                              &[MethodKind::SharePrefill], &[latency_ctx],
+                              1)?;
+        let scores: Vec<(String, f64)> = t1.scores
+            [&MethodKind::SharePrefill]
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        rows.push(AblationRow {
+            name,
+            tau,
+            delta,
+            avg: t1.average(MethodKind::SharePrefill),
+            scores,
+            max_ctx_latency_ms: lat.curves[&MethodKind::SharePrefill][0].0,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[AblationRow], ctx_len: usize, latency_ctx: usize)
+              -> String {
+    let mut headers = vec!["Variant"];
+    let task_names: Vec<&str> = TASK_NAMES.iter().map(|(_, n)| *n).collect();
+    headers.extend(task_names.iter());
+    headers.extend(["Avg", "latency ms"]);
+    let table_rows: Vec<Vec<String>> = rows.iter().map(|r| {
+        let mut row = vec![r.name.to_string()];
+        for n in &task_names {
+            let v = r.scores.iter().find(|(k, _)| k == n)
+                .map(|(_, v)| *v).unwrap_or(0.0);
+            row.push(format!("{v:.1}"));
+        }
+        row.push(format!("{:.1}", r.avg));
+        row.push(format!("{:.0}", r.max_ctx_latency_ms));
+        row
+    }).collect();
+    format!("### Table 2 — ablations @ ctx {} (latency @ {})\n\n{}",
+            ctx_len, latency_ctx, markdown_table(&headers, &table_rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_variants_and_latency() {
+        let rows = vec![AblationRow {
+            name: "Ours",
+            tau: 0.2,
+            delta: 0.3,
+            scores: vec![("En.Sum".into(), 88.0)],
+            avg: 88.0,
+            max_ctx_latency_ms: 123.0,
+        }];
+        let r = render(&rows, 1024, 4096);
+        assert!(r.contains("Ours") && r.contains("123") && r.contains("88.0"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Golden-vector integration check: replay the oracle vectors emitted by
+//! aot.py through the *compiled artifacts* and compare — proves the whole
+//! AOT chain (Pallas kernel → HLO text → PJRT compile → rust execute)
+//! preserves numerics.
+
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+use crate::runtime::{Registry, Tensor};
+use crate::substrate::tenstore::TenStore;
+
+fn max_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b)
+        .map(|(x, y)| {
+            // -1e30 encodes -inf in the golden file
+            if *y <= -1e29 && !x.is_finite() { 0.0 } else { (x - y).abs() }
+        })
+        .fold(0f32, f32::max)
+}
+
+pub fn run_golden(registry: &Rc<Registry>, model: &str) -> Result<String> {
+    let spec = registry.model(model)?.clone();
+    let path = registry.dir.join(format!("golden-{model}.bin"));
+    let g = TenStore::load(&path)?;
+    let seq = g.get("seq")?.data[0] as usize;
+    let nb = seq / crate::BLOCK_SIZE;
+    let t = |n: &str| -> Result<Tensor> {
+        let s = g.get(n)?;
+        Ok(Tensor::f32(s.shape.clone(), s.data.clone()))
+    };
+    let ti = |n: &str, shape: Vec<usize>| -> Result<Tensor> {
+        let s = g.get(n)?;
+        Ok(Tensor::i32(shape, s.data.iter().map(|&x| x as i32).collect()))
+    };
+    let mut report = String::new();
+    fn check(report: &mut String, name: &str, got: &[f32], want: &[f32],
+             atol: f32) -> Result<()> {
+        let e = max_err(got, want);
+        report.push_str(&format!("{name}: max err {e:.2e}\n"));
+        if e > atol {
+            bail!("golden check '{name}' failed: {e} > {atol}");
+        }
+        Ok(())
+    }
+
+    // dense attention (budget = nb)
+    let art = format!("{}_attn_s{}_b{}", spec.prefix, seq, nb);
+    let out = registry.execute(&art, &[
+        t("q")?, t("k")?, t("v")?,
+        ti("dense_idx", vec![nb, nb])?, t("dense_valid")?,
+    ])?;
+    check(&mut report, "dense o", out[0].as_f32()?, g.get("dense_o")?.data.as_slice(),
+          5e-4)?;
+    check(&mut report, "dense abar", out[1].as_f32()?,
+          g.get("dense_abar")?.data.as_slice(), 5e-4)?;
+
+    // sparse attention at the golden budget
+    let b = g.get("sparse_idx")?.shape[1];
+    let art = format!("{}_attn_s{}_b{}", spec.prefix, seq, b);
+    if registry.artifacts.contains_key(&art) {
+        let out = registry.execute(&art, &[
+            t("q")?, t("k")?, t("v")?,
+            ti("sparse_idx", vec![nb, b])?, t("sparse_valid")?,
+        ])?;
+        check(&mut report, "sparse o", out[0].as_f32()?,
+              g.get("sparse_o")?.data.as_slice(), 5e-4)?;
+        check(&mut report, "sparse abar", out[1].as_f32()?,
+              g.get("sparse_abar")?.data.as_slice(), 5e-4)?;
+    } else {
+        report.push_str(&format!("sparse: no artifact {art}, skipped\n"));
+    }
+
+    // pattern probe
+    let art = format!("{}_patternprobe_s{}", spec.prefix, seq);
+    let out = registry.execute(&art, &[t("probe_qh")?, t("probe_k")?])?;
+    check(&mut report, "pattern probe", out[0].as_f32()?,
+          g.get("probe_ahat")?.data.as_slice(), 5e-5)?;
+
+    // flex probe
+    let art = format!("{}_flexprobe_s{}", spec.prefix, seq);
+    let out = registry.execute(&art, &[t("flex_q")?, t("probe_k")?])?;
+    check(&mut report, "flex probe", out[0].as_f32()?,
+          g.get("flex_map")?.data.as_slice(), 5e-5)?;
+
+    report.push_str("golden OK\n");
+    Ok(report)
+}

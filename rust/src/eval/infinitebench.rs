@@ -1,0 +1,177 @@
+//! Table 1: InfiniteBench-sim scores for every method × task.
+//!
+//! Exact-match tasks score retrieval accuracy directly; open-ended tasks
+//! score generation fidelity against the FlashAttention reference (the
+//! accuracy-preservation quantity Table 1 tracks).  FlashAttn's own row
+//! reports 100 on fidelity tasks by construction — it *is* the reference —
+//! matching the paper's framing of dense attention as the upper bound.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::runtime::Registry;
+use crate::util::ascii::markdown_table;
+use crate::workloads::scoring::{exact_match, fidelity};
+use crate::workloads::tasks::{task_samples, Task, TASK_NAMES};
+
+use super::build_engine;
+
+/// Scores per method per task (+ average), plus pattern stats.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub model: String,
+    pub ctx_len: usize,
+    /// method → task name → score.
+    pub scores: BTreeMap<MethodKind, BTreeMap<&'static str, f64>>,
+    /// method → mean prefill density.
+    pub density: BTreeMap<MethodKind, f64>,
+    /// method → mean prefill latency (ms).
+    pub prefill_ms: BTreeMap<MethodKind, f64>,
+}
+
+impl Table1 {
+    pub fn average(&self, m: MethodKind) -> f64 {
+        let s = &self.scores[&m];
+        s.values().sum::<f64>() / s.len().max(1) as f64
+    }
+
+    pub fn render(&self) -> String {
+        // only the tasks actually evaluated
+        let names: Vec<&'static str> = TASK_NAMES.iter()
+            .filter(|(_, n)| self.scores.values()
+                .next().map_or(false, |s| s.contains_key(n)))
+            .map(|(_, n)| *n)
+            .collect();
+        let mut rows = Vec::new();
+        for (m, scores) in &self.scores {
+            let mut row = vec![m.name().to_string()];
+            for name in &names {
+                row.push(format!("{:.1}", scores.get(name).unwrap_or(&0.0)));
+            }
+            row.push(format!("{:.1}", self.average(*m)));
+            row.push(format!("{:.0}", self.prefill_ms[m]));
+            row.push(format!("{:.2}", self.density[m]));
+            rows.push(row);
+        }
+        let mut headers = vec!["Method"];
+        headers.extend(names.iter());
+        headers.extend(["Avg", "prefill ms", "density"]);
+        format!("### Table 1 — {} @ ctx {}\n\n{}",
+                self.model, self.ctx_len, markdown_table(&headers, &rows))
+    }
+}
+
+/// Run the suite.  `samples_per_task` trades runtime for variance.
+pub fn run_table1(registry: &Rc<Registry>, cfg: &Config, model: &str,
+                  methods: &[MethodKind], tasks: &[Task],
+                  samples_per_task: usize, ctx_len: usize)
+                  -> Result<Table1> {
+    // 1) dense reference generations (also FlashAttn's timing row)
+    let mut reference: BTreeMap<(usize, usize), Vec<i32>> = BTreeMap::new();
+    let mut out = Table1 {
+        model: model.to_string(),
+        ctx_len,
+        scores: BTreeMap::new(),
+        density: BTreeMap::new(),
+        prefill_ms: BTreeMap::new(),
+    };
+    // ensure Flash runs first so references exist
+    let mut ordered: Vec<MethodKind> = vec![MethodKind::Flash];
+    ordered.extend(methods.iter().copied()
+        .filter(|&m| m != MethodKind::Flash));
+
+    for kind in ordered {
+        let wanted = kind == MethodKind::Flash
+            || methods.contains(&kind);
+        let mut engine = build_engine(registry, cfg, model, kind)?;
+        let mut scores: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let mut dens = 0f64;
+        let mut lat_ms = 0f64;
+        let mut n_runs = 0usize;
+        for (ti, task) in tasks.iter().enumerate() {
+            let samples = task_samples(*task, samples_per_task, ctx_len);
+            let mut task_score = 0f64;
+            for (si, s) in samples.iter().enumerate() {
+                let pre = engine.prefill(&s.prompt)?;
+                dens += pre.stats.density();
+                lat_ms += pre.stats.latency_us as f64 / 1e3;
+                n_runs += 1;
+                let (generated, _) = engine.decode(&pre, s.gen_tokens)?;
+                // Scoring: exact-match where the dense reference itself
+                // retrieves correctly (the paper's absolute metric);
+                // otherwise generation fidelity vs. the dense reference
+                // (accuracy preservation) — so the comparison stays
+                // informative even where the tiny model's absolute task
+                // ability saturates (DESIGN.md "Substitutions").
+                let score = if kind == MethodKind::Flash {
+                    reference.insert((ti, si), generated.clone());
+                    match &s.answer {
+                        // if dense retrieves, it scores 100 by definition;
+                        // if not, it is still the fidelity reference (100)
+                        Some(_) | None => 100.0,
+                    }
+                } else {
+                    let rf = reference.get(&(ti, si))
+                        .map(Vec::as_slice).unwrap_or(&[]);
+                    match &s.answer {
+                        Some(ans) if exact_match(rf, ans) > 0.0 => {
+                            exact_match(&generated, ans)
+                        }
+                        _ => fidelity(&generated, rf),
+                    }
+                };
+                task_score += score;
+            }
+            scores.insert(task.name(),
+                          task_score / samples.len().max(1) as f64);
+        }
+        if wanted {
+            out.scores.insert(kind, scores);
+            out.density.insert(kind, dens / n_runs.max(1) as f64);
+            out.prefill_ms.insert(kind, lat_ms / n_runs.max(1) as f64);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t1() -> Table1 {
+        let mut scores = BTreeMap::new();
+        let mut flash = BTreeMap::new();
+        flash.insert("En.Sum", 100.0);
+        flash.insert("Retr.KV", 100.0);
+        let mut ours = BTreeMap::new();
+        ours.insert("En.Sum", 90.0);
+        ours.insert("Retr.KV", 80.0);
+        scores.insert(MethodKind::Flash, flash);
+        scores.insert(MethodKind::SharePrefill, ours);
+        let mut density = BTreeMap::new();
+        density.insert(MethodKind::Flash, 1.0);
+        density.insert(MethodKind::SharePrefill, 0.6);
+        let mut ms = BTreeMap::new();
+        ms.insert(MethodKind::Flash, 100.0);
+        ms.insert(MethodKind::SharePrefill, 70.0);
+        Table1 { model: "m".into(), ctx_len: 512, scores, density,
+                 prefill_ms: ms }
+    }
+
+    #[test]
+    fn average_over_evaluated_tasks() {
+        let t = t1();
+        assert!((t.average(MethodKind::SharePrefill) - 85.0).abs() < 1e-9);
+        assert!((t.average(MethodKind::Flash) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn render_only_evaluated_columns() {
+        let r = t1().render();
+        assert!(r.contains("En.Sum") && r.contains("Retr.KV"));
+        assert!(!r.contains("Math.Find"), "unevaluated task leaked:\n{r}");
+        assert!(r.contains("SharePrefill"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Figure 5 (latency vs. context length) and the Figure 1 tradeoff data.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::runtime::Registry;
+use crate::util::ascii::markdown_table;
+use crate::workloads::tasks::latency_prompt;
+
+use super::build_engine;
+
+#[derive(Debug, Clone)]
+pub struct LatencyCurves {
+    pub model: String,
+    pub ctx_lens: Vec<usize>,
+    /// method → (mean prefill ms per ctx, mean density per ctx).
+    pub curves: BTreeMap<MethodKind, Vec<(f64, f64)>>,
+}
+
+impl LatencyCurves {
+    pub fn render(&self) -> String {
+        let mut rows = Vec::new();
+        for (m, c) in &self.curves {
+            let mut row = vec![m.name().to_string()];
+            row.extend(c.iter().map(|(ms, d)| format!("{ms:.0} ({d:.2})")));
+            rows.push(row);
+        }
+        let mut headers = vec!["Method".to_string()];
+        headers.extend(self.ctx_lens.iter().map(|l| format!("{l} tok")));
+        let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+        format!("### Figure 5 — prefill latency ms (density), {}\n\n{}",
+                self.model, markdown_table(&href, &rows))
+    }
+
+    /// Speedup of each method vs. FlashAttn at the longest context.
+    pub fn speedups(&self) -> BTreeMap<MethodKind, f64> {
+        let flash = self.curves.get(&MethodKind::Flash)
+            .and_then(|c| c.last())
+            .map(|(ms, _)| *ms)
+            .unwrap_or(0.0);
+        self.curves.iter()
+            .map(|(m, c)| (*m, flash / c.last().map(|(ms, _)| *ms)
+                .unwrap_or(1.0)))
+            .collect()
+    }
+}
+
+/// Prefill-latency sweep with warmup (compile excluded from timing).
+pub fn run_latency(registry: &Rc<Registry>, cfg: &Config, model: &str,
+                   methods: &[MethodKind], ctx_lens: &[usize],
+                   repeats: usize) -> Result<LatencyCurves> {
+    let mut curves = BTreeMap::new();
+    for &kind in methods {
+        let mut engine = build_engine(registry, cfg, model, kind)?;
+        let mut curve = Vec::new();
+        for &len in ctx_lens {
+            let prompt = latency_prompt(len);
+            // warmup (compiles artifacts for this bucket)
+            let _ = engine.prefill(&prompt)?;
+            let mut ms = 0f64;
+            let mut dens = 0f64;
+            for _ in 0..repeats {
+                let pre = engine.prefill(&prompt)?;
+                ms += pre.stats.latency_us as f64 / 1e3;
+                dens += pre.stats.density();
+            }
+            curve.push((ms / repeats.max(1) as f64,
+                        dens / repeats.max(1) as f64));
+        }
+        curves.insert(kind, curve);
+    }
+    Ok(LatencyCurves {
+        model: model.to_string(),
+        ctx_lens: ctx_lens.to_vec(),
+        curves,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedups_relative_to_flash() {
+        let mut curves = BTreeMap::new();
+        curves.insert(MethodKind::Flash, vec![(100.0, 1.0), (400.0, 1.0)]);
+        curves.insert(MethodKind::SharePrefill,
+                      vec![(90.0, 0.5), (200.0, 0.5)]);
+        let lc = LatencyCurves { model: "m".into(),
+                                 ctx_lens: vec![512, 1024], curves };
+        let s = lc.speedups();
+        assert!((s[&MethodKind::SharePrefill] - 2.0).abs() < 1e-9);
+        assert!((s[&MethodKind::Flash] - 1.0).abs() < 1e-9);
+        assert!(lc.render().contains("1024 tok"));
+    }
+}

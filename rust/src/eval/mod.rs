@@ -1,0 +1,47 @@
+//! Evaluation harnesses regenerating the paper's tables and figures
+//! (experiment index in DESIGN.md).
+
+pub mod ablation;
+pub mod infinitebench;
+pub mod latency;
+pub mod perplexity;
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::methods::build_strategy;
+use crate::runtime::{Registry, Runtime};
+use crate::serving::Engine;
+
+/// Shared setup: runtime + registry.
+pub fn open_registry(cfg: &Config) -> Result<Rc<Registry>> {
+    let rt = Rc::new(Runtime::cpu()?);
+    Ok(Rc::new(Registry::load(cfg.paths.artifacts.clone(), rt)?))
+}
+
+/// Build an engine for (model, method), loading the cluster table when one
+/// exists (SharePrefill falls back to per-index clusters otherwise).
+pub fn build_engine(registry: &Rc<Registry>, cfg: &Config, model: &str,
+                    kind: MethodKind) -> Result<Engine> {
+    let spec = registry.model(model)?.clone();
+    let mut mcfg = cfg.method.clone();
+    mcfg.kind = kind;
+    let clusters = if kind == MethodKind::SharePrefill {
+        let path = match &mcfg.clusters_file {
+            Some(p) => p.clone(),
+            None => cfg.paths.artifacts
+                .join(format!("head_clusters-{model}.json")),
+        };
+        match crate::clustering::load_clusters(&path) {
+            Ok(hc) => Some(hc.assignment),
+            Err(_) => None, // fall back to positional clusters
+        }
+    } else {
+        None
+    };
+    let strategy = build_strategy(&mcfg, spec.num_layers, spec.num_heads,
+                                  clusters);
+    Engine::new(registry.clone(), model, strategy)
+}
+pub mod golden;

@@ -1,0 +1,86 @@
+//! Figure 4: PG19-sim perplexity vs. context length per method.
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::config::{Config, MethodKind};
+use crate::runtime::Registry;
+use crate::util::ascii::{line_chart, markdown_table};
+use crate::workloads::scoring::perplexity;
+use crate::workloads::tasks::pg19_sample;
+
+use super::build_engine;
+
+#[derive(Debug, Clone)]
+pub struct PplCurves {
+    pub model: String,
+    pub ctx_lens: Vec<usize>,
+    /// method → ppl per ctx length.
+    pub curves: BTreeMap<MethodKind, Vec<f64>>,
+}
+
+impl PplCurves {
+    pub fn render(&self) -> String {
+        let mut rows = Vec::new();
+        for (m, c) in &self.curves {
+            let mut row = vec![m.name().to_string()];
+            row.extend(c.iter().map(|p| format!("{p:.3}")));
+            rows.push(row);
+        }
+        let mut headers = vec!["Method".to_string()];
+        headers.extend(self.ctx_lens.iter().map(|l| l.to_string()));
+        let href: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let series: Vec<(&str, Vec<f64>)> = self.curves.iter()
+            .map(|(m, c)| (m.name(), c.clone()))
+            .collect();
+        format!("### Figure 4 — perplexity, {}\n\n{}\n```\n{}```\n",
+                self.model, markdown_table(&href, &rows),
+                line_chart(&series, 48, 10))
+    }
+}
+
+pub fn run_ppl(registry: &Rc<Registry>, cfg: &Config, model: &str,
+               methods: &[MethodKind], ctx_lens: &[usize],
+               samples: usize) -> Result<PplCurves> {
+    let spec = registry.model(model)?.clone();
+    let mut curves = BTreeMap::new();
+    for &kind in methods {
+        let mut engine = build_engine(registry, cfg, model, kind)?;
+        let mut curve = Vec::new();
+        for &len in ctx_lens {
+            let mut acc = 0f64;
+            for s in 0..samples {
+                let tokens = pg19_sample(s as u64, len);
+                let pre = engine.prefill(&tokens)?;
+                let logits = engine.logits_full(&pre)?;
+                acc += perplexity(logits.as_f32()?, spec.vocab, &tokens,
+                                  pre.real_len);
+            }
+            curve.push(acc / samples.max(1) as f64);
+        }
+        curves.insert(kind, curve);
+    }
+    Ok(PplCurves {
+        model: model.to_string(),
+        ctx_lens: ctx_lens.to_vec(),
+        curves,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_table_and_chart() {
+        let mut curves = BTreeMap::new();
+        curves.insert(MethodKind::Flash, vec![3.0, 3.5]);
+        curves.insert(MethodKind::FlexPrefill, vec![4.0, 6.0]);
+        let c = PplCurves { model: "m".into(), ctx_lens: vec![256, 512],
+                            curves };
+        let r = c.render();
+        assert!(r.contains("FlexPrefill") && r.contains("256"));
+        assert!(r.contains("ymax"));
+    }
+}

@@ -1,0 +1,46 @@
+//! # SharePrefill
+//!
+//! Reproduction of *"Accelerating Prefilling for Long-Context LLMs via
+//! Sparse Pattern Sharing"* (Peng et al., 2025) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request router, dynamic
+//!   batcher, paged KV cache, prefill/decode scheduler, and the paper's
+//!   contribution: the [`methods`] pattern engine (offline head clustering +
+//!   online pivotal-pattern construction and sharing), plus the
+//!   FlashAttention / MInference / FlexPrefill baselines.
+//! * **L2** — a JAX transformer decomposed into weight-as-input HLO
+//!   artifacts (built once by `make artifacts`, loaded by [`runtime`]).
+//! * **L1** — Pallas block-sparse flash-attention kernels inside those
+//!   artifacts, budget-bucketed so executed FLOPs track the sparsity the
+//!   coordinator achieves.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `shareprefill` binary is self-contained (HLO text → PJRT CPU client).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every table/figure of the paper to a module + bench target.
+
+pub mod attention;
+pub mod bench;
+pub mod clustering;
+pub mod config;
+pub mod eval;
+pub mod linalg;
+pub mod methods;
+pub mod model;
+pub mod runtime;
+pub mod serving;
+pub mod substrate;
+pub mod util;
+pub mod workloads;
+
+/// Block size of the block-sparse attention grid — must match
+/// `python/compile/configs.py::BLOCK_SIZE` (checked against the manifest at
+/// load time).
+pub const BLOCK_SIZE: usize = 64;
+
+/// CLI dispatcher (implemented in `cli_main`; kept out of `main.rs` so the
+/// binary stays a thin shim and the dispatcher is unit-testable).
+pub mod cli_main;
+pub use cli_main::run_cli;

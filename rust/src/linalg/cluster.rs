@@ -1,0 +1,160 @@
+//! Agglomerative (hierarchical) clustering with average linkage and a
+//! distance threshold — the rust equivalent of the paper's
+//! `scipy.cluster.hierarchy.fcluster(..., criterion="distance")` step,
+//! including the "clusters with fewer than `min_size` members become
+//! noise" rule (Appendix A.4).
+
+/// Result of clustering: `assignment[i]` is the cluster id of sample i;
+/// id `NOISE` marks noise samples (members of dissolved small clusters).
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub assignment: Vec<usize>,
+    pub num_clusters: usize,
+}
+
+/// Cluster id used for noise samples.
+pub const NOISE: usize = usize::MAX;
+
+/// Average-linkage agglomerative clustering.
+///
+/// * `dist` — condensed pairwise distance accessor (symmetric).
+/// * `n` — number of samples.
+/// * `threshold` — stop merging when the closest pair of clusters is
+///   farther apart than this.
+/// * `min_size` — clusters smaller than this are relabeled as `NOISE`.
+pub fn agglomerative(n: usize, threshold: f64, min_size: usize,
+                     dist: impl Fn(usize, usize) -> f64) -> Clustering {
+    if n == 0 {
+        return Clustering { assignment: Vec::new(), num_clusters: 0 };
+    }
+    // active clusters: member lists
+    let mut members: Vec<Option<Vec<usize>>> =
+        (0..n).map(|i| Some(vec![i])).collect();
+    // pairwise average-linkage distances, O(n^2) memory (n = heads, small)
+    let mut d = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = dist(i, j);
+            d[i * n + j] = v;
+            d[j * n + i] = v;
+        }
+    }
+    loop {
+        // find closest active pair
+        let mut best = (f64::INFINITY, 0, 0);
+        for i in 0..n {
+            if members[i].is_none() {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if members[j].is_none() {
+                    continue;
+                }
+                if d[i * n + j] < best.0 {
+                    best = (d[i * n + j], i, j);
+                }
+            }
+        }
+        let (bd, bi, bj) = best;
+        if !bd.is_finite() || bd > threshold {
+            break;
+        }
+        // merge j into i; update average-linkage distances
+        let mj = members[bj].take().unwrap();
+        let ni = members[bi].as_ref().unwrap().len() as f64;
+        let nj = mj.len() as f64;
+        members[bi].as_mut().unwrap().extend(mj);
+        for k in 0..n {
+            if k == bi || members[k].is_none() {
+                continue;
+            }
+            let dik = d[bi * n + k];
+            let djk = d[bj * n + k];
+            let v = (ni * dik + nj * djk) / (ni + nj);
+            d[bi * n + k] = v;
+            d[k * n + bi] = v;
+        }
+    }
+    // assign ids; small clusters -> NOISE
+    let mut assignment = vec![NOISE; n];
+    let mut next_id = 0;
+    for m in members.iter().flatten() {
+        if m.len() >= min_size {
+            for &s in m {
+                assignment[s] = next_id;
+            }
+            next_id += 1;
+        }
+    }
+    Clustering { assignment, num_clusters: next_id }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::euclidean;
+
+    fn points_dist(pts: &[Vec<f64>]) -> impl Fn(usize, usize) -> f64 + '_ {
+        move |i, j| euclidean(&pts[i], &pts[j])
+    }
+
+    #[test]
+    fn two_blobs() {
+        let mut pts = Vec::new();
+        for i in 0..5 {
+            pts.push(vec![0.0 + i as f64 * 0.01, 0.0]);
+        }
+        for i in 0..5 {
+            pts.push(vec![10.0 + i as f64 * 0.01, 0.0]);
+        }
+        let c = agglomerative(10, 1.0, 2, points_dist(&pts));
+        assert_eq!(c.num_clusters, 2);
+        let a0 = c.assignment[0];
+        assert!(c.assignment[..5].iter().all(|&a| a == a0));
+        let a5 = c.assignment[5];
+        assert_ne!(a0, a5);
+        assert!(c.assignment[5..].iter().all(|&a| a == a5));
+    }
+
+    #[test]
+    fn threshold_monotone() {
+        // larger threshold merges more -> fewer (or equal) clusters
+        let pts: Vec<Vec<f64>> =
+            (0..12).map(|i| vec![i as f64, 0.0]).collect();
+        let mut prev = usize::MAX;
+        for th in [0.5, 1.5, 3.0, 20.0] {
+            let c = agglomerative(12, th, 1, points_dist(&pts));
+            assert!(c.num_clusters <= prev);
+            prev = c.num_clusters;
+        }
+    }
+
+    #[test]
+    fn small_clusters_become_noise() {
+        let pts = vec![
+            vec![0.0], vec![0.1], vec![0.2],  // blob of 3
+            vec![50.0],                        // singleton -> noise
+        ];
+        let c = agglomerative(4, 1.0, 2, points_dist(&pts));
+        assert_eq!(c.num_clusters, 1);
+        assert_eq!(c.assignment[3], NOISE);
+        assert!(c.assignment[..3].iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn partition_property() {
+        let pts: Vec<Vec<f64>> =
+            (0..8).map(|i| vec![(i % 4) as f64 * 5.0, (i / 4) as f64]).collect();
+        let c = agglomerative(8, 2.0, 1, points_dist(&pts));
+        // every sample assigned (min_size 1 -> no noise)
+        assert!(c.assignment.iter().all(|&a| a != NOISE));
+        // ids are compact
+        assert!(c.assignment.iter().all(|&a| a < c.num_clusters));
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = agglomerative(0, 1.0, 1, |_, _| 0.0);
+        assert_eq!(c.num_clusters, 0);
+    }
+}

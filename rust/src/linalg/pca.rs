@@ -1,0 +1,187 @@
+//! PCA via cyclic Jacobi eigendecomposition of the covariance matrix.
+//!
+//! This is the rust stand-in for the paper's offline conv-autoencoder
+//! (Appendix C): both compress each head's attention-score map to a
+//! low-dimensional representation before hierarchical clustering; PCA is
+//! the optimal *linear* autoencoder, and the cluster structure it feeds is
+//! what matters downstream (DESIGN.md "Substitutions").
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix by the cyclic Jacobi method.
+/// Returns (eigenvalues, eigenvectors as columns), sorted descending.
+pub fn symmetric_eig(a: &Mat, sweeps: usize) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+    for _ in 0..sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[(p, q)] * m[(p, q)];
+            }
+        }
+        if off < 1e-20 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum()
+                    / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| m[(j, j)].partial_cmp(&m[(i, i)]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vecs[(r, newc)] = v[(r, oldc)];
+        }
+    }
+    (vals, vecs)
+}
+
+/// PCA projection: rows of `x` (samples × features) → samples × k scores.
+/// Also returns the explained-variance ratio per component.
+pub fn pca(x: &Mat, k: usize) -> (Mat, Vec<f64>) {
+    let n = x.rows;
+    let d = x.cols;
+    let k = k.min(d);
+    let means = x.col_means();
+    let mut centered = x.clone();
+    for i in 0..n {
+        for j in 0..d {
+            centered[(i, j)] -= means[j];
+        }
+    }
+    // covariance d×d
+    let mut cov = Mat::zeros(d, d);
+    for i in 0..n {
+        let row = centered.row(i);
+        for a in 0..d {
+            let ra = row[a];
+            if ra == 0.0 {
+                continue;
+            }
+            for b in a..d {
+                cov[(a, b)] += ra * row[b];
+            }
+        }
+    }
+    for a in 0..d {
+        for b in a..d {
+            let v = cov[(a, b)] / (n.max(2) - 1) as f64;
+            cov[(a, b)] = v;
+            cov[(b, a)] = v;
+        }
+    }
+    let (vals, vecs) = symmetric_eig(&cov, 30);
+    let total: f64 = vals.iter().map(|v| v.max(0.0)).sum::<f64>().max(1e-30);
+    let ratios: Vec<f64> =
+        vals.iter().take(k).map(|v| v.max(0.0) / total).collect();
+    // scores = centered · vecs[:, :k]
+    let mut proj = Mat::zeros(d, k);
+    for r in 0..d {
+        for c in 0..k {
+            proj[(r, c)] = vecs[(r, c)];
+        }
+    }
+    (centered.matmul(&proj), ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eig_of_diagonal() {
+        let a = Mat::from_rows(vec![vec![3.0, 0.0], vec![0.0, 1.0]]);
+        let (vals, _) = symmetric_eig(&a, 10);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = symmetric_eig(&a, 20);
+        assert!((vals[0] - 3.0).abs() < 1e-9);
+        assert!((vals[1] - 1.0).abs() < 1e-9);
+        // eigenvector for 3 is (1,1)/sqrt(2)
+        let ratio = vecs[(0, 0)] / vecs[(1, 0)];
+        assert!((ratio - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let a = Mat::from_rows(vec![
+            vec![4.0, 1.0, 0.5],
+            vec![1.0, 3.0, 0.2],
+            vec![0.5, 0.2, 1.0],
+        ]);
+        let (vals, vecs) = symmetric_eig(&a, 30);
+        // A·v = λ·v for each column
+        for c in 0..3 {
+            for r in 0..3 {
+                let av: f64 = (0..3).map(|k| a[(r, k)] * vecs[(k, c)]).sum();
+                assert!((av - vals[c] * vecs[(r, c)]).abs() < 1e-8,
+                        "col {c} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pca_finds_dominant_direction() {
+        // points along (1, 1) with small noise in (1, -1)
+        let mut rows = Vec::new();
+        for i in 0..50 {
+            let t = i as f64 / 10.0;
+            let noise = if i % 2 == 0 { 0.01 } else { -0.01 };
+            rows.push(vec![t + noise, t - noise]);
+        }
+        let x = Mat::from_rows(rows);
+        let (scores, ratios) = pca(&x, 2);
+        assert!(ratios[0] > 0.99, "ratios {ratios:?}");
+        assert_eq!(scores.rows, 50);
+        assert_eq!(scores.cols, 2);
+    }
+
+    #[test]
+    fn pca_k_larger_than_dims_clamped() {
+        let x = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 4.0]]);
+        let (scores, _) = pca(&x, 10);
+        assert_eq!(scores.cols, 2);
+    }
+}

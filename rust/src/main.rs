@@ -1,0 +1,19 @@
+//! `shareprefill` — CLI entry point.
+//!
+//! Subcommands (see `--help`):
+//!   serve      run the serving engine on a synthetic request stream
+//!   eval       InfiniteBench-sim task suite (Table 1)
+//!   ablate     ablation variants (Table 2)
+//!   ppl        PG19-sim perplexity sweep (Figure 4)
+//!   latency    prefill latency sweep (Figure 5)
+//!   patterns   attention-pattern / similarity / distribution dumps
+//!              (Figures 2 & 6)
+//!   cluster    offline head clustering -> artifacts/head_clusters-*.json
+//!   inspect    artifact registry / manifest info
+
+fn main() {
+    if let Err(e) = shareprefill::run_cli() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,46 @@
+//! FlashAttention-2 baseline: exact dense causal attention for every head.
+//! The budgeted kernel at budget = NB with full causal indices *is* a
+//! blocked flash attention; no probes, no pattern search.
+
+use anyhow::Result;
+
+use crate::config::MethodKind;
+
+use super::{HeadPlan, PatternStrategy, Probes};
+
+#[derive(Default)]
+pub struct Flash;
+
+impl Flash {
+    pub fn new() -> Flash {
+        Flash
+    }
+}
+
+impl PatternStrategy for Flash {
+    fn kind(&self) -> MethodKind {
+        MethodKind::Flash
+    }
+
+    fn begin_request(&mut self, _seq: usize) {}
+
+    fn plan_layer(&mut self, _layer: usize, _seq: usize, num_heads: usize,
+                  _probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+        Ok((0..num_heads).map(|_| HeadPlan::dense(false)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::tests_support::NoProbes;
+
+    #[test]
+    fn all_heads_dense_no_probes() {
+        let mut f = Flash::new();
+        f.begin_request(1024);
+        let plans = f.plan_layer(0, 1024, 8, &mut NoProbes).unwrap();
+        assert_eq!(plans.len(), 8);
+        assert!(plans.iter().all(|p| p.mask.is_none() && !p.publish));
+    }
+}

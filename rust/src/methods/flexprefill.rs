@@ -1,0 +1,165 @@
+//! FlexPrefill baseline: query-aware block patterns estimated from
+//! *pooled* Q/K representations, with a vertical-slash fallback for
+//! "structured" heads — the estimator whose token-alignment and smoothing
+//! failure modes Section 3 of the paper analyzes.
+//!
+//! Per head: the pooled block map (flex probe) yields (a) a query-aware
+//! candidate mask via per-row cumulative-γ selection and (b) an estimated
+//! last-row distribution.  The head's *true* last-row distribution (from
+//! the vslash probe, block-pooled) is compared to the estimate with the JS
+//! distance: if the pooled estimate tracks reality (`d < flex_tau`) the
+//! query-aware pattern is used, otherwise the conservative vertical-slash
+//! pattern.  Accuracy loss arises exactly when the pooled estimate is
+//! *confidently wrong* — it passes the test yet mis-ranks blocks.
+
+use anyhow::Result;
+
+use crate::attention::{search_vslash, BlockMask};
+use crate::config::MethodKind;
+use crate::util::math::{cumulative_select, js_distance};
+use crate::BLOCK_SIZE;
+
+use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+
+pub struct FlexPrefill {
+    gamma: f32,
+    flex_tau: f64,
+}
+
+impl FlexPrefill {
+    pub fn new(gamma: f32, flex_tau: f64) -> FlexPrefill {
+        FlexPrefill { gamma, flex_tau }
+    }
+
+    /// Query-aware mask: per row-block, minimal cumulative-γ selection
+    /// over the pooled row distribution.
+    fn query_aware_mask(&self, pooled: &[f32], nb: usize) -> BlockMask {
+        let mut mask = BlockMask::empty(nb);
+        for i in 0..nb {
+            let row = &pooled[i * nb..(i + 1) * nb];
+            for j in cumulative_select(&row[..=i], self.gamma) {
+                mask.insert(i, j);
+            }
+        }
+        mask.ensure_diagonal();
+        mask
+    }
+}
+
+/// Block-pool a `[BS, S]` attention map's rows into a `[NB]` distribution.
+pub fn pool_last_row(amap: &[f32], bs: usize, seq: usize) -> Vec<f32> {
+    let nb = seq / BLOCK_SIZE;
+    let mut out = vec![0f32; nb];
+    for r in 0..bs {
+        for j in 0..nb {
+            let mut s = 0f32;
+            for c in 0..BLOCK_SIZE {
+                s += amap[r * seq + j * BLOCK_SIZE + c];
+            }
+            out[j] += s;
+        }
+    }
+    let total: f32 = out.iter().sum();
+    if total > 0.0 {
+        out.iter_mut().for_each(|x| *x /= total);
+    }
+    out
+}
+
+impl PatternStrategy for FlexPrefill {
+    fn kind(&self) -> MethodKind {
+        MethodKind::FlexPrefill
+    }
+
+    fn begin_request(&mut self, _seq: usize) {}
+
+    fn plan_layer(&mut self, _layer: usize, seq: usize, num_heads: usize,
+                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+        let nb = seq / BLOCK_SIZE;
+        let flex = probes.flex_map()?.clone();
+        let amap = probes.vslash_map()?;
+        let mut plans = Vec::with_capacity(num_heads);
+        for h in 0..num_heads {
+            let pooled = flex.index_axis0(h)?;
+            let pooled = pooled.as_f32()?;
+            let head_map = amap.index_axis0(h)?;
+            let head_map = head_map.as_f32()?;
+            // estimated vs. true last-row distributions
+            let est_last = {
+                let mut v = pooled[(nb - 1) * nb..].to_vec();
+                let s: f32 = v.iter().sum();
+                if s > 0.0 {
+                    v.iter_mut().for_each(|x| *x /= s);
+                }
+                v
+            };
+            let true_last = pool_last_row(head_map, BLOCK_SIZE, seq);
+            let d = js_distance(&est_last, &true_last);
+            if d < self.flex_tau {
+                plans.push(HeadPlan::sparse(
+                    self.query_aware_mask(pooled, nb),
+                    PatternLabel::QueryAware));
+            } else {
+                plans.push(HeadPlan::sparse(
+                    search_vslash(head_map, BLOCK_SIZE, seq, self.gamma),
+                    PatternLabel::VSlash));
+            }
+        }
+        Ok(plans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::tests_support::FakeProbes;
+
+    #[test]
+    fn pool_last_row_is_distribution() {
+        let seq = 2 * BLOCK_SIZE;
+        let bs = BLOCK_SIZE;
+        let mut m = vec![0f32; bs * seq];
+        for r in 0..bs {
+            for c in 0..seq {
+                m[r * seq + c] = 1.0 / seq as f32;
+            }
+        }
+        let p = pool_last_row(&m, bs, seq);
+        assert_eq!(p.len(), 2);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!((p[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn accurate_estimate_uses_query_aware() {
+        let seq = 4 * BLOCK_SIZE;
+        // structured probes where pooled estimate == truth
+        let mut probes = FakeProbes::consistent(3, seq);
+        let mut f = FlexPrefill::new(0.9, 0.5);
+        let plans = f.plan_layer(0, seq, 3, &mut probes).unwrap();
+        assert!(plans.iter().any(|p| p.label == PatternLabel::QueryAware));
+    }
+
+    #[test]
+    fn inaccurate_estimate_falls_back_to_vslash() {
+        let seq = 4 * BLOCK_SIZE;
+        // probes where pooled map disagrees with the true map
+        let mut probes = FakeProbes::inconsistent(2, seq);
+        let mut f = FlexPrefill::new(0.9, 0.05);
+        let plans = f.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
+    }
+
+    #[test]
+    fn masks_are_causal_with_diagonal() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut probes = FakeProbes::consistent(2, seq);
+        let mut f = FlexPrefill::new(0.9, 0.9);
+        for p in f.plan_layer(0, seq, 2, &mut probes).unwrap() {
+            let m = p.mask.unwrap();
+            for i in 0..m.nb {
+                assert!(m.contains(i, i));
+            }
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! MInference baseline (default vertical-slash configuration, as used in
+//! the paper's comparison): every head gets a *dynamically indexed* but
+//! *statically typed* vertical-slash pattern — the slash/vertical indices
+//! are re-searched per input from the last-block attention probe, while
+//! the pattern family never adapts (the limitation Section 3 discusses).
+
+use anyhow::Result;
+
+use crate::attention::search_vslash;
+use crate::config::MethodKind;
+use crate::BLOCK_SIZE;
+
+use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+
+pub struct MInference {
+    gamma: f32,
+    /// Optional per-(layer, head) γ overrides from offline calibration
+    /// (`shareprefill calibrate-minference`), mirroring MInference's
+    /// offline per-head config search.
+    pub per_head_gamma: Option<Vec<f32>>,
+    num_heads: usize,
+}
+
+impl MInference {
+    pub fn new(gamma: f32) -> MInference {
+        MInference { gamma, per_head_gamma: None, num_heads: 0 }
+    }
+
+    fn head_gamma(&self, layer: usize, head: usize) -> f32 {
+        match &self.per_head_gamma {
+            Some(v) => {
+                let idx = layer * self.num_heads + head;
+                v.get(idx).copied().unwrap_or(self.gamma)
+            }
+            None => self.gamma,
+        }
+    }
+}
+
+impl PatternStrategy for MInference {
+    fn kind(&self) -> MethodKind {
+        MethodKind::MInference
+    }
+
+    fn begin_request(&mut self, _seq: usize) {}
+
+    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
+                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+        self.num_heads = num_heads;
+        let amap = probes.vslash_map()?;
+        let bs = BLOCK_SIZE;
+        let mut plans = Vec::with_capacity(num_heads);
+        for h in 0..num_heads {
+            let head_map = amap.index_axis0(h)?;
+            let mask = search_vslash(head_map.as_f32()?, bs, seq,
+                                     self.head_gamma(layer, h));
+            plans.push(HeadPlan::sparse(mask, PatternLabel::VSlash));
+        }
+        Ok(plans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::tests_support::FakeProbes;
+
+    #[test]
+    fn every_head_vslash() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut probes = FakeProbes::structured(2, seq);
+        let mut m = MInference::new(0.9);
+        m.begin_request(seq);
+        let plans = m.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert_eq!(plans.len(), 2);
+        for p in &plans {
+            assert_eq!(p.label, PatternLabel::VSlash);
+            let mask = p.mask.as_ref().unwrap();
+            assert!(mask.count() > 0);
+            assert!(mask.density() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn per_head_gamma_applied() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut probes = FakeProbes::structured(2, seq);
+        let mut m = MInference::new(0.9);
+        m.per_head_gamma = Some(vec![0.5, 0.99]);
+        let plans = m.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let c0 = plans[0].mask.as_ref().unwrap().count();
+        let c1 = plans[1].mask.as_ref().unwrap().count();
+        assert!(c0 <= c1, "lower γ must not select more blocks ({c0} vs {c1})");
+    }
+}

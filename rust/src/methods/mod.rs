@@ -1,0 +1,261 @@
+//! Pattern strategies: the paper's SharePrefill plus the three baselines
+//! it compares against (FlashAttention-2 dense, MInference vertical-slash,
+//! FlexPrefill pooled query-aware patterns).
+//!
+//! A strategy consumes per-layer *probe* statistics (computed lazily by
+//! the engine through [`Probes`]) and emits one [`HeadPlan`] per query
+//! head; the serving engine packs each plan into the budgeted L1 kernel
+//! call.  SharePrefill additionally receives the full block-averaged QK
+//! map of heads that ran dense (via [`PatternStrategy::publish_abar`]) to
+//! construct pivotal patterns (Alg. 2).
+
+pub mod flash;
+pub mod flexprefill;
+pub mod minference;
+pub mod shareprefill;
+
+use anyhow::Result;
+
+use crate::attention::BlockMask;
+use crate::config::{MethodConfig, MethodKind};
+use crate::runtime::Tensor;
+
+pub use flash::Flash;
+pub use flexprefill::FlexPrefill;
+pub use minference::MInference;
+pub use shareprefill::SharePrefill;
+
+/// Label of the pattern a head ended up with (drives Figure 6 and the
+/// pattern-distribution metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PatternLabel {
+    /// Full attention (dense baseline or pivotal bootstrap head).
+    Dense,
+    /// Shared pivotal pattern (SharePrefill).
+    Shared,
+    /// Vertical-slash pattern.
+    VSlash,
+    /// FlexPrefill's pooled query-aware block pattern.
+    QueryAware,
+}
+
+impl PatternLabel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatternLabel::Dense => "dense",
+            PatternLabel::Shared => "shared",
+            PatternLabel::VSlash => "vslash",
+            PatternLabel::QueryAware => "query-aware",
+        }
+    }
+}
+
+/// Per-head plan for one layer.
+#[derive(Debug, Clone)]
+pub struct HeadPlan {
+    /// `None` → dense full-causal pattern at the max budget.
+    pub mask: Option<BlockMask>,
+    pub label: PatternLabel,
+    /// SharePrefill: this head's full abar map must be scattered and handed
+    /// back via `publish_abar` after the attention call.
+    pub publish: bool,
+}
+
+impl HeadPlan {
+    pub fn dense(publish: bool) -> HeadPlan {
+        HeadPlan { mask: None, label: PatternLabel::Dense, publish }
+    }
+
+    pub fn sparse(mask: BlockMask, label: PatternLabel) -> HeadPlan {
+        HeadPlan { mask: Some(mask), label, publish: false }
+    }
+}
+
+/// Lazy probe access: strategies only pay for the statistics they use
+/// (e.g. Flash requests nothing; SharePrefill requests the vslash probe
+/// only on layers where some head actually falls back).
+pub trait Probes {
+    /// Block-pooled last-row-block attention â: `[H, NB]`.
+    fn ahat(&mut self) -> Result<&Tensor>;
+    /// Softmaxed last-block attention map Â: `[H, BS, S]`.
+    fn vslash_map(&mut self) -> Result<&Tensor>;
+    /// FlexPrefill pooled block map: `[H, NB, NB]`.
+    fn flex_map(&mut self) -> Result<&Tensor>;
+}
+
+/// A pattern strategy (one per method).
+pub trait PatternStrategy {
+    fn kind(&self) -> MethodKind;
+
+    /// Reset per-request state (pattern dictionaries are input-dependent).
+    fn begin_request(&mut self, seq: usize);
+
+    /// Decide a plan per query head for this layer.
+    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
+                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>>;
+
+    /// Receive the full `[NB, NB]` block-averaged QK map of a head whose
+    /// plan had `publish = true` (ran dense). Default: ignore.
+    fn publish_abar(&mut self, _layer: usize, _head: usize, _nb: usize,
+                    _abar: &[f32]) {
+    }
+}
+
+/// Instantiate the strategy for a method config.
+pub fn build_strategy(cfg: &MethodConfig, num_layers: usize,
+                      num_heads: usize,
+                      clusters: Option<Vec<Option<usize>>>)
+                      -> Box<dyn PatternStrategy> {
+    match cfg.kind {
+        MethodKind::Flash => Box::new(Flash::new()),
+        MethodKind::MInference => Box::new(MInference::new(cfg.gamma)),
+        MethodKind::FlexPrefill => {
+            Box::new(FlexPrefill::new(cfg.gamma, cfg.flex_tau))
+        }
+        MethodKind::SharePrefill => Box::new(SharePrefill::new(
+            cfg.tau, cfg.delta, cfg.gamma, num_layers, num_heads, clusters)),
+    }
+}
+
+#[cfg(test)]
+pub mod tests_support {
+    //! Probe fakes for strategy unit tests.
+    use super::Probes;
+    use crate::runtime::Tensor;
+    use crate::util::rng::Rng;
+    use crate::BLOCK_SIZE;
+    use anyhow::{bail, Result};
+
+    /// Panics if any probe is touched (Flash must not probe).
+    pub struct NoProbes;
+
+    impl Probes for NoProbes {
+        fn ahat(&mut self) -> Result<&Tensor> {
+            bail!("ahat probe must not be used")
+        }
+        fn vslash_map(&mut self) -> Result<&Tensor> {
+            bail!("vslash probe must not be used")
+        }
+        fn flex_map(&mut self) -> Result<&Tensor> {
+            bail!("flex probe must not be used")
+        }
+    }
+
+    /// Precomputed probe tensors.
+    pub struct FakeProbes {
+        ahat: Tensor,
+        vslash: Tensor,
+        flex: Tensor,
+    }
+
+    impl FakeProbes {
+        fn build(h: usize, seq: usize,
+                 mut rowval: impl FnMut(usize, usize, usize) -> f32)
+                 -> FakeProbes {
+            let nb = seq / BLOCK_SIZE;
+            let bs = BLOCK_SIZE;
+            // vslash map rows: normalized per row
+            let mut vm = vec![0f32; h * bs * seq];
+            for hh in 0..h {
+                for r in 0..bs {
+                    let qpos = seq - bs + r;
+                    let mut sum = 0f32;
+                    for k in 0..=qpos {
+                        let v = rowval(hh, r, k).max(0.0) + 1e-6;
+                        vm[hh * bs * seq + r * seq + k] = v;
+                        sum += v;
+                    }
+                    for k in 0..=qpos {
+                        vm[hh * bs * seq + r * seq + k] /= sum;
+                    }
+                }
+            }
+            // ahat = block-pooled last rows of vslash map
+            let mut ah = vec![0f32; h * nb];
+            for hh in 0..h {
+                for j in 0..nb {
+                    let mut s = 0f32;
+                    for r in 0..bs {
+                        for c in 0..bs {
+                            s += vm[hh * bs * seq + r * seq + j * bs + c];
+                        }
+                    }
+                    ah[hh * nb + j] = s;
+                }
+                let tot: f32 = ah[hh * nb..(hh + 1) * nb].iter().sum();
+                for j in 0..nb {
+                    ah[hh * nb + j] /= tot;
+                }
+            }
+            // flex map rows mirror ahat for every row (consistent default)
+            let mut fm = vec![0f32; h * nb * nb];
+            for hh in 0..h {
+                for i in 0..nb {
+                    let mut sum = 0f32;
+                    for j in 0..=i {
+                        let v = ah[hh * nb + j] + 1e-6;
+                        fm[hh * nb * nb + i * nb + j] = v;
+                        sum += v;
+                    }
+                    for j in 0..=i {
+                        fm[hh * nb * nb + i * nb + j] /= sum;
+                    }
+                }
+            }
+            FakeProbes {
+                ahat: Tensor::f32(vec![h, nb], ah),
+                vslash: Tensor::f32(vec![h, bs, seq], vm),
+                flex: Tensor::f32(vec![h, nb, nb], fm),
+            }
+        }
+
+        /// Uniform-ish probes (not sparse, all heads similar).
+        pub fn flat(h: usize, seq: usize) -> FakeProbes {
+            Self::build(h, seq, |_, _, _| 1.0)
+        }
+
+        /// Random structured probes (vertical stripes per head).
+        pub fn structured(h: usize, seq: usize) -> FakeProbes {
+            let mut rng = Rng::new(42);
+            let stripes: Vec<usize> =
+                (0..h).map(|_| rng.below(seq)).collect();
+            Self::build(h, seq, move |hh, _, k| {
+                if k.abs_diff(stripes[hh]) < BLOCK_SIZE { 5.0 } else { 0.2 }
+            })
+        }
+
+        /// Pooled estimate matches truth (FlexPrefill happy path).
+        pub fn consistent(h: usize, seq: usize) -> FakeProbes {
+            Self::flat(h, seq)
+        }
+
+        /// Pooled estimate contradicts the true map.
+        pub fn inconsistent(h: usize, seq: usize) -> FakeProbes {
+            let mut p = Self::build(h, seq, |_, _, k| {
+                if k < BLOCK_SIZE { 10.0 } else { 0.01 }
+            });
+            // overwrite flex map with mass on the *diagonal* instead
+            let nb = seq / BLOCK_SIZE;
+            let mut fm = vec![0f32; h * nb * nb];
+            for hh in 0..h {
+                for i in 0..nb {
+                    fm[hh * nb * nb + i * nb + i] = 1.0;
+                }
+            }
+            p.flex = Tensor::f32(vec![h, nb, nb], fm);
+            p
+        }
+    }
+
+    impl Probes for FakeProbes {
+        fn ahat(&mut self) -> Result<&Tensor> {
+            Ok(&self.ahat)
+        }
+        fn vslash_map(&mut self) -> Result<&Tensor> {
+            Ok(&self.vslash)
+        }
+        fn flex_map(&mut self) -> Result<&Tensor> {
+            Ok(&self.flex)
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! **SharePrefill** — the paper's contribution (Section 5, Algorithm 1).
+//!
+//! Offline: heads are clustered by attention-map similarity
+//! (`clustering::offline`).  Online, per layer and head:
+//!
+//! 1. *Determine Sparse Pattern* (Alg. 3): probe â, JS sparsity test vs.
+//!    uniform (δ), JS similarity test vs. the cluster's pivotal
+//!    representative ã (τ).
+//! 2. *Share Pivotal Pattern* (Alg. 4): reuse the cluster's mask if
+//!    present; otherwise the first head of the cluster runs **dense**.
+//! 3. After the dense head's sparse-attention call returns its full
+//!    block-averaged QK map Ã, *Construct Pivotal Pattern* (Alg. 2)
+//!    publishes (ã, M) into the evolving per-request dictionary.
+//!
+//! Ablations (Table 2): `tau <= 0` disables sharing entirely (no dense
+//! bootstrap either — pure vertical-slash); `delta > 1` disables the
+//! highly-sparse-head exclusion.
+
+use anyhow::Result;
+
+use crate::attention::{construct_pivotal, decide_pattern, search_vslash,
+                       Decision, PivotalDict};
+use crate::config::MethodKind;
+use crate::BLOCK_SIZE;
+
+use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+
+pub struct SharePrefill {
+    tau: f64,
+    delta: f64,
+    gamma: f32,
+    num_heads: usize,
+    /// (layer * num_heads + head) → cluster id (None = noise).
+    clusters: Vec<Option<usize>>,
+    /// Evolving per-request pivotal dictionary (cluster → (ã, M)).
+    dict: PivotalDict,
+    /// Decision statistics for the current request (Figure 6).
+    pub stats: DecisionStats,
+}
+
+/// Counts of pattern kinds chosen during a request.
+#[derive(Debug, Default, Clone)]
+pub struct DecisionStats {
+    pub dense: usize,
+    pub shared: usize,
+    pub vslash: usize,
+}
+
+impl SharePrefill {
+    pub fn new(tau: f64, delta: f64, gamma: f32, num_layers: usize,
+               num_heads: usize, clusters: Option<Vec<Option<usize>>>)
+               -> SharePrefill {
+        let clusters = clusters.unwrap_or_else(|| {
+            // Without an offline clustering file, fall back to one cluster
+            // per (head index) across layers — heads at the same position
+            // often align; the similarity gate (τ) still protects sharing.
+            (0..num_layers * num_heads)
+                .map(|i| Some(i % num_heads))
+                .collect()
+        });
+        assert_eq!(clusters.len(), num_layers * num_heads,
+                   "cluster table must cover every (layer, head)");
+        SharePrefill {
+            tau,
+            delta,
+            gamma,
+            num_heads,
+            clusters,
+            dict: PivotalDict::new(),
+            stats: DecisionStats::default(),
+        }
+    }
+
+    fn cluster_of(&self, layer: usize, head: usize) -> Option<usize> {
+        self.clusters[layer * self.num_heads + head]
+    }
+}
+
+impl PatternStrategy for SharePrefill {
+    fn kind(&self) -> MethodKind {
+        MethodKind::SharePrefill
+    }
+
+    fn begin_request(&mut self, _seq: usize) {
+        // Patterns are input-dependent: the dictionary evolves within one
+        // prefill and resets across requests.
+        self.dict.clear();
+        self.stats = DecisionStats::default();
+    }
+
+    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
+                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+        debug_assert_eq!(num_heads, self.num_heads);
+        let ahat_t = probes.ahat()?.clone();
+        let nb = seq / BLOCK_SIZE;
+        let mut plans = Vec::with_capacity(num_heads);
+        // vslash probe is fetched lazily only if some head needs it
+        for h in 0..num_heads {
+            let ahat_h = ahat_t.index_axis0(h)?;
+            let ahat = ahat_h.as_f32()?;
+            let cluster = if self.tau <= 0.0 {
+                // "w/o sharing" ablation: no cluster machinery at all.
+                None
+            } else {
+                self.cluster_of(layer, h)
+            };
+            let info = decide_pattern(ahat, cluster, &self.dict, self.delta,
+                                      self.tau);
+            match info.decision {
+                Decision::Dense => {
+                    self.stats.dense += 1;
+                    plans.push(HeadPlan::dense(true));
+                }
+                Decision::SharedPivot => {
+                    self.stats.shared += 1;
+                    let entry = &self.dict[&info.cluster.unwrap()];
+                    plans.push(HeadPlan {
+                        mask: Some(entry.mask.clone()),
+                        label: PatternLabel::Shared,
+                        publish: false,
+                    });
+                }
+                Decision::VSlash => {
+                    self.stats.vslash += 1;
+                    let amap_t = probes.vslash_map()?.index_axis0(h)?;
+                    let mask = search_vslash(amap_t.as_f32()?, BLOCK_SIZE,
+                                             seq, self.gamma);
+                    plans.push(HeadPlan::sparse(mask, PatternLabel::VSlash));
+                }
+            }
+            debug_assert!(plans.last().unwrap().mask.as_ref()
+                .map_or(true, |m| m.nb == nb));
+        }
+        Ok(plans)
+    }
+
+    fn publish_abar(&mut self, layer: usize, head: usize, nb: usize,
+                    abar: &[f32]) {
+        if let Some(c) = self.cluster_of(layer, head) {
+            let entry = construct_pivotal(abar, nb, self.gamma,
+                                          (layer, head));
+            self.dict.insert(c, entry);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::tests_support::FakeProbes;
+    use crate::util::math::NEG_INF;
+
+    fn uniform_abar(nb: usize) -> Vec<f32> {
+        let mut m = vec![NEG_INF; nb * nb];
+        for i in 0..nb {
+            for j in 0..=i {
+                m[i * nb + j] = 0.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn first_head_dense_then_shared() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        // two heads, same cluster, flat probes (similar + not sparse)
+        let clusters = vec![Some(0), Some(0)];
+        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2, Some(clusters));
+        sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert!(plans[0].mask.is_none() && plans[0].publish,
+                "first head must bootstrap dense");
+        // publish the dense head's map, re-plan: second head shares
+        sp.publish_abar(0, 0, nb, &uniform_abar(nb));
+        let plans2 = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert_eq!(plans2[1].label, PatternLabel::Shared);
+        assert!(sp.stats.shared >= 1);
+    }
+
+    #[test]
+    fn noise_cluster_uses_vslash() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
+                                       Some(vec![None, None]));
+        sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
+    }
+
+    #[test]
+    fn tau_zero_is_pure_vslash() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut sp = SharePrefill::new(0.0, 0.3, 0.9, 1, 2,
+                                       Some(vec![Some(0), Some(0)]));
+        sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
+        assert_eq!(sp.stats.dense, 0);
+    }
+
+    #[test]
+    fn dict_resets_between_requests() {
+        let seq = 4 * BLOCK_SIZE;
+        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 1,
+                                       Some(vec![Some(0)]));
+        sp.begin_request(seq);
+        sp.publish_abar(0, 0, 4, &uniform_abar(4));
+        assert!(!sp.dict.is_empty());
+        sp.begin_request(seq);
+        assert!(sp.dict.is_empty());
+    }
+
+    #[test]
+    fn default_cluster_fallback_covers_all_heads() {
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 3, 4, None);
+        assert_eq!(sp.clusters.len(), 12);
+        assert!(sp.clusters.iter().all(Option::is_some));
+    }
+}

@@ -1,0 +1,8 @@
+//! Model layer: weight store (tenstore → typed per-layer tensors) and the
+//! typed stage executor that drives the L2 artifacts.
+
+pub mod stages;
+pub mod weights;
+
+pub use stages::Stages;
+pub use weights::ModelWeights;

@@ -1,0 +1,218 @@
+//! Typed stage executor: wraps the artifact registry with the model's
+//! stage signatures (embed / qkv / attn / post_attn / lm_head / probes /
+//! decode) so the serving engine reads like the paper's Algorithm 1.
+//!
+//! All heavy compute happens inside the compiled HLO; this layer only
+//! shuffles host tensors (per-head slicing, GQA repeat, cache updates).
+
+use anyhow::Result;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::runtime::registry::ModelSpec;
+use crate::runtime::{Registry, Tensor};
+use crate::util::timer::StageProfiler;
+
+use super::weights::{LayerWeights, ModelWeights};
+
+/// Stage executor bound to one model.
+pub struct Stages {
+    pub spec: ModelSpec,
+    pub weights: ModelWeights,
+    registry: Rc<Registry>,
+}
+
+/// Output of the qkv stage, per layer.
+pub struct QkvOut {
+    /// `[H, S, D]` roped queries.
+    pub q: Tensor,
+    /// `[Hkv, S, D]` roped keys (cache layout).
+    pub k: Tensor,
+    /// `[Hkv, S, D]` values.
+    pub v: Tensor,
+}
+
+impl Stages {
+    pub fn new(registry: Rc<Registry>, model: &str) -> Result<Stages> {
+        let spec = registry.model(model)?.clone();
+        let weights =
+            ModelWeights::load(Path::new(&registry.dir), &spec)?;
+        Ok(Stages { spec, weights, registry })
+    }
+
+    pub fn registry(&self) -> &Rc<Registry> {
+        &self.registry
+    }
+
+    fn art(&self, stage: &str, seq: usize) -> String {
+        format!("{}_{stage}_s{seq}", self.spec.prefix)
+    }
+
+    /// tokens `[S]` → hidden `[S, Dm]`.
+    pub fn embed(&self, tokens: &[i32], seq: usize, prof: &mut StageProfiler)
+                 -> Result<Tensor> {
+        debug_assert_eq!(tokens.len(), seq);
+        let name = self.art("embed", seq);
+        let t = Tensor::i32(vec![seq], tokens.to_vec());
+        let out = prof.time("embed", || {
+            self.registry.execute(&name, &[t, self.weights.embed.clone()])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// hidden `[S, Dm]` → (q `[H,S,D]`, k `[Hkv,S,D]`, v `[Hkv,S,D]`).
+    pub fn qkv(&self, layer: usize, x: &Tensor, seq: usize,
+               prof: &mut StageProfiler) -> Result<QkvOut> {
+        let lw = &self.weights.layers[layer];
+        let name = self.art("qkv", seq);
+        let mut out = prof.time("qkv", || {
+            self.registry.execute(&name, &[
+                x.clone(), lw.ln1.clone(), lw.wq.clone(), lw.wk.clone(),
+                lw.wv.clone(),
+            ])
+        })?;
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let q = out.pop().unwrap();
+        Ok(QkvOut { q, k, v })
+    }
+
+    /// Per-head sparse attention through the budgeted L1 kernel.
+    /// `q/k/v` are `[S, D]` single-head tensors; `idx/valid` are the packed
+    /// pattern at the artifact's budget.  Returns `(o [S,D], abar [NB,B])`.
+    pub fn attn_head(&self, seq: usize, budget: usize, q: Tensor, k: Tensor,
+                     v: Tensor, idx: Tensor, valid: Tensor,
+                     prof: &mut StageProfiler)
+                     -> Result<(Tensor, Tensor)> {
+        let name = format!("{}_attn_s{seq}_b{budget}", self.spec.prefix);
+        let mut out = prof.time("attn", || {
+            self.registry.execute(&name, &[q, k, v, idx, valid])
+        })?;
+        let abar = out.pop().unwrap();
+        let o = out.pop().unwrap();
+        Ok((o, abar))
+    }
+
+    /// attn outputs `[H, S, D]` + residual `[S, Dm]` → hidden `[S, Dm]`.
+    pub fn post_attn(&self, layer: usize, attn_out: Tensor, resid: &Tensor,
+                     seq: usize, prof: &mut StageProfiler) -> Result<Tensor> {
+        let lw = &self.weights.layers[layer];
+        let name = self.art("postattn", seq);
+        let out = prof.time("post_attn", || {
+            self.registry.execute(&name, &[
+                attn_out, resid.clone(), lw.wo.clone(), lw.ln2.clone(),
+                lw.w_gate.clone(), lw.w_up.clone(), lw.w_down.clone(),
+            ])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// hidden `[S, Dm]` → logits `[S, V]` (or `[1, V]` via seq = 1).
+    pub fn lm_head(&self, x: &Tensor, seq: usize, prof: &mut StageProfiler)
+                   -> Result<Tensor> {
+        let name = self.art("lmhead", seq);
+        let out = prof.time("lm_head", || {
+            self.registry.execute(&name, &[
+                x.clone(), self.weights.ln_f.clone(),
+                self.weights.w_out.clone(),
+            ])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Pattern probe: (q̂ `[H,BS,D]`, k(repeated) `[H,S,D]`) → â `[H,NB]`.
+    pub fn pattern_probe(&self, qh: Tensor, k: Tensor, seq: usize,
+                         prof: &mut StageProfiler) -> Result<Tensor> {
+        let name = self.art("patternprobe", seq);
+        let out = prof.time("probe", || {
+            self.registry.execute(&name, &[qh, k])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// VSlash probe: → Â `[H, BS, S]` (softmaxed last-block attention).
+    pub fn vslash_probe(&self, qh: Tensor, k: Tensor, seq: usize,
+                        prof: &mut StageProfiler) -> Result<Tensor> {
+        let name = self.art("vslashprobe", seq);
+        let out = prof.time("probe", || {
+            self.registry.execute(&name, &[qh, k])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Flex probe: (q `[H,S,D]`, k `[H,S,D]`) → pooled map `[H,NB,NB]`.
+    pub fn flex_probe(&self, q: Tensor, k: Tensor, seq: usize,
+                      prof: &mut StageProfiler) -> Result<Tensor> {
+        let name = self.art("flexprobe", seq);
+        let out = prof.time("probe", || {
+            self.registry.execute(&name, &[q, k])
+        })?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Fused decode layer over the KV cache. `x` is `[1, Dm]`; caches are
+    /// `[Hkv, Smax, D]`; `pos` is the new token's index. Returns
+    /// `(x_out, k_new [Hkv,D], v_new [Hkv,D])`.
+    pub fn decode_layer(&self, layer: usize, x: &Tensor, kcache: &Tensor,
+                        vcache: &Tensor, pos: i32,
+                        prof: &mut StageProfiler)
+                        -> Result<(Tensor, Tensor, Tensor)> {
+        let lw: &LayerWeights = &self.weights.layers[layer];
+        let name = format!("{}_decode", self.spec.prefix);
+        let mut out = prof.time("decode", || {
+            self.registry.execute(&name, &[
+                x.clone(), lw.ln1.clone(), lw.wq.clone(), lw.wk.clone(),
+                lw.wv.clone(), lw.wo.clone(), lw.ln2.clone(),
+                lw.w_gate.clone(), lw.w_up.clone(), lw.w_down.clone(),
+                kcache.clone(), vcache.clone(), Tensor::scalar_i32(pos),
+            ])
+        })?;
+        let v_new = out.pop().unwrap();
+        let k_new = out.pop().unwrap();
+        let x_out = out.pop().unwrap();
+        Ok((x_out, k_new, v_new))
+    }
+
+    /// Extract head `h`'s `[S, D]` q slice from `[H, S, D]`.
+    pub fn head_q(&self, q: &Tensor, h: usize) -> Result<Tensor> {
+        q.index_axis0(h)
+    }
+
+    /// Extract the kv slice serving query head `h` (GQA mapping).
+    pub fn head_kv(&self, kv: &Tensor, h: usize) -> Result<Tensor> {
+        kv.index_axis0(h / self.spec.group())
+    }
+
+    /// Repeat kv `[Hkv, S, D]` to `[H, S, D]` (probe inputs).
+    pub fn repeat_kv(&self, kv: &Tensor) -> Result<Tensor> {
+        let shape = kv.shape().to_vec();
+        let (hkv, s, d) = (shape[0], shape[1], shape[2]);
+        let h = self.spec.num_heads;
+        let g = self.spec.group();
+        let src = kv.as_f32()?;
+        let mut out = vec![0f32; h * s * d];
+        for qh in 0..h {
+            let kvh = qh / g;
+            out[qh * s * d..(qh + 1) * s * d]
+                .copy_from_slice(&src[kvh * s * d..(kvh + 1) * s * d]);
+        }
+        debug_assert_eq!(hkv, self.spec.num_kv_heads);
+        Ok(Tensor::f32(vec![h, s, d], out))
+    }
+
+    /// Last row-block of q: `[H, S, D]` → `[H, BS, D]` (probe input).
+    pub fn last_block_q(&self, q: &Tensor, seq: usize) -> Result<Tensor> {
+        let bs = crate::BLOCK_SIZE;
+        let shape = q.shape().to_vec();
+        let (h, s, d) = (shape[0], shape[1], shape[2]);
+        debug_assert_eq!(s, seq);
+        let src = q.as_f32()?;
+        let mut out = vec![0f32; h * bs * d];
+        for hh in 0..h {
+            let base = hh * s * d + (s - bs) * d;
+            out[hh * bs * d..(hh + 1) * bs * d]
+                .copy_from_slice(&src[base..base + bs * d]);
+        }
+        Ok(Tensor::f32(vec![h, bs, d], out))
+    }
+}

@@ -1,0 +1,70 @@
+//! Weight store: loads `artifacts/weights-{model}.bin` (tenstore) into
+//! per-layer [`Tensor`]s with shapes validated against the model spec.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::runtime::registry::ModelSpec;
+use crate::runtime::Tensor;
+use crate::substrate::tenstore::TenStore;
+
+/// One transformer layer's weights (names match `python/compile/model.py`).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub ln1: Tensor,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2: Tensor,
+    pub w_gate: Tensor,
+    pub w_up: Tensor,
+    pub w_down: Tensor,
+}
+
+/// All model weights.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub embed: Tensor,
+    pub layers: Vec<LayerWeights>,
+    pub ln_f: Tensor,
+    pub w_out: Tensor,
+}
+
+impl ModelWeights {
+    pub fn load(dir: &Path, spec: &ModelSpec) -> Result<ModelWeights> {
+        let store = TenStore::load(dir.join(&spec.weights_file))?;
+        let get = |name: &str, shape: Vec<usize>| -> Result<Tensor> {
+            let t = store.get(name)?;
+            if t.shape != shape {
+                bail!("weight '{name}': stored shape {:?} != expected {:?}",
+                      t.shape, shape);
+            }
+            Ok(Tensor::f32(t.shape.clone(), t.data.clone()))
+        };
+        let (h, hkv, d, dm, f, v) =
+            (spec.num_heads, spec.num_kv_heads, spec.head_dim, spec.hidden,
+             spec.ffn, spec.vocab);
+        let mut layers = Vec::with_capacity(spec.num_layers);
+        for i in 0..spec.num_layers {
+            let p = |field: &str| format!("layer{i}.{field}");
+            layers.push(LayerWeights {
+                ln1: get(&p("ln1"), vec![dm])?,
+                wq: get(&p("wq"), vec![dm, h * d])?,
+                wk: get(&p("wk"), vec![dm, hkv * d])?,
+                wv: get(&p("wv"), vec![dm, hkv * d])?,
+                wo: get(&p("wo"), vec![h * d, dm])?,
+                ln2: get(&p("ln2"), vec![dm])?,
+                w_gate: get(&p("w_gate"), vec![dm, f])?,
+                w_up: get(&p("w_up"), vec![dm, f])?,
+                w_down: get(&p("w_down"), vec![f, dm])?,
+            });
+        }
+        Ok(ModelWeights {
+            embed: get("embed", vec![v, dm])?,
+            layers,
+            ln_f: get("ln_f", vec![dm])?,
+            w_out: get("w_out", vec![dm, v])?,
+        })
+    }
+}

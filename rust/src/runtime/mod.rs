@@ -1,0 +1,113 @@
+//! L3 ↔ L2 bridge: PJRT CPU client, artifact registry (manifest-driven,
+//! lazily compiled), and the typed host [`Tensor`].
+//!
+//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Every artifact was lowered with `return_tuple=True`, so outputs are
+//! always unpacked from a tuple literal.
+
+pub mod registry;
+pub mod tensor;
+
+pub use registry::{Artifact, Registry};
+pub use tensor::Tensor;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Wrapper around the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the unpacked output tuple.
+    ///
+    /// NOTE: this stages inputs as rust-owned `PjRtBuffer`s and calls
+    /// `execute_b` rather than `execute` — the crate's `execute` leaks
+    /// every input buffer (`BufferFromHostLiteral(..).release()` with no
+    /// matching free in xla_rs.cc), ~100 MB per prefill at ctx 512.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<InputRef<'_>> =
+            inputs.iter().map(InputRef::Host).collect();
+        self.run_buffers(&refs)
+    }
+
+    /// Execute with pre-staged device buffers mixed with host tensors.
+    /// `staged` entries override the input at their position — used on the
+    /// hot path to avoid re-transferring layer weights every call.
+    pub fn run_buffers(&self, inputs: &[InputRef<'_>]) -> Result<Vec<Tensor>> {
+        // The xla crate's execute_b takes a homogeneous buffer slice, so we
+        // first stage any host tensors, then assemble a reference list that
+        // mixes the freshly-staged buffers with the caller's staged ones.
+        let client = self.exe.client();
+        let device = &client.addressable_devices()[0];
+        let mut owned: Vec<Option<xla::PjRtBuffer>> =
+            Vec::with_capacity(inputs.len());
+        // Host→device transfers are asynchronous: the literals must stay
+        // alive until the execution's outputs are materialized below.
+        let mut live_literals: Vec<xla::Literal> = Vec::new();
+        for inp in inputs {
+            match inp {
+                InputRef::Host(t) => {
+                    let lit = t.to_literal()?;
+                    owned.push(Some(
+                        client.buffer_from_host_literal(Some(device), &lit)?));
+                    live_literals.push(lit);
+                }
+                InputRef::Staged(_) => owned.push(None),
+            }
+        }
+        let borrowed: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&owned)
+            .map(|(inp, o)| match inp {
+                InputRef::Host(_) => o.as_ref().unwrap(),
+                InputRef::Staged(b) => *b,
+            })
+            .collect();
+        let result = self.exe.execute_b(&borrowed)?;
+        let out = result[0][0].to_literal_sync()?;
+        drop(live_literals); // outputs materialized -> transfers done
+        let parts = out.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// Input to [`Executable::run_buffers`].
+pub enum InputRef<'a> {
+    Host(&'a Tensor),
+    Staged(&'a xla::PjRtBuffer),
+}
+
+/// Stage a tensor onto the device once (weights on the hot path).
+pub fn stage(rt: &Runtime, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    let device = &rt.client.addressable_devices()[0];
+    let lit = t.to_literal()?;
+    Ok(rt.client.buffer_from_host_literal(Some(device), &lit)?)
+}

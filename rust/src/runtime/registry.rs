@@ -1,0 +1,228 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), exposes shape metadata, and lazily compiles
+//! HLO artifacts on first use, caching the executables.
+//!
+//! Lazy compilation matters on the single-core testbed: an eval that only
+//! touches the 1024-token bucket never pays for the 4096-token artifacts.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::substrate::json::{self, Json};
+
+use super::{Executable, Runtime, Tensor};
+
+/// Parameter or output descriptor from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub stage: String,
+    pub seq: usize,
+    pub budget: Option<usize>,
+    pub params: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model shape metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub prefix: String,
+    pub num_layers: usize,
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_dim: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub seq_buckets: Vec<usize>,
+    /// seq bucket → available attention budget buckets (ascending).
+    pub budgets: BTreeMap<usize, Vec<usize>>,
+    pub weights_file: String,
+}
+
+impl ModelSpec {
+    pub fn group(&self) -> usize {
+        self.num_heads / self.num_kv_heads
+    }
+
+    pub fn num_blocks(&self, seq: usize) -> usize {
+        seq / crate::BLOCK_SIZE
+    }
+
+    /// Smallest seq bucket that fits `len` tokens.
+    pub fn seq_bucket_for(&self, len: usize) -> Result<usize> {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= len)
+            .ok_or_else(|| anyhow!(
+                "prompt of {len} tokens exceeds max bucket {}",
+                self.max_seq))
+    }
+
+    /// Smallest budget bucket (for `seq`) with capacity >= `blocks`.
+    pub fn budget_bucket_for(&self, seq: usize, blocks: usize) -> usize {
+        let buckets = &self.budgets[&seq];
+        buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= blocks)
+            .unwrap_or(*buckets.last().unwrap())
+    }
+}
+
+/// The registry.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: BTreeMap<String, Artifact>,
+    runtime: Rc<Runtime>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Compile count (observability for tests + `inspect`).
+    compiles: RefCell<usize>,
+}
+
+impl Registry {
+    pub fn load(dir: impl Into<PathBuf>, runtime: Rc<Runtime>)
+                -> Result<Registry> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run \
+                                      `make artifacts` first"))?;
+        let j = json::parse(&text)?;
+        let block = j.req("block_size")?.as_usize()?;
+        if block != crate::BLOCK_SIZE {
+            bail!("manifest block_size {block} != crate BLOCK_SIZE {}",
+                  crate::BLOCK_SIZE);
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj()? {
+            let mut budgets = BTreeMap::new();
+            for (seq, arr) in m.req("budgets")?.as_obj()? {
+                budgets.insert(seq.parse::<usize>()?, arr.usize_list()?);
+            }
+            models.insert(name.clone(), ModelSpec {
+                name: name.clone(),
+                prefix: m.req("prefix")?.as_str()?.to_string(),
+                num_layers: m.req("num_layers")?.as_usize()?,
+                num_heads: m.req("num_heads")?.as_usize()?,
+                num_kv_heads: m.req("num_kv_heads")?.as_usize()?,
+                head_dim: m.req("head_dim")?.as_usize()?,
+                hidden: m.req("hidden")?.as_usize()?,
+                ffn: m.req("ffn")?.as_usize()?,
+                vocab: m.req("vocab")?.as_usize()?,
+                max_seq: m.req("max_seq")?.as_usize()?,
+                seq_buckets: m.req("seq_buckets")?.usize_list()?,
+                budgets,
+                weights_file: m.req("weights_file")?.as_str()?.to_string(),
+            });
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr()? {
+            let art = Artifact {
+                name: a.req("name")?.as_str()?.to_string(),
+                file: a.req("file")?.as_str()?.to_string(),
+                model: a.req("model")?.as_str()?.to_string(),
+                stage: a.req("stage")?.as_str()?.to_string(),
+                seq: a.req("seq")?.as_usize()?,
+                budget: a.get("budget").map(|b| b.as_usize()).transpose()?,
+                params: parse_specs(a.req("params")?)?,
+                outputs: parse_specs(a.req("outputs")?)?,
+            };
+            artifacts.insert(art.name.clone(), art);
+        }
+        Ok(Registry {
+            dir,
+            models,
+            artifacts,
+            runtime,
+            cache: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self.artifact(name)?;
+        let path = self.dir.join(&art.file);
+        let exe = Rc::new(self.runtime.compile_hlo_file(&path)?);
+        *self.compiles.borrow_mut() += 1;
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn compile_count(&self) -> usize {
+        *self.compiles.borrow()
+    }
+
+    /// Execute an artifact by name, validating input shapes against the
+    /// manifest (cheap; catches wiring bugs early with a useful message).
+    pub fn execute(&self, name: &str, inputs: &[Tensor])
+                   -> Result<Vec<Tensor>> {
+        let art = self.artifact(name)?;
+        if inputs.len() != art.params.len() {
+            bail!("artifact {name}: {} inputs given, {} expected",
+                  inputs.len(), art.params.len());
+        }
+        for (t, spec) in inputs.iter().zip(&art.params) {
+            if t.shape() != spec.shape.as_slice() || t.dtype() != spec.dtype {
+                bail!("artifact {name}: param '{}' expects {} {:?}, got {} \
+                       {:?}", spec.name, spec.dtype, spec.shape, t.dtype(),
+                      t.shape());
+            }
+        }
+        self.executable(name)?.run(inputs)
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.runtime
+    }
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(TensorSpec {
+                name: p.get("name")
+                    .map(|n| n.as_str().map(str::to_string))
+                    .transpose()?
+                    .unwrap_or_default(),
+                dtype: p.req("dtype")?.as_str()?.to_string(),
+                shape: p.req("shape")?.usize_list()?,
+            })
+        })
+        .collect()
+}

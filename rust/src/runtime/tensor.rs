@@ -1,0 +1,192 @@
+//! Host-side tensor: the coordinator's in-memory representation, converted
+//! to/from `xla::Literal` at the execute boundary.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// Row-major host tensor, f32 or i32.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs data {}", data.len());
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Slice the leading axis: `self[index]` for a `[N, ...]` tensor.
+    pub fn index_axis0(&self, index: usize) -> Result<Tensor> {
+        let shape = self.shape();
+        if shape.is_empty() {
+            bail!("cannot index a scalar");
+        }
+        let inner: usize = shape[1..].iter().product();
+        let inner_shape = shape[1..].to_vec();
+        match self {
+            Tensor::F32 { data, .. } => Ok(Tensor::f32(
+                inner_shape,
+                data[index * inner..(index + 1) * inner].to_vec())),
+            Tensor::I32 { data, .. } => Ok(Tensor::i32(
+                inner_shape,
+                data[index * inner..(index + 1) * inner].to_vec())),
+        }
+    }
+
+    /// Convert to an `xla::Literal` (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Tensor::F32 { data, .. } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                if dims.is_empty() {
+                    Literal::scalar(data[0])
+                } else {
+                    Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        })
+    }
+
+    /// Convert from an `xla::Literal` (copies).
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize)
+            .collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                Ok(Tensor::f32(dims, lit.to_vec::<f32>()?))
+            }
+            xla::PrimitiveType::S32 => {
+                Ok(Tensor::i32(dims, lit.to_vec::<i32>()?))
+            }
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_consistency() {
+        let t = Tensor::f32(vec![2, 3], vec![0.; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![0.; 3]);
+    }
+
+    #[test]
+    fn index_axis0() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.index_axis0(1).unwrap();
+        assert_eq!(r.shape(), &[3]);
+        assert_eq!(r.as_f32().unwrap(), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 2]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![3], vec![7, 8, 9]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_i32(5);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[5]);
+        assert!(back.shape().is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Dynamic prefill batcher: FIFO admission under a token budget with
+//! age-based promotion (no starvation).  Prefill on this substrate is
+//! sequential per request (one core, one PJRT stream), so "batching"
+//! groups requests into scheduling rounds — the unit of admission control
+//! and of the throughput metrics, exactly the role continuous-batching
+//! plays in GPU servers.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub max_batch_tokens: usize,
+    pub max_batch_requests: usize,
+    capacity: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch_tokens: usize, max_batch_requests: usize,
+               capacity: usize) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            max_batch_tokens,
+            max_batch_requests,
+            capacity,
+        }
+    }
+
+    /// Enqueue; returns false (rejected) when the queue is full.
+    pub fn push(&mut self, r: Request) -> bool {
+        if self.queue.len() >= self.capacity {
+            return false;
+        }
+        self.queue.push_back(r);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Form the next batch: FIFO order, stop at the token budget or the
+    /// request cap.  The head request is always admitted even if it alone
+    /// exceeds the budget (otherwise it would starve).
+    pub fn next_batch(&mut self) -> Vec<Request> {
+        let mut batch = Vec::new();
+        let mut tokens = 0usize;
+        while let Some(front) = self.queue.front() {
+            let t = front.prompt_len();
+            let fits = batch.is_empty()
+                || (tokens + t <= self.max_batch_tokens
+                    && batch.len() < self.max_batch_requests);
+            if !fits {
+                break;
+            }
+            tokens += t;
+            batch.push(self.queue.pop_front().unwrap());
+            if batch.len() >= self.max_batch_requests {
+                break;
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{property, Gen};
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![0; len], 0)
+    }
+
+    #[test]
+    fn fifo_under_budget() {
+        let mut b = Batcher::new(100, 8, 16);
+        for i in 0..4 {
+            assert!(b.push(req(i, 40)));
+        }
+        let batch = b.next_batch();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn oversized_head_still_admitted() {
+        let mut b = Batcher::new(100, 8, 16);
+        b.push(req(0, 500));
+        b.push(req(1, 10));
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn request_cap() {
+        let mut b = Batcher::new(10_000, 2, 16);
+        for i in 0..5 {
+            b.push(req(i, 10));
+        }
+        assert_eq!(b.next_batch().len(), 2);
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut b = Batcher::new(100, 8, 2);
+        assert!(b.push(req(0, 1)));
+        assert!(b.push(req(1, 1)));
+        assert!(!b.push(req(2, 1)));
+    }
+
+    #[test]
+    fn prop_batches_respect_budget_and_fifo() {
+        property("batcher budget+fifo", 100, |g: &mut Gen| {
+            let budget = g.usize_in(50..400);
+            let mut b = Batcher::new(budget, 8, 64);
+            let n = g.usize_in(1..30);
+            for i in 0..n {
+                let len = g.usize_in(1..200);
+                b.push(req(i as u64, len));
+            }
+            let mut last_id = None;
+            while !b.is_empty() {
+                let batch = b.next_batch();
+                assert!(!batch.is_empty(), "progress guaranteed");
+                let tokens: usize =
+                    batch.iter().map(|r| r.prompt_len()).sum();
+                if batch.len() > 1 {
+                    assert!(tokens <= budget,
+                            "multi-request batch over budget");
+                }
+                for r in &batch {
+                    if let Some(l) = last_id {
+                        assert!(r.id > l, "FIFO violated");
+                    }
+                    last_id = Some(r.id);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,325 @@
+//! The prefill/decode engine — the executor of the paper's Algorithm 1.
+//!
+//! Per layer: run the qkv artifact, let the strategy decide a per-head
+//! plan from lazily-computed probes, pack each head's mask into the
+//! smallest budget bucket, run the budgeted L1 attention kernel per head,
+//! feed dense heads' block-averaged QK maps back to the strategy (pivotal
+//! construction), and finish the layer with the post-attn artifact.
+//!
+//! The engine also owns decode (dense attention over the KV cache via the
+//! fused decode artifact) — all baselines share it, as in the paper.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::attention::pivotal::scatter_abar;
+use crate::attention::BlockMask;
+use crate::methods::{PatternLabel, PatternStrategy, Probes};
+use crate::model::Stages;
+use crate::runtime::{Registry, Tensor};
+use crate::util::timer::{StageProfiler, Timer};
+use crate::BLOCK_SIZE;
+
+/// Padding token used to right-pad prompts to the seq bucket (newline in
+/// the byte-level vocab — innocuous filler; evals generate bucket-exact
+/// prompts so padding never affects reported scores).
+pub const PAD_TOKEN: i32 = 10;
+
+/// Outcome of one prefill.
+pub struct PrefillResult {
+    /// Final hidden states `[S, Dm]` (bucket-padded).
+    pub hidden: Tensor,
+    /// Per-layer KV caches `[Hkv, S, D]` (bucket-padded, pre-repeat).
+    pub kv: Vec<(Tensor, Tensor)>,
+    /// Bucket the prompt ran at.
+    pub seq: usize,
+    /// Real prompt length (<= seq).
+    pub real_len: usize,
+    pub stats: PrefillStats,
+}
+
+/// Prefill accounting (drives Figures 5/6 and the latency benches).
+#[derive(Debug, Default, Clone)]
+pub struct PrefillStats {
+    pub latency_us: u64,
+    /// Causal blocks computed vs. total across all layers/heads.
+    pub blocks_computed: usize,
+    pub blocks_total: usize,
+    /// Pattern label counts across all layers/heads.
+    pub dense: usize,
+    pub shared: usize,
+    pub vslash: usize,
+    pub query_aware: usize,
+    pub profiler: StageProfiler,
+}
+
+impl PrefillStats {
+    pub fn density(&self) -> f64 {
+        if self.blocks_total == 0 {
+            1.0
+        } else {
+            self.blocks_computed as f64 / self.blocks_total as f64
+        }
+    }
+}
+
+/// Lazy probe provider for one layer (computes each probe at most once).
+struct LayerProbes<'a> {
+    stages: &'a Stages,
+    seq: usize,
+    q: &'a Tensor,
+    k_rep: &'a Tensor,
+    prof: &'a mut StageProfiler,
+    ahat: Option<Tensor>,
+    vslash: Option<Tensor>,
+    flex: Option<Tensor>,
+}
+
+impl<'a> Probes for LayerProbes<'a> {
+    fn ahat(&mut self) -> Result<&Tensor> {
+        if self.ahat.is_none() {
+            let qh = self.stages.last_block_q(self.q, self.seq)?;
+            self.ahat = Some(self.stages.pattern_probe(
+                qh, self.k_rep.clone(), self.seq, self.prof)?);
+        }
+        Ok(self.ahat.as_ref().unwrap())
+    }
+
+    fn vslash_map(&mut self) -> Result<&Tensor> {
+        if self.vslash.is_none() {
+            let qh = self.stages.last_block_q(self.q, self.seq)?;
+            self.vslash = Some(self.stages.vslash_probe(
+                qh, self.k_rep.clone(), self.seq, self.prof)?);
+        }
+        Ok(self.vslash.as_ref().unwrap())
+    }
+
+    fn flex_map(&mut self) -> Result<&Tensor> {
+        if self.flex.is_none() {
+            self.flex = Some(self.stages.flex_probe(
+                self.q.clone(), self.k_rep.clone(), self.seq, self.prof)?);
+        }
+        Ok(self.flex.as_ref().unwrap())
+    }
+}
+
+/// The engine: one model + one strategy.
+pub struct Engine {
+    pub stages: Stages,
+    pub strategy: Box<dyn PatternStrategy>,
+}
+
+impl Engine {
+    pub fn new(registry: Rc<Registry>, model: &str,
+               strategy: Box<dyn PatternStrategy>) -> Result<Engine> {
+        Ok(Engine { stages: Stages::new(registry, model)?, strategy })
+    }
+
+    /// Run prefill on a prompt. Pads to the smallest seq bucket.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillResult> {
+        let timer = Timer::start();
+        let spec = self.stages.spec.clone();
+        let seq = spec.seq_bucket_for(tokens.len())?;
+        let mut padded = tokens.to_vec();
+        padded.resize(seq, PAD_TOKEN);
+        let nb = seq / BLOCK_SIZE;
+        let h = spec.num_heads;
+        let mut stats = PrefillStats::default();
+        let mut prof = StageProfiler::new();
+
+        self.strategy.begin_request(seq);
+        let mut x = self.stages.embed(&padded, seq, &mut prof)?;
+        let mut kv = Vec::with_capacity(spec.num_layers);
+
+        for layer in 0..spec.num_layers {
+            let qkv = self.stages.qkv(layer, &x, seq, &mut prof)?;
+            let k_rep = self.stages.repeat_kv(&qkv.k)?;
+            let v_rep = self.stages.repeat_kv(&qkv.v)?;
+
+            let plans = {
+                let mut probes = LayerProbes {
+                    stages: &self.stages,
+                    seq,
+                    q: &qkv.q,
+                    k_rep: &k_rep,
+                    prof: &mut prof,
+                    ahat: None,
+                    vslash: None,
+                    flex: None,
+                };
+                self.strategy.plan_layer(layer, seq, h, &mut probes)?
+            };
+            debug_assert_eq!(plans.len(), h);
+
+            // Per-head budgeted attention.
+            let mut attn_out = vec![0f32; h * seq * spec.head_dim];
+            for (head, plan) in plans.iter().enumerate() {
+                let (mask_owned, budget, label) = match &plan.mask {
+                    None => (BlockMask::dense(nb), nb, plan.label),
+                    Some(m) => {
+                        let b = spec.budget_bucket_for(seq, m.max_row());
+                        (m.clone(), b, plan.label)
+                    }
+                };
+                stats.blocks_computed += mask_owned
+                    .count()
+                    .min(nb * (nb + 1) / 2);
+                stats.blocks_total += nb * (nb + 1) / 2;
+                match label {
+                    PatternLabel::Dense => stats.dense += 1,
+                    PatternLabel::Shared => stats.shared += 1,
+                    PatternLabel::VSlash => stats.vslash += 1,
+                    PatternLabel::QueryAware => stats.query_aware += 1,
+                }
+                let (idx, valid) = mask_owned.pack(budget);
+                let qh = self.stages.head_q(&qkv.q, head)?;
+                let kh = k_rep.index_axis0(head)?;
+                let vh = v_rep.index_axis0(head)?;
+                let (o, abar) = self.stages.attn_head(
+                    seq, budget, qh, kh, vh, idx.clone(), valid.clone(),
+                    &mut prof)?;
+                attn_out[head * seq * spec.head_dim
+                         ..(head + 1) * seq * spec.head_dim]
+                    .copy_from_slice(o.as_f32()?);
+                if plan.publish {
+                    let full = scatter_abar(
+                        abar.as_f32()?, idx.as_i32()?, valid.as_f32()?, nb,
+                        budget);
+                    self.strategy.publish_abar(layer, head, nb, &full);
+                }
+            }
+            let attn_t = Tensor::f32(vec![h, seq, spec.head_dim], attn_out);
+            x = self.stages.post_attn(layer, attn_t, &x, seq, &mut prof)?;
+            kv.push((qkv.k, qkv.v));
+        }
+
+        stats.latency_us = timer.elapsed_us();
+        stats.profiler = prof;
+        Ok(PrefillResult {
+            hidden: x,
+            kv,
+            seq,
+            real_len: tokens.len(),
+            stats,
+        })
+    }
+
+    /// Logits for every (bucket) position: `[S, V]`.
+    pub fn logits_full(&self, pre: &PrefillResult) -> Result<Tensor> {
+        let mut prof = StageProfiler::new();
+        self.stages.lm_head(&pre.hidden, pre.seq, &mut prof)
+    }
+
+    /// Logits at the last *real* position: `[V]`.
+    pub fn logits_last(&self, pre: &PrefillResult) -> Result<Vec<f32>> {
+        let mut prof = StageProfiler::new();
+        let dm = self.stages.spec.hidden;
+        let hid = pre.hidden.as_f32()?;
+        let row =
+            &hid[(pre.real_len - 1) * dm..pre.real_len * dm];
+        let x = Tensor::f32(vec![1, dm], row.to_vec());
+        let out = self.stages.lm_head(&x, 1, &mut prof)?;
+        Ok(out.into_f32()?)
+    }
+
+    /// Greedy decode `n` tokens after a prefill.  Dense attention over the
+    /// KV cache via the fused decode artifact (all methods share this
+    /// phase, as in the paper's setup).
+    pub fn decode(&mut self, pre: &PrefillResult, n: usize)
+                  -> Result<(Vec<i32>, u64)> {
+        let timer = Timer::start();
+        let spec = self.stages.spec.clone();
+        let mut prof = StageProfiler::new();
+        let smax = spec.max_seq;
+        let (hkv, d) = (spec.num_kv_heads, spec.head_dim);
+        // materialize padded caches
+        let mut kcaches = Vec::new();
+        let mut vcaches = Vec::new();
+        for (k, v) in &pre.kv {
+            let mut kc = vec![0f32; hkv * smax * d];
+            let mut vc = vec![0f32; hkv * smax * d];
+            let ks = k.as_f32()?;
+            let vs = v.as_f32()?;
+            let s = pre.seq;
+            for hh in 0..hkv {
+                // only the real prefix is live
+                let live = pre.real_len * d;
+                kc[hh * smax * d..hh * smax * d + live]
+                    .copy_from_slice(&ks[hh * s * d..hh * s * d + live]);
+                vc[hh * smax * d..hh * smax * d + live]
+                    .copy_from_slice(&vs[hh * s * d..hh * s * d + live]);
+            }
+            kcaches.push(kc);
+            vcaches.push(vc);
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut last = argmax(&self.logits_last(pre)?) as i32;
+        out.push(last);
+        let embed = self.stages.weights.embed.as_f32()?.to_vec();
+        let dm = spec.hidden;
+        for step in 1..n {
+            let pos = (pre.real_len + step - 1) as i32;
+            if pos as usize >= smax {
+                break;
+            }
+            // embed the last token in-rust (row gather)
+            let row = &embed[last as usize * dm..(last as usize + 1) * dm];
+            let mut x = Tensor::f32(vec![1, dm], row.to_vec());
+            for layer in 0..spec.num_layers {
+                let kc = Tensor::f32(vec![hkv, smax, d],
+                                     kcaches[layer].clone());
+                let vc = Tensor::f32(vec![hkv, smax, d],
+                                     vcaches[layer].clone());
+                let (x2, k_new, v_new) = self.stages.decode_layer(
+                    layer, &x, &kc, &vc, pos, &mut prof)?;
+                x = x2;
+                // write new kv rows into the host caches at `pos`
+                let kn = k_new.as_f32()?;
+                let vn = v_new.as_f32()?;
+                for hh in 0..hkv {
+                    let dst = hh * smax * d + pos as usize * d;
+                    kcaches[layer][dst..dst + d]
+                        .copy_from_slice(&kn[hh * d..(hh + 1) * d]);
+                    vcaches[layer][dst..dst + d]
+                        .copy_from_slice(&vn[hh * d..(hh + 1) * d]);
+                }
+            }
+            let logits = self.stages.lm_head(&x, 1, &mut prof)?;
+            last = argmax(logits.as_f32()?) as i32;
+            out.push(last);
+        }
+        Ok((out, timer.elapsed_us()))
+    }
+}
+
+/// Index of the max element.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn stats_density() {
+        let mut s = PrefillStats::default();
+        assert_eq!(s.density(), 1.0);
+        s.blocks_total = 100;
+        s.blocks_computed = 25;
+        assert!((s.density() - 0.25).abs() < 1e-12);
+    }
+}

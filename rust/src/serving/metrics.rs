@@ -1,0 +1,93 @@
+//! Serving metrics: request latency histograms, throughput counters and
+//! pattern-distribution aggregation across requests.
+
+use crate::util::stats::{Histogram, Summary};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub prefill_us: Histogram,
+    pub decode_us: Histogram,
+    pub queue_us: Histogram,
+    pub density: Summary,
+    pub dense_heads: u64,
+    pub shared_heads: u64,
+    pub vslash_heads: u64,
+    pub query_aware_heads: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_prefill(&mut self, stats: &super::engine::PrefillStats) {
+        self.prefill_us.record_us(stats.latency_us);
+        self.density.add(stats.density());
+        self.dense_heads += stats.dense as u64;
+        self.shared_heads += stats.shared as u64;
+        self.vslash_heads += stats.vslash as u64;
+        self.query_aware_heads += stats.query_aware as u64;
+    }
+
+    /// Tokens per second over the lifetime prompt tokens.
+    pub fn prefill_throughput(&self) -> f64 {
+        let total_us: f64 =
+            self.prefill_us.mean_us() * self.prefill_us.count() as f64;
+        if total_us == 0.0 {
+            0.0
+        } else {
+            self.prompt_tokens as f64 / (total_us / 1e6)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {} done, {} rejected\n\
+             tokens: {} prompt, {} generated\n\
+             prefill: mean {:.1} ms, p99 ≤ {:.1} ms ({} samples)\n\
+             decode:  mean {:.1} ms\n\
+             queue:   mean {:.2} ms\n\
+             density: mean {:.3} (computed/causal blocks)\n\
+             patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
+             prefill throughput: {:.0} tok/s",
+            self.requests_completed, self.requests_rejected,
+            self.prompt_tokens, self.generated_tokens,
+            self.prefill_us.mean_us() / 1e3,
+            self.prefill_us.quantile_us(0.99) as f64 / 1e3,
+            self.prefill_us.count(),
+            self.decode_us.mean_us() / 1e3,
+            self.queue_us.mean_us() / 1e3,
+            self.density.mean(),
+            self.dense_heads, self.shared_heads, self.vslash_heads,
+            self.query_aware_heads,
+            self.prefill_throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::engine::PrefillStats;
+
+    #[test]
+    fn record_and_report() {
+        let mut m = Metrics::new();
+        let mut s = PrefillStats::default();
+        s.latency_us = 5_000;
+        s.blocks_total = 10;
+        s.blocks_computed = 5;
+        s.shared = 3;
+        m.record_prefill(&s);
+        m.requests_completed = 1;
+        m.prompt_tokens = 1024;
+        let r = m.report();
+        assert!(r.contains("shared 3"));
+        assert!(m.prefill_throughput() > 0.0);
+        assert!((m.density.mean() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! The serving coordinator: request/response types, dynamic batcher,
+//! paged KV-cache accounting, the prefill/decode engine (the executor of
+//! the paper's Algorithm 1), the scheduler gluing them together, metrics,
+//! and the thread+channel server front-end.
+
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{Engine, PrefillResult};
+pub use request::{Request, RequestId, Response};

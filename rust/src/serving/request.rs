@@ -1,0 +1,61 @@
+//! Request / response types flowing through the serving stack.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// An inference request: prompt tokens + generation length.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, tokens: Vec<i32>, max_new_tokens: usize)
+               -> Request {
+        Request { id, tokens, max_new_tokens, arrived: Instant::now() }
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub generated: Vec<i32>,
+    /// Last-position prompt logits argmax (first generated token source).
+    pub prefill_us: u64,
+    pub decode_us: u64,
+    pub queue_us: u64,
+    /// Fraction of causal blocks actually computed during prefill.
+    pub density: f64,
+}
+
+/// Lifecycle state (observability / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Done,
+    Rejected,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_basics() {
+        let r = Request::new(7, vec![1, 2, 3], 4);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt_len(), 3);
+        assert_eq!(r.max_new_tokens, 4);
+    }
+}

@@ -1,0 +1,106 @@
+//! Scheduler: glues batcher + KV admission + engine into the serving loop.
+//! Round-based: pull a batch, admit what the KV allocator can hold, run
+//! prefill → decode per request, release blocks, record metrics.
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+
+use super::batcher::Batcher;
+use super::engine::Engine;
+use super::kvcache::KvAllocator;
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+pub struct Scheduler {
+    pub batcher: Batcher,
+    pub kv: KvAllocator,
+    pub metrics: Metrics,
+    decode_tokens: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &ServeConfig) -> Scheduler {
+        Scheduler {
+            batcher: Batcher::new(cfg.max_batch_tokens,
+                                  cfg.max_batch_requests,
+                                  cfg.queue_capacity),
+            kv: KvAllocator::new(cfg.kv_blocks),
+            metrics: Metrics::new(),
+            decode_tokens: cfg.decode_tokens,
+        }
+    }
+
+    /// Submit a request; false = queue full (rejected).
+    pub fn submit(&mut self, r: Request) -> bool {
+        let ok = self.batcher.push(r);
+        if !ok {
+            self.metrics.requests_rejected += 1;
+        }
+        ok
+    }
+
+    pub fn pending(&self) -> usize {
+        self.batcher.len()
+    }
+
+    /// Run one scheduling round on `engine`. Returns completed responses.
+    pub fn run_round(&mut self, engine: &mut Engine)
+                     -> Result<Vec<Response>> {
+        let batch = self.batcher.next_batch();
+        let mut responses = Vec::with_capacity(batch.len());
+        for req in batch {
+            let queue_us = req.arrived.elapsed().as_micros() as u64;
+            let layers = engine.stages.spec.num_layers;
+            let need = KvAllocator::blocks_needed(
+                req.prompt_len(), self.decode_tokens, layers);
+            let blocks = match self.kv.alloc(need) {
+                Ok(b) => b,
+                Err(_) => {
+                    // out of cache: reject (a fuller system would re-queue)
+                    self.metrics.requests_rejected += 1;
+                    continue;
+                }
+            };
+            let pre = engine.prefill(&req.tokens)?;
+            self.metrics.record_prefill(&pre.stats);
+            self.metrics.prompt_tokens += req.prompt_len() as u64;
+            let n = req.max_new_tokens.min(self.decode_tokens.max(1));
+            let (generated, decode_us) = if n > 0 {
+                engine.decode(&pre, n)?
+            } else {
+                (Vec::new(), 0)
+            };
+            self.kv.release(&blocks)?;
+            self.metrics.decode_us.record_us(decode_us);
+            self.metrics.queue_us.record_us(queue_us);
+            self.metrics.generated_tokens += generated.len() as u64;
+            self.metrics.requests_completed += 1;
+            responses.push(Response {
+                id: req.id,
+                generated,
+                prefill_us: pre.stats.latency_us,
+                decode_us,
+                queue_us,
+                density: pre.stats.density(),
+            });
+        }
+        Ok(responses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    #[test]
+    fn submit_reject_accounting() {
+        let cfg = ServeConfig { queue_capacity: 1, ..Default::default() };
+        let mut s = Scheduler::new(&cfg);
+        assert!(s.submit(Request::new(0, vec![0; 8], 0)));
+        assert!(!s.submit(Request::new(1, vec![0; 8], 0)));
+        assert_eq!(s.metrics.requests_rejected, 1);
+        assert_eq!(s.pending(), 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Thread + channel server front-end: clients submit [`Request`]s through
+//! an mpsc sender; a worker thread owns the engine (PJRT handles are not
+//! `Send`-safe across this crate's wrappers, so the engine lives on its
+//! thread and the handle talks over channels — the std-thread analog of
+//! the tokio actor pattern this architecture would use with more cores).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use super::request::{Request, Response};
+
+/// Commands accepted by the serving thread.
+pub enum Command {
+    Submit(Request),
+    /// Drain the queue, then send a metrics report and stop.
+    Shutdown,
+}
+
+/// Client handle.
+pub struct ServerHandle {
+    pub tx: mpsc::Sender<Command>,
+    pub responses: mpsc::Receiver<Response>,
+    pub report: mpsc::Receiver<String>,
+}
+
+impl ServerHandle {
+    pub fn submit(&self, r: Request) {
+        let _ = self.tx.send(Command::Submit(r));
+    }
+
+    pub fn shutdown_and_report(self) -> (Vec<Response>, String) {
+        let _ = self.tx.send(Command::Shutdown);
+        let mut out = Vec::new();
+        // collect whatever is in flight until the report arrives
+        loop {
+            match self.responses.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => out.push(r),
+                Err(_) => {
+                    if let Ok(rep) = self.report.try_recv() {
+                        // drain any stragglers
+                        while let Ok(r) = self.responses.try_recv() {
+                            out.push(r);
+                        }
+                        return (out, rep);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Spawn the serving loop. `make_engine` runs on the worker thread (PJRT
+/// client construction included) — errors surface through the report
+/// channel.
+pub fn spawn<F>(make_engine: F) -> ServerHandle
+where
+    F: FnOnce() -> anyhow::Result<(super::scheduler::Scheduler,
+                                   super::engine::Engine)>
+        + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<Command>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let (rep_tx, rep_rx) = mpsc::channel::<String>();
+    std::thread::spawn(move || {
+        let (mut sched, mut engine) = match make_engine() {
+            Ok(x) => x,
+            Err(e) => {
+                let _ = rep_tx.send(format!("engine init failed: {e:#}"));
+                return;
+            }
+        };
+        let mut shutting_down = false;
+        loop {
+            // ingest commands (non-blocking when work is pending)
+            loop {
+                let cmd = if sched.pending() == 0 && !shutting_down {
+                    match rx.recv() {
+                        Ok(c) => c,
+                        Err(_) => return,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(c) => c,
+                        Err(_) => break,
+                    }
+                };
+                match cmd {
+                    Command::Submit(r) => {
+                        sched.submit(r);
+                    }
+                    Command::Shutdown => shutting_down = true,
+                }
+            }
+            match sched.run_round(&mut engine) {
+                Ok(rs) => {
+                    for r in rs {
+                        let _ = resp_tx.send(r);
+                    }
+                }
+                Err(e) => {
+                    let _ = rep_tx.send(format!("engine error: {e:#}"));
+                    return;
+                }
+            }
+            if shutting_down && sched.pending() == 0 {
+                let _ = rep_tx.send(sched.metrics.report());
+                return;
+            }
+        }
+    });
+    ServerHandle { tx, responses: resp_rx, report: rep_rx }
+}

@@ -1,0 +1,145 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`,
+//! with typed accessors and a generated usage string.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I,
+                                                 flag_names: &[&str])
+                                                 -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        anyhow!("option --{name} expects a value")
+                    })?;
+                    out.options.insert(name.to_string(), v);
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("option --{name}: '{v}' is not an integer")
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("option --{name}: '{v}' is not a number")
+            }),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        match &self.subcommand {
+            Some(s) => Ok(s),
+            None => bail!("missing subcommand"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string), &["verbose"])
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_positionals() {
+        let a = parse("serve --model sim-llama --port 8080 extra1 extra2");
+        assert_eq!(a.subcommand().unwrap(), "serve");
+        assert_eq!(a.opt("model").unwrap(), "sim-llama");
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn flags_and_eq_syntax() {
+        let a = parse("eval --verbose --tau=0.25");
+        assert!(a.flag("verbose"));
+        assert!((a.f64_or("tau", 0.0).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("eval --methods ours,flash");
+        assert_eq!(a.list_or("methods", &[]), vec!["ours", "flash"]);
+        assert_eq!(a.list_or("tasks", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["x".into(), "--model".into()], &[]).is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.require("missing").is_err());
+    }
+}

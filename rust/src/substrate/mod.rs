@@ -1,0 +1,9 @@
+//! Self-contained substrates the coordinator depends on.  The offline
+//! vendor set provides only `xla`, `anyhow`, `once_cell`, so serialization
+//! and CLI parsing are implemented here (and tested as first-class
+//! modules — see DESIGN.md "Substitutions").
+
+pub mod cli;
+pub mod json;
+pub mod tenstore;
+pub mod tomlmini;

@@ -1,0 +1,174 @@
+//! Reader for the `tenstore` weight archive written by
+//! `python/compile/tenstore.py` (format documented there): magic
+//! `TENSTOR1`, u64-LE header length, JSON header, raw f32-LE payload.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::json;
+
+/// One stored tensor: row-major f32 data + shape.
+#[derive(Debug, Clone)]
+pub struct StoredTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl StoredTensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The archive: name → tensor.
+#[derive(Debug, Default)]
+pub struct TenStore {
+    pub tensors: BTreeMap<String, StoredTensor>,
+}
+
+impl TenStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read(path.as_ref()).with_context(|| {
+            format!("reading tenstore {:?}", path.as_ref())
+        })?;
+        Self::from_bytes(&raw)
+    }
+
+    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 16 || &raw[..8] != b"TENSTOR1" {
+            bail!("bad tenstore magic");
+        }
+        let hlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        if 16 + hlen > raw.len() {
+            bail!("truncated tenstore header");
+        }
+        let header = json::parse(std::str::from_utf8(&raw[16..16 + hlen])?)?;
+        let base = 16 + hlen;
+        let mut tensors = BTreeMap::new();
+        for (name, meta) in header.req("tensors")?.as_obj()? {
+            let dtype = meta.req("dtype")?.as_str()?;
+            if dtype != "f32" {
+                bail!("tensor '{name}': unsupported dtype {dtype}");
+            }
+            let shape = meta.req("shape")?.usize_list()?;
+            let offset = meta.req("offset")?.as_usize()?;
+            let nbytes = meta.req("nbytes")?.as_usize()?;
+            let count = nbytes / 4;
+            if shape.iter().product::<usize>() != count {
+                bail!("tensor '{name}': shape/nbytes mismatch");
+            }
+            let end = base + offset + nbytes;
+            if end > raw.len() {
+                bail!("tensor '{name}': payload out of bounds");
+            }
+            let bytes = &raw[base + offset..end];
+            let mut data = vec![0f32; count];
+            for (i, ch) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(ch.try_into().unwrap());
+            }
+            tensors.insert(name.clone(), StoredTensor { shape, data });
+        }
+        Ok(TenStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&StoredTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tenstore: missing tensor '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    /// Writer (used by tests and by `shareprefill cluster` to persist
+    /// calibration features).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut payload: Vec<u8> = Vec::new();
+        let mut entries = BTreeMap::new();
+        for (name, t) in &self.tensors {
+            let offset = payload.len();
+            for v in &t.data {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            entries.insert(
+                name.clone(),
+                json::Json::obj(vec![
+                    ("dtype", json::Json::str("f32")),
+                    ("shape",
+                     json::Json::Arr(t.shape.iter()
+                         .map(|&s| json::Json::num(s as f64)).collect())),
+                    ("offset", json::Json::num(offset as f64)),
+                    ("nbytes", json::Json::num((t.data.len() * 4) as f64)),
+                ]),
+            );
+        }
+        let header = json::Json::obj(vec![(
+            "tensors",
+            json::Json::Obj(entries),
+        )])
+        .to_string();
+        let mut out = Vec::with_capacity(16 + header.len() + payload.len());
+        out.extend_from_slice(b"TENSTOR1");
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&payload);
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TenStore {
+        let mut t = TenStore::default();
+        t.tensors.insert(
+            "a".into(),
+            StoredTensor { shape: vec![2, 3], data: vec![0., 1., 2., 3., 4., 5.] },
+        );
+        t.tensors.insert(
+            "b.c".into(),
+            StoredTensor { shape: vec![4], data: vec![9.; 4] },
+        );
+        t
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("tenstore_rt.bin");
+        sample().save(&dir).unwrap();
+        let back = TenStore::load(&dir).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.get("a").unwrap().data, vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(back.get("b.c").unwrap().data, vec![9.; 4]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TenStore::from_bytes(b"NOTMAGICxxxxxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("tenstore_trunc.bin");
+        sample().save(&dir).unwrap();
+        let mut raw = std::fs::read(&dir).unwrap();
+        raw.truncate(raw.len() - 4);
+        assert!(TenStore::from_bytes(&raw).is_err());
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        assert!(sample().get("nope").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! TOML-subset parser for the config system: `[section]` + `[section.sub]`
+//! headers, `key = value` lines with string / number / bool / inline array
+//! values, `#` comments.  Flattened into `section.key` → value, which is
+//! what the typed config layer (`config::`) consumes.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_f64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flattened key → value map.
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+}
+
+pub fn parse(src: &str) -> Result<Toml> {
+    let mut out = Toml::default();
+    let mut section = String::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected 'key = value'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.entries.insert(full, val);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(body) = inner.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("unterminated array");
+        };
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        return Ok(Value::Arr(
+            body.split(',')
+                .map(|e| parse_value(e.trim()))
+                .collect::<Result<Vec<_>>>()?,
+        ));
+    }
+    match s.parse::<f64>() {
+        Ok(n) => Ok(Value::Num(n)),
+        Err(_) => bail!("cannot parse value '{s}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "demo"
+count = 3
+
+[method]
+kind = "shareprefill"  # inline comment
+tau = 0.2
+delta = 0.3
+share = true
+buckets = [1, 2, 4]
+
+[method.nested]
+x = 1
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse(SAMPLE).unwrap();
+        assert_eq!(t.get("name").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(t.get("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(t.get("method.kind").unwrap().as_str().unwrap(),
+                   "shareprefill");
+        assert!((t.get("method.tau").unwrap().as_f64().unwrap() - 0.2).abs()
+                < 1e-12);
+        assert!(t.get("method.share").unwrap().as_bool().unwrap());
+        assert_eq!(t.get("method.nested.x").unwrap().as_usize().unwrap(), 1);
+        match t.get("method.buckets").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults() {
+        let t = parse("").unwrap();
+        assert_eq!(t.str_or("x", "d"), "d");
+        assert_eq!(t.usize_or("y", 7), 7);
+        assert!((t.f64_or("z", 0.5) - 0.5).abs() < 1e-12);
+        assert!(t.bool_or("b", true));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let t = parse("s = \"a#b\"").unwrap();
+        assert_eq!(t.get("s").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @").is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! ASCII rendering: markdown tables, block-pattern heatmaps and simple
+//! line charts. The paper's figures are regenerated as text artifacts
+//! (CSV + ASCII) since the harness is terminal-only.
+
+/// Render a markdown table. `align_right` applies to all non-first columns.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for (i, _) in headers.iter().enumerate() {
+        out.push_str(if i == 0 { "---|" } else { "---:|" });
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str("| ");
+        out.push_str(&row.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+/// Heatmap of a row-major matrix using a density ramp (dark = large).
+/// Used for Figure 2-style attention-pattern dumps.
+pub fn heatmap(data: &[f32], rows: usize, cols: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    assert_eq!(data.len(), rows * cols);
+    let max = data.iter().copied().fold(f32::MIN, f32::max).max(1e-30);
+    let mut out = String::with_capacity(rows * (cols + 1));
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = (data[r * cols + c] / max).clamp(0.0, 1.0);
+            let i = ((v * (RAMP.len() - 1) as f32).round()) as usize;
+            out.push(RAMP[i] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Binary block-mask rendering: `#` computed, `.` skipped, ` ` above diag.
+pub fn mask_map(mask: &[bool], nb: usize) -> String {
+    let mut out = String::new();
+    for i in 0..nb {
+        for j in 0..nb {
+            out.push(if j > i {
+                ' '
+            } else if mask[i * nb + j] {
+                '#'
+            } else {
+                '.'
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Minimal multi-series line chart on a character grid; series are labeled
+/// a, b, c… and scaled to the global y range. x values are implicit ranks.
+pub fn line_chart(series: &[(&str, Vec<f64>)], width: usize, height: usize)
+                  -> String {
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in ys {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() || ymax <= ymin {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![b' '; width * height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let n = ys.len().max(2);
+        for (i, &y) in ys.iter().enumerate() {
+            let x = i * (width - 1) / (n - 1);
+            let fy = (y - ymin) / (ymax - ymin);
+            let row = height - 1 - (fy * (height - 1) as f64).round() as usize;
+            grid[row * width + x] = b'a' + (si as u8 % 26);
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("  ymax={ymax:.3}\n"));
+    for r in 0..height {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&grid[r * width..(r + 1) * width])
+            .unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{} ymin={ymin:.3}\n", "-".repeat(width)));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {}={}\n", (b'a' + si as u8) as char, name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape() {
+        let t = markdown_table(&["a", "b"],
+                               &[vec!["1".into(), "2".into()]]);
+        assert!(t.starts_with("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn heatmap_dims() {
+        let h = heatmap(&[0.0, 1.0, 0.5, 0.25], 2, 2);
+        assert_eq!(h.lines().count(), 2);
+        assert!(h.contains('@'));
+    }
+
+    #[test]
+    fn mask_map_triangle() {
+        let m = mask_map(&[true, false, true, true], 2);
+        let lines: Vec<&str> = m.lines().collect();
+        assert_eq!(lines[0], "# ");
+        assert_eq!(lines[1], "##");
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let c = line_chart(&[("x", vec![0.0, 1.0]), ("y", vec![1.0, 0.0])],
+                           20, 5);
+        assert!(c.contains('a') && c.contains('b'));
+        assert!(c.contains("a=x"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Math helpers shared by the pattern engine: numerically-stable softmax,
+//! KL / Jensen–Shannon divergence, top-k and cumulative-mass selection.
+//!
+//! These implement the scalar machinery of the paper's Algorithms 2, 3, 5:
+//! `softmax` turns block-averaged QK values (Ã) into block-averaged
+//! attention scores; `js_distance` is the sparsity / similarity test
+//! (Alg. 3 line 6); `cumulative_select` is the minimal-budget selection
+//! (`min { k : Σ a[I[1:k]] >= γ }`) used by both pivotal-pattern
+//! construction (Alg. 2) and vertical-slash search (Alg. 5).
+
+pub const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// In-place numerically-stable softmax over a slice; `-inf` entries get 0.
+/// A fully `-inf` slice becomes all-zero (not NaN).
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().copied().fold(NEG_INF, f32::max);
+    if !m.is_finite() {
+        xs.iter_mut().for_each(|x| *x = 0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = if x.is_finite() { (*x - m).exp() } else { 0.0 };
+        sum += *x;
+    }
+    if sum > 0.0 {
+        xs.iter_mut().for_each(|x| *x /= sum);
+    }
+}
+
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    softmax_inplace(&mut v);
+    v
+}
+
+/// Normalize a non-negative slice to sum 1 (no-op on all-zero input).
+pub fn normalize(xs: &mut [f32]) {
+    let s: f32 = xs.iter().sum();
+    if s > 0.0 {
+        xs.iter_mut().for_each(|x| *x /= s);
+    }
+}
+
+/// KL(p ‖ q) with the 0·log(0/·) = 0 convention; q entries are floored to
+/// avoid infinities from empirical zeros.
+fn kl(p: &[f32], q: &[f32]) -> f64 {
+    let eps = 1e-12f64;
+    p.iter()
+        .zip(q)
+        .filter(|(pi, _)| **pi > 0.0)
+        .map(|(pi, qi)| {
+            let pi = *pi as f64;
+            let qi = (*qi as f64).max(eps);
+            pi * (pi / qi).ln()
+        })
+        .sum()
+}
+
+/// Jensen–Shannon *divergence* (natural log): `0 ≤ JSD ≤ ln 2`.
+pub fn js_divergence(p: &[f32], q: &[f32]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    let m: Vec<f32> = p.iter().zip(q).map(|(a, b)| 0.5 * (a + b)).collect();
+    0.5 * kl(p, &m) + 0.5 * kl(q, &m)
+}
+
+/// The paper's distance: `sqrt(JSD(p ‖ q))` (Alg. 3 line 6), normalized by
+/// `sqrt(ln 2)` so thresholds τ, δ live in [0, 1] like the JS *distance*
+/// literature (and the paper's τ=0.2 / δ=0.3 defaults) expect.
+pub fn js_distance(p: &[f32], q: &[f32]) -> f64 {
+    (js_divergence(p, q) / std::f64::consts::LN_2).max(0.0).sqrt()
+}
+
+/// Uniform distribution of length n.
+pub fn uniform(n: usize) -> Vec<f32> {
+    vec![1.0 / n as f32; n]
+}
+
+/// Indices sorted by value descending.
+pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx
+}
+
+/// Minimal prefix of the descending-sorted indices whose mass reaches
+/// `gamma * total`; returns the selected indices. Always selects at least
+/// one element when the slice is non-empty with positive mass.
+pub fn cumulative_select(xs: &[f32], gamma: f32) -> Vec<usize> {
+    let total: f32 = xs.iter().filter(|x| x.is_finite()).sum();
+    if total <= 0.0 {
+        return Vec::new();
+    }
+    let order = argsort_desc(xs);
+    let mut acc = 0.0f32;
+    let mut out = Vec::new();
+    for i in order {
+        if !xs[i].is_finite() || xs[i] <= 0.0 {
+            break;
+        }
+        out.push(i);
+        acc += xs[i];
+        if acc >= gamma * total {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let s = softmax(&[1.0, 2.0, 3.0]);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn softmax_handles_neg_inf() {
+        let s = softmax(&[0.0, NEG_INF, 0.0]);
+        assert_eq!(s[1], 0.0);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+        let z = softmax(&[NEG_INF, NEG_INF]);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_large_values_stable() {
+        let s = softmax(&[1000.0, 1000.0]);
+        assert!((s[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jsd_bounds_and_symmetry() {
+        let p = [0.7, 0.2, 0.1];
+        let q = [0.1, 0.2, 0.7];
+        let d1 = js_divergence(&p, &q);
+        let d2 = js_divergence(&q, &p);
+        assert!((d1 - d2).abs() < 1e-12);
+        assert!(d1 > 0.0 && d1 <= std::f64::consts::LN_2 + 1e-9);
+        assert!(js_divergence(&p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn js_distance_normalized() {
+        // disjoint distributions hit the maximum: distance 1.0
+        let p = [1.0, 0.0];
+        let q = [0.0, 1.0];
+        assert!((js_distance(&p, &q) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cumulative_select_minimal() {
+        let xs = [0.5, 0.3, 0.15, 0.05];
+        assert_eq!(cumulative_select(&xs, 0.5), vec![0]);
+        assert_eq!(cumulative_select(&xs, 0.8), vec![0, 1]);
+        assert_eq!(cumulative_select(&xs, 0.9), vec![0, 1, 2]);
+        assert_eq!(cumulative_select(&xs, 1.0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cumulative_select_ignores_neg_inf() {
+        let xs = [NEG_INF, 1.0, NEG_INF, 1.0];
+        let sel = cumulative_select(&xs, 0.9);
+        assert_eq!(sel.len(), 2);
+        assert!(sel.contains(&1) && sel.contains(&3));
+    }
+
+    #[test]
+    fn argsort_desc_orders() {
+        assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG, summary statistics, timers,
+//! math helpers (softmax / JS divergence), ASCII rendering, and a mini
+//! property-testing framework (the offline vendor set has no `proptest`;
+//! see DESIGN.md "Substitutions").
+
+pub mod ascii;
+pub mod math;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

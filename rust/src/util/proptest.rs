@@ -1,0 +1,133 @@
+//! Mini property-testing framework (the offline vendor set has no
+//! `proptest`; DESIGN.md documents the substitution).
+//!
+//! Usage:
+//! ```no_run
+//! use shareprefill::util::proptest::{property, Gen};
+//! property("sorted stays sorted", 200, |g: &mut Gen| {
+//!     let mut v = g.vec_usize(0..50, 0..100);
+//!     v.sort_unstable();
+//!     for w in v.windows(2) { assert!(w[0] <= w[1]); }
+//! });
+//! ```
+//!
+//! On failure the property panics with the seed of the failing case so it
+//! can be replayed deterministically (`Gen::from_seed`). Shrinking is
+//! deliberately out of scope — cases are kept small by construction.
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, val: Range<usize>)
+                     -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(val.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32)
+                   -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A probability distribution of length n (non-negative, sums to 1).
+    pub fn distribution(&mut self, n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| self.rng.f32() + 1e-6).collect();
+        let s: f32 = v.iter().sum();
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+}
+
+/// Run `cases` random cases of `f`. Panics (with the failing seed) on the
+/// first failure. Base seed is derived from the property name so adding
+/// properties doesn't perturb existing ones.
+pub fn property(name: &str, cases: u64, mut f: impl FnMut(&mut Gen)) {
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::from_seed(seed);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut g)
+        }));
+        if let Err(e) = res {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (replay seed \
+                 {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_run_all_cases() {
+        let mut n = 0;
+        property("counter", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        property("distribution sums", 50, |g| {
+            let n = g.rng.range(1, 20);
+            let d = g.distribution(n);
+            assert!((d.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            assert!(d.iter().all(|&x| x > 0.0));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failure_reports_seed() {
+        property("always fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut a = Vec::new();
+        property("det", 5, |g| a.push(g.rng.next_u64()));
+        let mut b = Vec::new();
+        property("det", 5, |g| b.push(g.rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,119 @@
+//! Scoped wall-clock timers + a named stage profiler used to attribute
+//! prefill time to pattern-search / attention / projection stages (the
+//! §Perf breakdowns in EXPERIMENTS.md come from this).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.0.elapsed().as_micros() as u64
+    }
+}
+
+/// Accumulates time per named stage. Cheap enough for the hot path
+/// (one `Instant::now()` pair per scope).
+#[derive(Debug, Default, Clone)]
+pub struct StageProfiler {
+    totals_us: BTreeMap<&'static str, u64>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl StageProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, stage: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        *self.totals_us.entry(stage).or_default() +=
+            t.elapsed().as_micros() as u64;
+        *self.counts.entry(stage).or_default() += 1;
+        out
+    }
+
+    pub fn add_us(&mut self, stage: &'static str, us: u64) {
+        *self.totals_us.entry(stage).or_default() += us;
+        *self.counts.entry(stage).or_default() += 1;
+    }
+
+    pub fn total_us(&self, stage: &str) -> u64 {
+        self.totals_us.get(stage).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &StageProfiler) {
+        for (k, v) in &other.totals_us {
+            *self.totals_us.entry(k).or_default() += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += v;
+        }
+    }
+
+    /// Markdown table of stage → total ms / calls / mean µs, sorted by time.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.totals_us.iter().collect();
+        rows.sort_by_key(|(_, v)| std::cmp::Reverse(**v));
+        let mut out = String::from(
+            "| stage | total ms | calls | mean µs |\n|---|---:|---:|---:|\n");
+        for (k, v) in rows {
+            let n = self.counts[k];
+            out.push_str(&format!(
+                "| {} | {:.2} | {} | {:.1} |\n",
+                k,
+                **&v / 1000,
+                n,
+                *v as f64 / n as f64
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_us() >= 2000);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = StageProfiler::new();
+        p.add_us("attn", 100);
+        p.add_us("attn", 50);
+        p.add_us("probe", 10);
+        assert_eq!(p.total_us("attn"), 150);
+        assert_eq!(p.total_us("probe"), 10);
+        assert_eq!(p.total_us("missing"), 0);
+        let rep = p.report();
+        assert!(rep.contains("attn") && rep.contains("probe"));
+    }
+
+    #[test]
+    fn profiler_merge() {
+        let mut a = StageProfiler::new();
+        a.add_us("x", 5);
+        let mut b = StageProfiler::new();
+        b.add_us("x", 7);
+        a.merge(&b);
+        assert_eq!(a.total_us("x"), 12);
+    }
+}

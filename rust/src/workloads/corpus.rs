@@ -1,0 +1,176 @@
+//! Deterministic text generator — the rust mirror of
+//! `python/compile/corpus.py` (same archetypes: prose, key-value
+//! retrieval, dialogue, code-ish), used to build evaluation prompts that
+//! are in-distribution for the trained models.
+
+use crate::util::rng::Rng;
+
+pub const WORDS: &[&str] = &[
+    "the", "of", "and", "to", "in", "is", "was", "he", "for", "it", "with",
+    "as", "his", "on", "be", "at", "by", "had", "not", "are", "but", "from",
+    "or", "have", "an", "they", "which", "one", "you", "were", "all", "her",
+    "she", "there", "would", "their", "we", "him", "been", "has", "when",
+    "who", "will", "no", "more", "if", "out", "so", "up", "said", "what",
+    "its", "about", "than", "into", "them", "can", "only", "other", "time",
+    "new", "some", "could", "these", "two", "may", "first", "then", "do",
+    "any", "like", "my", "now", "over", "such", "our", "man", "me", "even",
+    "most", "made", "after", "also", "did", "many", "off", "before", "must",
+    "well", "back", "through", "years", "where", "much", "your", "way",
+    "down", "should", "because", "each", "just", "those", "people", "how",
+    "too", "good",
+];
+
+pub const NAMES: &[&str] = &[
+    "alder", "birch", "cedar", "dahlia", "elm", "fern", "gingko", "hazel",
+    "iris", "juniper", "kale", "lotus", "maple", "nettle", "oak", "poplar",
+    "quince", "rowan", "sage", "tulip",
+];
+
+/// Stateful text generator.
+pub struct TextGen {
+    pub rng: Rng,
+}
+
+impl TextGen {
+    pub fn new(seed: u64) -> TextGen {
+        TextGen { rng: Rng::new(seed) }
+    }
+
+    pub fn prose(&mut self, n_words: usize) -> String {
+        let mut out = String::new();
+        let mut line = 0usize;
+        for i in 0..n_words {
+            let w = self.rng.choose(WORDS);
+            if i > 0 {
+                out.push(if line > 70 { '\n' } else { ' ' });
+                if line > 70 {
+                    line = 0;
+                }
+            }
+            out.push_str(w);
+            line += w.len() + 1;
+            if self.rng.bool(0.08) {
+                out.push('.');
+            }
+        }
+        out
+    }
+
+    /// A key-value pair: (name, 6-digit value).
+    pub fn kv_pair(&mut self) -> (String, String) {
+        let name = format!("{}{}", self.rng.choose(NAMES),
+                           self.rng.range(10, 99));
+        let val: String = (0..6)
+            .map(|_| char::from(b'0' + self.rng.below(10) as u8))
+            .collect();
+        (name, val)
+    }
+
+    pub fn dialogue(&mut self, turns: usize) -> String {
+        const SPK: &[&str] = &["ann", "bob", "eve", "dan"];
+        let mut out = String::new();
+        for _ in 0..turns {
+            let s = self.rng.choose(SPK);
+            let n = self.rng.range(4, 12);
+            out.push_str(s);
+            out.push_str(": ");
+            out.push_str(&self.prose(n));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn codeish(&mut self, stmts: usize) -> String {
+        let mut out = String::new();
+        let mut depth = 0usize;
+        for _ in 0..stmts {
+            let r = self.rng.f64();
+            if r < 0.2 && depth < 3 {
+                out.push_str(&"  ".repeat(depth));
+                out.push_str(&format!("fn {}() {{\n", self.rng.choose(NAMES)));
+                depth += 1;
+            } else if r < 0.3 && depth > 0 {
+                depth -= 1;
+                out.push_str(&"  ".repeat(depth));
+                out.push_str("}\n");
+            } else {
+                out.push_str(&"  ".repeat(depth));
+                out.push_str(&format!("let {} = {} + {};\n",
+                                      self.rng.choose(NAMES),
+                                      self.rng.choose(NAMES),
+                                      self.rng.choose(NAMES)));
+            }
+        }
+        for d in (0..depth).rev() {
+            out.push_str(&"  ".repeat(d));
+            out.push_str("}\n");
+        }
+        out
+    }
+
+    /// Mixed filler text of roughly `n` bytes.
+    pub fn filler(&mut self, n: usize) -> String {
+        let mut out = String::new();
+        while out.len() < n {
+            let r = self.rng.f64();
+            if r < 0.5 {
+                let w = self.rng.range(30, 90);
+                out.push_str(&self.prose(w));
+            } else if r < 0.75 {
+                let t = self.rng.range(3, 8);
+                out.push_str(&self.dialogue(t));
+            } else {
+                let s = self.rng.range(8, 24);
+                out.push_str(&self.codeish(s));
+            }
+            out.push('\n');
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+/// Byte-level tokenization (the models are byte LMs with a 512 vocab).
+pub fn tokenize(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32).collect()
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens.iter()
+        .map(|&t| if (0..256).contains(&t) { t as u8 as char } else { '?' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = TextGen::new(3).filler(500);
+        let b = TextGen::new(3).filler(500);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 500);
+    }
+
+    #[test]
+    fn tokenize_roundtrip_ascii() {
+        let s = "hello, world";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn kv_pair_format() {
+        let mut g = TextGen::new(1);
+        let (name, val) = g.kv_pair();
+        assert!(name.len() >= 5);
+        assert_eq!(val.len(), 6);
+        assert!(val.bytes().all(|b| b.is_ascii_digit()));
+    }
+
+    #[test]
+    fn tokens_in_byte_range() {
+        let toks = tokenize(&TextGen::new(9).filler(2000));
+        assert!(toks.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

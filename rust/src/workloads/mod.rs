@@ -1,0 +1,14 @@
+//! Synthetic workloads mirroring the paper's evaluation suites:
+//! InfiniteBench-style tasks (Table 1), a PG19-style language-modeling
+//! corpus (Figure 4), and the MInference-style length-adjustable latency
+//! prompts (Figures 1 & 5).  All byte-level, deterministic from a seed,
+//! generated with the same archetype mix as the training corpus
+//! (`python/compile/corpus.py`) so the trained models are in-distribution.
+
+pub mod corpus;
+pub mod scoring;
+pub mod tasks;
+
+pub use corpus::TextGen;
+pub use tasks::{latency_prompt, pg19_sample, task_samples, Task, TaskSample,
+                TASK_NAMES};

@@ -1,0 +1,94 @@
+//! Scoring: exact-match for retrieval tasks, generation fidelity vs. the
+//! dense reference for open-ended tasks, token-level perplexity.
+
+use super::corpus::detokenize;
+
+/// Exact-match score (0/100): does the generation start with the answer?
+pub fn exact_match(generated: &[i32], answer: &str) -> f64 {
+    let text = detokenize(generated);
+    if text.trim_start().starts_with(answer) {
+        100.0
+    } else {
+        0.0
+    }
+}
+
+/// Generation fidelity (0..100): fraction of positions where the method's
+/// greedy generation agrees with the dense reference's.
+pub fn fidelity(generated: &[i32], reference: &[i32]) -> f64 {
+    if reference.is_empty() {
+        return 100.0;
+    }
+    let n = generated.len().min(reference.len());
+    let agree = (0..n).filter(|&i| generated[i] == reference[i]).count();
+    100.0 * agree as f64 / reference.len() as f64
+}
+
+/// Perplexity from next-token log-probs: logits `[S, V]` row-major over
+/// the *bucket*, targets are `tokens[1..real_len]`.
+pub fn perplexity(logits: &[f32], vocab: usize, tokens: &[i32],
+                  real_len: usize) -> f64 {
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for pos in 0..real_len.saturating_sub(1) {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let target = tokens[pos + 1] as usize;
+        // stable log-softmax
+        let m = row.iter().copied().fold(f32::MIN, f32::max);
+        let lse: f32 = row.iter().map(|&x| (x - m).exp()).sum::<f32>().ln()
+            + m;
+        nll += (lse - row[target]) as f64;
+        count += 1;
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match_prefix() {
+        let gen: Vec<i32> = "123456 and more".bytes()
+            .map(|b| b as i32).collect();
+        assert_eq!(exact_match(&gen, "123456"), 100.0);
+        assert_eq!(exact_match(&gen, "999999"), 0.0);
+    }
+
+    #[test]
+    fn exact_match_ignores_leading_space() {
+        let gen: Vec<i32> = " 42x".bytes().map(|b| b as i32).collect();
+        assert_eq!(exact_match(&gen, "42"), 100.0);
+    }
+
+    #[test]
+    fn fidelity_partial() {
+        assert_eq!(fidelity(&[1, 2, 3, 4], &[1, 2, 9, 9]), 50.0);
+        assert_eq!(fidelity(&[1, 2], &[1, 2]), 100.0);
+        assert_eq!(fidelity(&[], &[1, 2]), 0.0);
+        assert_eq!(fidelity(&[1], &[]), 100.0);
+    }
+
+    #[test]
+    fn perplexity_uniform_logits() {
+        // uniform logits over V=4 -> ppl == 4 regardless of targets
+        let v = 4;
+        let logits = vec![0f32; 3 * v];
+        let tokens = vec![0, 1, 2];
+        let ppl = perplexity(&logits, v, &tokens, 3);
+        assert!((ppl - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perplexity_confident_model() {
+        // logits strongly favoring the true next token -> ppl ≈ 1
+        let v = 4;
+        let tokens = vec![0, 1, 2, 3];
+        let mut logits = vec![0f32; 4 * v];
+        for pos in 0..3 {
+            logits[pos * v + tokens[pos + 1] as usize] = 50.0;
+        }
+        let ppl = perplexity(&logits, v, &tokens, 4);
+        assert!(ppl < 1.001);
+    }
+}

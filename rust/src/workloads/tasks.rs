@@ -1,0 +1,242 @@
+//! InfiniteBench-sim: ten tasks with the same names and attention
+//! archetypes as the paper's Table 1 suite, at simulator scale
+//! (bucket-exact prompts, byte-level).  See DESIGN.md "Substitutions".
+//!
+//! Scoring: retrieval-style tasks (Retr.*, Math.Find) have exact-match
+//! answers; the open-ended tasks (En.*, Zh.QA, Code.Debug) are scored by
+//! *generation fidelity* against the dense FlashAttention reference —
+//! the accuracy-preservation quantity the paper's Table 1 tracks.
+
+use crate::util::rng::Rng;
+
+use super::corpus::{tokenize, TextGen};
+
+/// The ten Table-1 tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    EnSum,
+    EnQA,
+    EnMC,
+    EnDia,
+    ZhQA,
+    CodeDebug,
+    MathFind,
+    RetrPassKey,
+    RetrNumber,
+    RetrKV,
+}
+
+pub const TASK_NAMES: [(Task, &str); 10] = [
+    (Task::EnSum, "En.Sum"),
+    (Task::EnQA, "En.QA"),
+    (Task::EnMC, "En.MC"),
+    (Task::EnDia, "En.Dia"),
+    (Task::ZhQA, "Zh.QA"),
+    (Task::CodeDebug, "Code.Debug"),
+    (Task::MathFind, "Math.Find"),
+    (Task::RetrPassKey, "Retr.PassKey"),
+    (Task::RetrNumber, "Retr.Number"),
+    (Task::RetrKV, "Retr.KV"),
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        TASK_NAMES.iter().find(|(t, _)| t == self).unwrap().1
+    }
+
+    pub fn by_name(name: &str) -> Option<Task> {
+        TASK_NAMES.iter().find(|(_, n)| *n == name).map(|(t, _)| *t)
+    }
+
+    /// Exact-match tasks; the rest are fidelity-scored.
+    pub fn has_exact_answer(&self) -> bool {
+        matches!(self, Task::RetrPassKey | Task::RetrNumber | Task::RetrKV
+                 | Task::MathFind)
+    }
+}
+
+/// One evaluation sample.
+#[derive(Debug, Clone)]
+pub struct TaskSample {
+    pub task: Task,
+    /// Bucket-exact prompt.
+    pub prompt: Vec<i32>,
+    /// Exact answer string (None → fidelity-scored).
+    pub answer: Option<String>,
+    pub gen_tokens: usize,
+}
+
+/// Compose a prompt of exactly `target` bytes: `body` + filler + `cue`.
+fn compose(g: &mut TextGen, body: &str, cue: &str, target: usize) -> String {
+    let need = target.saturating_sub(body.len() + cue.len());
+    let mut s = String::with_capacity(target);
+    s.push_str(body);
+    s.push_str(&g.filler(need));
+    s.push_str(cue);
+    // exact length: trim the middle if slightly over
+    if s.len() > target {
+        let cut = s.len() - target;
+        let cue_start = s.len() - cue.len();
+        s.replace_range(cue_start - cut..cue_start, "");
+    }
+    debug_assert_eq!(s.len(), target);
+    s
+}
+
+/// Generate one sample of `task` with a bucket-exact `target_len` prompt.
+pub fn sample(task: Task, seed: u64, target_len: usize) -> TaskSample {
+    let mut g = TextGen::new(seed ^ 0x5eed_0000);
+    let mut rng = Rng::new(seed ^ 0xface);
+    match task {
+        Task::RetrPassKey | Task::RetrNumber => {
+            let (_, val) = g.kv_pair();
+            let noun = if task == Task::RetrPassKey {
+                "pass key"
+            } else {
+                "magic number"
+            };
+            // plant the fact somewhere in the first 60% of the context
+            let head_len = target_len * rng.range(20, 60) / 100;
+            let fact = format!("\nthe {noun} is {val}. remember {val}.\n");
+            let head = g.filler(head_len.saturating_sub(fact.len()));
+            let body = format!("{head}{fact}");
+            let cue = format!("\nwhat is the {noun}? the {noun} is ");
+            let prompt = compose(&mut g, &body, &cue, target_len);
+            TaskSample { task, prompt: tokenize(&prompt),
+                         answer: Some(val), gen_tokens: 6 }
+        }
+        Task::RetrKV => {
+            // exactly the training corpus's <KEY:..>/<GET:..> structure
+            let n = rng.range(2, 5);
+            let pairs: Vec<(String, String)> =
+                (0..n).map(|_| g.kv_pair()).collect();
+            let mut body = String::new();
+            for (k, v) in &pairs {
+                body.push_str(&format!("<KEY:{k}={v}>\n"));
+            }
+            let (qk, qv) = pairs[rng.below(n)].clone();
+            let cue = format!("<GET:{qk}>");
+            let prompt = compose(&mut g, &body, &cue, target_len);
+            TaskSample { task, prompt: tokenize(&prompt),
+                         answer: Some(qv), gen_tokens: 6 }
+        }
+        Task::MathFind => {
+            let count = rng.range(8, 20);
+            let mut vals: Vec<u32> =
+                (0..count).map(|_| rng.range(100, 999) as u32).collect();
+            let mx = *vals.iter().max().unwrap();
+            let mut body = String::from("values:");
+            for v in vals.drain(..) {
+                body.push_str(&format!(" {v}"));
+            }
+            body.push('\n');
+            let cue = "\nthe largest value in the list is ";
+            let prompt = compose(&mut g, &body, cue, target_len);
+            TaskSample { task, prompt: tokenize(&prompt),
+                         answer: Some(mx.to_string()), gen_tokens: 3 }
+        }
+        Task::EnDia => {
+            let body = g.dialogue(30);
+            let prompt = compose(&mut g, &body, "\nann: ", target_len);
+            TaskSample { task, prompt: tokenize(&prompt), answer: None,
+                         gen_tokens: 12 }
+        }
+        Task::CodeDebug => {
+            let body = g.codeish(60);
+            let prompt = compose(&mut g, &body, "\nlet ", target_len);
+            TaskSample { task, prompt: tokenize(&prompt), answer: None,
+                         gen_tokens: 12 }
+        }
+        Task::EnSum | Task::EnQA | Task::EnMC | Task::ZhQA => {
+            let body = g.prose(200);
+            let cue = match task {
+                Task::EnSum => "\nin summary, the ",
+                Task::EnQA => "\nquestion: who said it? answer: ",
+                Task::EnMC => "\nthe best choice is ",
+                _ => "\nanswer: ",
+            };
+            let prompt = compose(&mut g, &body, cue, target_len);
+            TaskSample { task, prompt: tokenize(&prompt), answer: None,
+                         gen_tokens: 12 }
+        }
+    }
+}
+
+/// `n` samples of a task at a context length.
+pub fn task_samples(task: Task, n: usize, target_len: usize)
+                    -> Vec<TaskSample> {
+    (0..n).map(|i| sample(task, 1000 + i as u64 * 37, target_len)).collect()
+}
+
+/// PG19-sim: a long "book-like" byte stream for perplexity (Figure 4).
+pub fn pg19_sample(seed: u64, len: usize) -> Vec<i32> {
+    tokenize(&TextGen::new(0x9619 ^ seed).filler(len))
+}
+
+/// MInference-style length-adjustable latency prompt (Figures 1 & 5).
+pub fn latency_prompt(len: usize) -> Vec<i32> {
+    tokenize(&TextGen::new(0x1a7e).filler(len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_are_bucket_exact() {
+        for (task, _) in TASK_NAMES {
+            let s = sample(task, 5, 1024);
+            assert_eq!(s.prompt.len(), 1024, "{:?}", task);
+        }
+    }
+
+    #[test]
+    fn retrieval_answer_is_planted() {
+        let s = sample(Task::RetrPassKey, 9, 2048);
+        let text = super::super::corpus::detokenize(&s.prompt);
+        let ans = s.answer.unwrap();
+        assert!(text.contains(&format!("pass key is {ans}")));
+        assert!(text.ends_with("the pass key is "));
+    }
+
+    #[test]
+    fn retr_kv_query_matches_a_key() {
+        let s = sample(Task::RetrKV, 11, 1024);
+        let text = super::super::corpus::detokenize(&s.prompt);
+        let ans = s.answer.unwrap();
+        assert!(text.contains(&format!("={ans}>")));
+        assert!(text.contains("<GET:"));
+    }
+
+    #[test]
+    fn mathfind_answer_is_max() {
+        let s = sample(Task::MathFind, 3, 512);
+        let text = super::super::corpus::detokenize(&s.prompt);
+        let ans: u32 = s.answer.unwrap().parse().unwrap();
+        // every listed value <= answer
+        let vals: Vec<u32> = text
+            .lines()
+            .find(|l| l.starts_with("values:"))
+            .unwrap()
+            .split_whitespace()
+            .skip(1)
+            .map(|v| v.parse().unwrap())
+            .collect();
+        assert_eq!(vals.iter().copied().max().unwrap(), ans);
+    }
+
+    #[test]
+    fn deterministic_samples() {
+        let a = sample(Task::RetrKV, 42, 512);
+        let b = sample(Task::RetrKV, 42, 512);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+
+    #[test]
+    fn latency_prompt_lengths() {
+        for len in [512usize, 1024, 4096] {
+            assert_eq!(latency_prompt(len).len(), len);
+        }
+    }
+}
