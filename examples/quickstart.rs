@@ -1,25 +1,41 @@
-//! Quickstart: load a model, prefill one long prompt with SharePrefill,
-//! greedy-decode a few tokens, print the pattern statistics.
+//! Quickstart: build an engine with `EngineBuilder`, prefill one long
+//! prompt with SharePrefill chunk by chunk (the resumable path the
+//! scheduler interleaves), greedy-decode a few tokens, print the pattern
+//! statistics.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
 use shareprefill::config::{Config, MethodKind};
-use shareprefill::eval::{build_engine, open_registry};
+use shareprefill::eval::open_registry;
+use shareprefill::serving::{EngineBuilder, EngineCore};
 use shareprefill::workloads::corpus::detokenize;
 use shareprefill::workloads::tasks::{sample, Task};
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::default(); // paper defaults: τ=0.2, δ=0.3
     let registry = open_registry(&cfg)?;
-    let mut engine = build_engine(&registry, &cfg, "sim-llama",
-                                  MethodKind::SharePrefill)?;
+    let mut engine = EngineBuilder::new(registry, "sim-llama")
+        .method_config(cfg.method.clone())
+        .method(MethodKind::SharePrefill)
+        .build()?;
 
     // A Retr.KV-style long prompt (key planted early, queried at the end).
     let s = sample(Task::RetrKV, 7, 1024);
     println!("prompt: {} tokens (ends {:?})", s.prompt.len(),
              detokenize(&s.prompt[s.prompt.len() - 24..]));
 
-    let pre = engine.prefill(&s.prompt)?;
+    // Chunked prefill: one layer per chunk, exactly what the scheduler
+    // does between decode steps of other sessions.
+    let mut task = engine.begin_prefill(&s.prompt)?;
+    loop {
+        let done = engine.prefill_chunk(&mut task, 1)?;
+        let (ld, lt) = engine.prefill_progress(&task);
+        println!("  prefill chunk {ld}/{lt}");
+        if done {
+            break;
+        }
+    }
+    let pre = engine.finish_prefill(task)?;
     println!("prefill: {:.1} ms | density {:.2} | patterns: {} dense, \
               {} shared, {} vslash",
              pre.stats.latency_us as f64 / 1e3, pre.stats.density(),

@@ -1,15 +1,14 @@
 //! End-to-end serving driver (the DESIGN.md E2E validation): a batched
-//! request stream through router -> batcher -> KV admission -> prefill ->
-//! decode, reporting latency/throughput per method.  Results are recorded
-//! in EXPERIMENTS.md.
+//! request stream through the streaming session API — admission -> KV ->
+//! chunked prefill (interleaved with decode via continuous batching) ->
+//! per-token events — reporting per-request TTFT and throughput per
+//! method.  Results are recorded in EXPERIMENTS.md.
 //!
 //!   cargo run --release --example serve_bench [requests] [ctx]
 
-use shareprefill::config::{Config, MethodKind};
-use shareprefill::eval::{build_engine, open_registry};
-use shareprefill::serving::request::Request;
-use shareprefill::serving::scheduler::Scheduler;
-use shareprefill::serving::server;
+use shareprefill::config::MethodKind;
+use shareprefill::serving::ServerBuilder;
+use shareprefill::util::stats::Summary;
 use shareprefill::workloads::tasks::latency_prompt;
 
 fn main() -> anyhow::Result<()> {
@@ -18,22 +17,38 @@ fn main() -> anyhow::Result<()> {
     let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
 
     for kind in [MethodKind::Flash, MethodKind::SharePrefill] {
-        let cfg = Config::default();
-        let handle = server::spawn(move || {
-            let registry = open_registry(&cfg)?;
-            let engine = build_engine(&registry, &cfg, "sim-llama", kind)?;
-            Ok((Scheduler::new(&cfg.serve), engine))
-        });
+        let handle = ServerBuilder::new().method(kind).spawn();
         let t0 = std::time::Instant::now();
-        for i in 0..n {
-            handle.submit(Request::new(i as u64, latency_prompt(ctx), 4));
-        }
-        let (responses, report) = handle.shutdown_and_report();
-        let wall = t0.elapsed().as_secs_f64();
+        // submit the whole stream up front: requests overlap, so each
+        // response's ttft_us shows what continuous batching buys
+        let sessions: Vec<_> =
+            (0..n).map(|_| handle.submit(latency_prompt(ctx), 4)).collect();
+        let mut ttft = Summary::new();
+        let mut ok = 0usize;
         println!("== {} ==", kind.name());
+        for s in sessions {
+            let id = s.id;
+            match s.wait() {
+                Ok(r) => {
+                    ttft.add(r.ttft_us as f64 / 1e3);
+                    ok += 1;
+                    println!("req {:3}: ttft {:8.1} ms (queue {:6.1} + \
+                              prefill {:7.1}), density {:.2}",
+                             r.id, r.ttft_us as f64 / 1e3,
+                             r.queue_us as f64 / 1e3,
+                             r.prefill_us as f64 / 1e3, r.density);
+                }
+                Err(e) => println!("req {id:3}: {e:#}"),
+            }
+        }
+        let report = handle.shutdown();
+        let wall = t0.elapsed().as_secs_f64();
         println!("{report}");
-        println!("wall {:.1}s for {} requests -> {:.0} prompt tok/s e2e\n",
-                 wall, responses.len(), (n * ctx) as f64 / wall);
+        println!("ttft per request: mean {:.1} ms, p50 {:.1} ms, p99 \
+                  {:.1} ms",
+                 ttft.mean(), ttft.p50(), ttft.p99());
+        println!("wall {:.1}s for {ok} requests -> {:.0} prompt tok/s e2e\n",
+                 wall, (ok * ctx) as f64 / wall);
     }
     Ok(())
 }

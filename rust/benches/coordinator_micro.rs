@@ -1,12 +1,18 @@
 //! L3 coordinator micro-bench: pattern-engine costs that must never rival
 //! the attention compute — vslash search, pivotal construction, packing,
-//! JS decisions, KV allocator churn, clustering.
+//! JS decisions, KV allocator churn, clustering, and the session
+//! scheduler's continuous-batching round overhead (measured against the
+//! artifact-free SimEngine so only coordinator bookkeeping is on the
+//! clock).
 
 use shareprefill::attention::{construct_pivotal, decide_pattern,
                               search_vslash, PivotalDict};
 use shareprefill::bench::Bench;
 use shareprefill::clustering::cluster_heads;
+use shareprefill::config::ServeConfig;
 use shareprefill::serving::kvcache::KvAllocator;
+use shareprefill::serving::sim::SimEngine;
+use shareprefill::serving::{EventSink, Request, Scheduler};
 use shareprefill::util::rng::Rng;
 use shareprefill::BLOCK_SIZE;
 
@@ -57,6 +63,25 @@ fn main() {
             a.release(&blk).unwrap();
         }
         1000
+    });
+
+    b.case("session rounds: 8 reqs, chunked+interleaved", || {
+        let cfg = ServeConfig {
+            max_batch_tokens: 512,
+            chunk_layers: 1,
+            decode_tokens: 8,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(6);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        for i in 0..8 {
+            let (sink, _rx) = EventSink::channel();
+            sched.submit(Request::new(i, vec![7; 256], 8), sink);
+        }
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        8
     });
 
     let maps: Vec<Vec<f32>> = (0..48)

@@ -8,8 +8,7 @@ use crate::config::{Config, MethodKind};
 use crate::eval::{ablation, build_engine, infinitebench, latency,
                   open_registry, perplexity};
 use crate::methods::{HeadPlan, PatternStrategy, Probes};
-use crate::serving::request::Request;
-use crate::serving::{scheduler::Scheduler, server, Engine};
+use crate::serving::{Engine, ServerBuilder};
 use crate::substrate::cli::Args;
 use crate::util::ascii::{heatmap, mask_map};
 use crate::workloads::corpus::detokenize;
@@ -22,8 +21,10 @@ USAGE: shareprefill <subcommand> [options]
 
 SUBCOMMANDS
   serve     run the serving engine on a synthetic request stream
+            (chunked prefill + continuous batching; per-request TTFT)
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
+            [--chunk-layers N] [--admit-retries N]
   eval      Table 1: InfiniteBench-sim suite
             [--model M] [--methods a,b,..] [--samples N] [--ctx L]
   ablate    Table 2: ablations [--model M] [--samples N] [--ctx L]
@@ -82,29 +83,30 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let model = args.str_or("model", "sim-llama");
     let n = args.usize_or("requests", 8)?;
     let ctx = args.usize_or("ctx", 1024)?;
-    let cfg2 = cfg.clone();
-    let model2 = model.clone();
-    let handle = server::spawn(move || {
-        let registry = open_registry(&cfg2)?;
-        let engine = build_engine(&registry, &cfg2, &model2,
-                                  cfg2.method.kind)?;
-        Ok((Scheduler::new(&cfg2.serve), engine))
-    });
-    println!("serving {n} requests @ ctx {ctx}, model {model}, method {}",
-             cfg.method.kind.name());
-    for i in 0..n {
-        let prompt = tasks::latency_prompt(ctx);
-        handle.submit(Request::new(i as u64, prompt,
-                                   cfg.serve.decode_tokens));
+    let handle = ServerBuilder::new()
+        .config(cfg.clone())
+        .model(&model)
+        .spawn();
+    println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
+              ({} layer(s)/prefill chunk)",
+             cfg.method.kind.name(), cfg.serve.chunk_layers);
+    let sessions: Vec<_> = (0..n)
+        .map(|_| handle.submit(tasks::latency_prompt(ctx),
+                               cfg.serve.decode_tokens))
+        .collect();
+    for s in sessions {
+        let id = s.id;
+        match s.wait() {
+            Ok(r) => println!(
+                "req {:3}: ttft {:7.1} ms, prefill {:7.1} ms, decode \
+                 {:6.1} ms, density {:.2}, gen {:?}",
+                r.id, r.ttft_us as f64 / 1e3, r.prefill_us as f64 / 1e3,
+                r.decode_us as f64 / 1e3, r.density,
+                detokenize(&r.generated)),
+            Err(e) => println!("req {id:3}: {e:#}"),
+        }
     }
-    let (responses, report) = handle.shutdown_and_report();
-    for r in &responses {
-        println!("req {:3}: prefill {:7.1} ms, decode {:6.1} ms, \
-                  density {:.2}, gen {:?}",
-                 r.id, r.prefill_us as f64 / 1e3, r.decode_us as f64 / 1e3,
-                 r.density, detokenize(&r.generated));
-    }
-    println!("\n{report}");
+    println!("\n{}", handle.shutdown());
     Ok(())
 }
 

@@ -93,6 +93,12 @@ pub struct ServeConfig {
     pub decode_tokens: usize,
     /// KV cache capacity in blocks (paged allocator).
     pub kv_blocks: usize,
+    /// Layers advanced per prefill chunk (1 = finest interleaving of
+    /// decode steps between chunks; `num_layers` = monolithic prefill).
+    pub chunk_layers: usize,
+    /// Rounds a KV-starved request waits at the head of the queue before
+    /// it is rejected (bounded re-queueing; clients never hang).
+    pub admit_retries: usize,
 }
 
 impl Default for ServeConfig {
@@ -103,6 +109,8 @@ impl Default for ServeConfig {
             queue_capacity: 256,
             decode_tokens: 8,
             kv_blocks: 1024,
+            chunk_layers: 1,
+            admit_retries: 4,
         }
     }
 }
@@ -162,6 +170,10 @@ impl Config {
             t.usize_or("serve.decode_tokens", self.serve.decode_tokens);
         self.serve.kv_blocks =
             t.usize_or("serve.kv_blocks", self.serve.kv_blocks);
+        self.serve.chunk_layers =
+            t.usize_or("serve.chunk_layers", self.serve.chunk_layers);
+        self.serve.admit_retries =
+            t.usize_or("serve.admit_retries", self.serve.admit_retries);
         if let Some(v) = t.get("paths.artifacts") {
             self.paths.artifacts = PathBuf::from(v.as_str()?);
         }
@@ -186,6 +198,10 @@ impl Config {
             args.usize_or("decode-tokens", self.serve.decode_tokens)?;
         self.serve.max_batch_tokens =
             args.usize_or("max-batch-tokens", self.serve.max_batch_tokens)?;
+        self.serve.chunk_layers =
+            args.usize_or("chunk-layers", self.serve.chunk_layers)?;
+        self.serve.admit_retries =
+            args.usize_or("admit-retries", self.serve.admit_retries)?;
         Ok(())
     }
 }
@@ -201,18 +217,21 @@ mod tests {
         assert!((c.method.tau - 0.2).abs() < 1e-12);
         assert!((c.method.delta - 0.3).abs() < 1e-12);
         assert!((c.method.gamma - 0.65).abs() < 1e-6);
+        assert_eq!(c.serve.chunk_layers, 1);
+        assert_eq!(c.serve.admit_retries, 4);
     }
 
     #[test]
     fn toml_overrides() {
         let t = tomlmini::parse(
             "[method]\nkind = \"flexprefill\"\ntau = 0.5\n\
-             [serve]\ndecode_tokens = 3\n").unwrap();
+             [serve]\ndecode_tokens = 3\nchunk_layers = 2\n").unwrap();
         let mut c = Config::default();
         c.apply_toml(&t).unwrap();
         assert_eq!(c.method.kind, MethodKind::FlexPrefill);
         assert!((c.method.tau - 0.5).abs() < 1e-12);
         assert_eq!(c.serve.decode_tokens, 3);
+        assert_eq!(c.serve.chunk_layers, 2);
     }
 
     #[test]

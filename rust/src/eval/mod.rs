@@ -10,9 +10,8 @@ use anyhow::Result;
 use std::rc::Rc;
 
 use crate::config::{Config, MethodKind};
-use crate::methods::build_strategy;
 use crate::runtime::{Registry, Runtime};
-use crate::serving::Engine;
+use crate::serving::{Engine, EngineBuilder};
 
 /// Shared setup: runtime + registry.
 pub fn open_registry(cfg: &Config) -> Result<Rc<Registry>> {
@@ -20,28 +19,14 @@ pub fn open_registry(cfg: &Config) -> Result<Rc<Registry>> {
     Ok(Rc::new(Registry::load(cfg.paths.artifacts.clone(), rt)?))
 }
 
-/// Build an engine for (model, method), loading the cluster table when one
-/// exists (SharePrefill falls back to per-index clusters otherwise).
+/// Build an engine for (model, method) — a thin shim over
+/// [`EngineBuilder`], which owns the cluster-table lookup (SharePrefill
+/// falls back to per-index clusters when no table exists).
 pub fn build_engine(registry: &Rc<Registry>, cfg: &Config, model: &str,
                     kind: MethodKind) -> Result<Engine> {
-    let spec = registry.model(model)?.clone();
-    let mut mcfg = cfg.method.clone();
-    mcfg.kind = kind;
-    let clusters = if kind == MethodKind::SharePrefill {
-        let path = match &mcfg.clusters_file {
-            Some(p) => p.clone(),
-            None => cfg.paths.artifacts
-                .join(format!("head_clusters-{model}.json")),
-        };
-        match crate::clustering::load_clusters(&path) {
-            Ok(hc) => Some(hc.assignment),
-            Err(_) => None, // fall back to positional clusters
-        }
-    } else {
-        None
-    };
-    let strategy = build_strategy(&mcfg, spec.num_layers, spec.num_heads,
-                                  clusters);
-    Engine::new(registry.clone(), model, strategy)
+    EngineBuilder::new(registry.clone(), model)
+        .method_config(cfg.method.clone())
+        .method(kind)
+        .build()
 }
 pub mod golden;

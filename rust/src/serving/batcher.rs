@@ -1,25 +1,40 @@
-//! Dynamic prefill batcher: FIFO admission under a token budget with
-//! age-based promotion (no starvation).  Prefill on this substrate is
-//! sequential per request (one core, one PJRT stream), so "batching"
-//! groups requests into scheduling rounds — the unit of admission control
-//! and of the throughput metrics, exactly the role continuous-batching
-//! plays in GPU servers.
+//! Admission queue: FIFO under a capacity bound, with token-budget batch
+//! formation.  Prefill on this substrate is sequential per request (one
+//! core, one PJRT stream), so "batching" groups work into scheduling
+//! rounds — the unit of admission control and of the throughput metrics,
+//! exactly the role continuous-batching plays in GPU servers.
+//!
+//! Generic over the queued item so the scheduler can queue whole
+//! sessions (request + event sink + engine state) while the classic
+//! request-only tests keep working.
 
 use std::collections::VecDeque;
 
 use super::request::Request;
 
+/// Anything admitted under a token budget.
+pub trait BatchItem {
+    /// Cost in budget tokens (prompt length for requests/sessions).
+    fn cost(&self) -> usize;
+}
+
+impl BatchItem for Request {
+    fn cost(&self) -> usize {
+        self.prompt_len()
+    }
+}
+
 #[derive(Debug)]
-pub struct Batcher {
-    queue: VecDeque<Request>,
+pub struct Batcher<T> {
+    queue: VecDeque<T>,
     pub max_batch_tokens: usize,
     pub max_batch_requests: usize,
     capacity: usize,
 }
 
-impl Batcher {
+impl<T: BatchItem> Batcher<T> {
     pub fn new(max_batch_tokens: usize, max_batch_requests: usize,
-               capacity: usize) -> Batcher {
+               capacity: usize) -> Batcher<T> {
         Batcher {
             queue: VecDeque::new(),
             max_batch_tokens,
@@ -28,13 +43,14 @@ impl Batcher {
         }
     }
 
-    /// Enqueue; returns false (rejected) when the queue is full.
-    pub fn push(&mut self, r: Request) -> bool {
+    /// Enqueue; hands the item back when the queue is full so the caller
+    /// can emit a terminal `Rejected` event for it.
+    pub fn push(&mut self, r: T) -> Result<(), T> {
         if self.queue.len() >= self.capacity {
-            return false;
+            return Err(r);
         }
         self.queue.push_back(r);
-        true
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -45,14 +61,33 @@ impl Batcher {
         self.queue.is_empty()
     }
 
+    pub fn front(&self) -> Option<&T> {
+        self.queue.front()
+    }
+
+    pub fn front_mut(&mut self) -> Option<&mut T> {
+        self.queue.front_mut()
+    }
+
+    pub fn pop_front(&mut self) -> Option<T> {
+        self.queue.pop_front()
+    }
+
+    /// Remove and return the first queued item matching `pred`
+    /// (cancellation of a not-yet-admitted session).
+    pub fn remove_by(&mut self, pred: impl Fn(&T) -> bool) -> Option<T> {
+        let idx = self.queue.iter().position(pred)?;
+        self.queue.remove(idx)
+    }
+
     /// Form the next batch: FIFO order, stop at the token budget or the
-    /// request cap.  The head request is always admitted even if it alone
+    /// request cap.  The head item is always admitted even if it alone
     /// exceeds the budget (otherwise it would starve).
-    pub fn next_batch(&mut self) -> Vec<Request> {
+    pub fn next_batch(&mut self) -> Vec<T> {
         let mut batch = Vec::new();
         let mut tokens = 0usize;
         while let Some(front) = self.queue.front() {
-            let t = front.prompt_len();
+            let t = front.cost();
             let fits = batch.is_empty()
                 || (tokens + t <= self.max_batch_tokens
                     && batch.len() < self.max_batch_requests);
@@ -82,7 +117,7 @@ mod tests {
     fn fifo_under_budget() {
         let mut b = Batcher::new(100, 8, 16);
         for i in 0..4 {
-            assert!(b.push(req(i, 40)));
+            assert!(b.push(req(i, 40)).is_ok());
         }
         let batch = b.next_batch();
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
@@ -92,8 +127,8 @@ mod tests {
     #[test]
     fn oversized_head_still_admitted() {
         let mut b = Batcher::new(100, 8, 16);
-        b.push(req(0, 500));
-        b.push(req(1, 10));
+        let _ = b.push(req(0, 500));
+        let _ = b.push(req(1, 10));
         let batch = b.next_batch();
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 0);
@@ -103,17 +138,31 @@ mod tests {
     fn request_cap() {
         let mut b = Batcher::new(10_000, 2, 16);
         for i in 0..5 {
-            b.push(req(i, 10));
+            let _ = b.push(req(i, 10));
         }
         assert_eq!(b.next_batch().len(), 2);
     }
 
     #[test]
-    fn rejects_when_full() {
+    fn rejects_when_full_and_returns_item() {
         let mut b = Batcher::new(100, 8, 2);
-        assert!(b.push(req(0, 1)));
-        assert!(b.push(req(1, 1)));
-        assert!(!b.push(req(2, 1)));
+        assert!(b.push(req(0, 1)).is_ok());
+        assert!(b.push(req(1, 1)).is_ok());
+        let back = b.push(req(2, 1));
+        assert!(back.is_err());
+        assert_eq!(back.unwrap_err().id, 2);
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let mut b = Batcher::new(100, 8, 8);
+        for i in 0..3 {
+            let _ = b.push(req(i, 1));
+        }
+        let removed = b.remove_by(|r| r.id == 1).unwrap();
+        assert_eq!(removed.id, 1);
+        assert_eq!(b.len(), 2);
+        assert!(b.remove_by(|r| r.id == 42).is_none());
     }
 
     #[test]
@@ -124,7 +173,7 @@ mod tests {
             let n = g.usize_in(1..30);
             for i in 0..n {
                 let len = g.usize_in(1..200);
-                b.push(req(i as u64, len));
+                let _ = b.push(req(i as u64, len));
             }
             let mut last_id = None;
             while !b.is_empty() {

@@ -6,15 +6,32 @@
 //! feed dense heads' block-averaged QK maps back to the strategy (pivotal
 //! construction), and finish the layer with the post-attn artifact.
 //!
-//! The engine also owns decode (dense attention over the KV cache via the
-//! fused decode artifact) — all baselines share it, as in the paper.
+//! Prefill is *resumable*: [`EngineCore::begin_prefill`] returns a
+//! [`PrefillTask`] that [`EngineCore::prefill_chunk`] advances layer-chunk
+//! by layer-chunk, so the scheduler can interleave decode steps of other
+//! sessions between chunks of a long prompt (continuous batching).  The
+//! one-shot [`Engine::prefill`] is a thin wrapper that drains the task in
+//! a single chunk — both paths execute the identical per-layer body
+//! ([`Engine::prefill_layer`]), so chunked and monolithic prefill are
+//! bit-identical (asserted by the integration tests).
+//!
+//! Decode is likewise incremental: [`Engine::begin_decode`] materializes
+//! the padded KV caches once and [`EngineCore::decode_step`] emits one
+//! token per call (dense attention via the fused decode artifact — all
+//! baselines share this phase, as in the paper).
+//!
+//! At most one prefill may be in flight per engine: strategies keep
+//! per-request state (SharePrefill's evolving pivotal dictionary), reset
+//! by `begin_request`.  Decode sessions carry no strategy state and may
+//! interleave freely.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::rc::Rc;
 
 use crate::attention::pivotal::scatter_abar;
 use crate::attention::BlockMask;
-use crate::methods::{PatternLabel, PatternStrategy, Probes};
+use crate::config::{MethodConfig, MethodKind};
+use crate::methods::{build_strategy, PatternLabel, PatternStrategy, Probes};
 use crate::model::Stages;
 use crate::runtime::{Registry, Tensor};
 use crate::util::timer::{StageProfiler, Timer};
@@ -61,6 +78,104 @@ impl PrefillStats {
             self.blocks_computed as f64 / self.blocks_total as f64
         }
     }
+}
+
+/// Resumable prefill state: the hidden activations, accumulated KV and
+/// stats of a request part-way through its layer stack.  Advance it with
+/// [`EngineCore::prefill_chunk`]; consume it with
+/// [`Engine::finish_prefill`] or [`EngineCore::start_decode`].
+pub struct PrefillTask {
+    seq: usize,
+    real_len: usize,
+    layers_total: usize,
+    layers_done: usize,
+    x: Tensor,
+    kv: Vec<(Tensor, Tensor)>,
+    stats: PrefillStats,
+    prof: StageProfiler,
+}
+
+impl PrefillTask {
+    /// `(layers_done, layers_total)`.
+    pub fn progress(&self) -> (usize, usize) {
+        (self.layers_done, self.layers_total)
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.layers_done >= self.layers_total
+    }
+}
+
+/// Incremental decode state: padded per-layer KV caches plus the token
+/// cursor.  One [`EngineCore::decode_step`] call emits one token; the
+/// first token comes from the prefill's last-position logits (so TTFT is
+/// observable the moment prefill completes).
+pub struct DecodeSession {
+    kcaches: Vec<Vec<f32>>,
+    vcaches: Vec<Vec<f32>>,
+    /// Hidden state at the last real prompt position, `[1, Dm]`
+    /// (`None` for an empty prompt — the session then yields no tokens).
+    last_row: Option<Tensor>,
+    real_len: usize,
+    max_new: usize,
+    produced: usize,
+    last: i32,
+    tokens: Vec<i32>,
+    decode_us: u64,
+}
+
+impl DecodeSession {
+    pub fn generated(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    pub fn elapsed_us(&self) -> u64 {
+        self.decode_us
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.produced >= self.max_new
+    }
+}
+
+/// The engine interface the scheduler drives.  [`Engine`] is the real
+/// artifact-backed implementation; [`super::sim::SimEngine`] is a
+/// deterministic stand-in so scheduler/server tests and benches run
+/// without compiled artifacts.
+pub trait EngineCore {
+    type Prefill;
+    type Decode;
+
+    /// Transformer depth (drives KV admission and chunk accounting).
+    fn layers_total(&self) -> usize;
+
+    /// Start a prefill (strategy per-request state is reset here).
+    fn begin_prefill(&mut self, tokens: &[i32]) -> Result<Self::Prefill>;
+
+    /// Advance up to `max_layers` layers; true when the stack is done.
+    fn prefill_chunk(&mut self, t: &mut Self::Prefill, max_layers: usize)
+                     -> Result<bool>;
+
+    /// `(layers_done, layers_total)` of a task.
+    fn prefill_progress(&self, t: &Self::Prefill) -> (usize, usize);
+
+    /// Consume a finished prefill into a decode session (capped at
+    /// `max_new` tokens) plus the prefill's accounting.
+    fn start_decode(&mut self, t: Self::Prefill, max_new: usize)
+                    -> Result<(Self::Decode, PrefillStats)>;
+
+    /// Emit the next token; `None` when the session is exhausted.
+    fn decode_step(&mut self, d: &mut Self::Decode) -> Result<Option<i32>>;
+
+    /// Tokens generated so far.
+    fn generated<'a>(&self, d: &'a Self::Decode) -> &'a [i32];
+
+    /// Accumulated decode compute time.
+    fn decode_elapsed_us(&self, d: &Self::Decode) -> u64;
 }
 
 /// Lazy probe provider for one layer (computes each probe at most once).
@@ -115,91 +230,100 @@ impl Engine {
         Ok(Engine { stages: Stages::new(registry, model)?, strategy })
     }
 
-    /// Run prefill on a prompt. Pads to the smallest seq bucket.
-    pub fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillResult> {
-        let timer = Timer::start();
+    /// Run one layer of a prefill task (the shared body of chunked and
+    /// monolithic prefill).
+    fn prefill_layer(&mut self, t: &mut PrefillTask) -> Result<()> {
+        let layer = t.layers_done;
+        let seq = t.seq;
         let spec = self.stages.spec.clone();
-        let seq = spec.seq_bucket_for(tokens.len())?;
-        let mut padded = tokens.to_vec();
-        padded.resize(seq, PAD_TOKEN);
         let nb = seq / BLOCK_SIZE;
         let h = spec.num_heads;
-        let mut stats = PrefillStats::default();
-        let mut prof = StageProfiler::new();
 
-        self.strategy.begin_request(seq);
-        let mut x = self.stages.embed(&padded, seq, &mut prof)?;
-        let mut kv = Vec::with_capacity(spec.num_layers);
+        let qkv = self.stages.qkv(layer, &t.x, seq, &mut t.prof)?;
+        let k_rep = self.stages.repeat_kv(&qkv.k)?;
+        let v_rep = self.stages.repeat_kv(&qkv.v)?;
 
-        for layer in 0..spec.num_layers {
-            let qkv = self.stages.qkv(layer, &x, seq, &mut prof)?;
-            let k_rep = self.stages.repeat_kv(&qkv.k)?;
-            let v_rep = self.stages.repeat_kv(&qkv.v)?;
-
-            let plans = {
-                let mut probes = LayerProbes {
-                    stages: &self.stages,
-                    seq,
-                    q: &qkv.q,
-                    k_rep: &k_rep,
-                    prof: &mut prof,
-                    ahat: None,
-                    vslash: None,
-                    flex: None,
-                };
-                self.strategy.plan_layer(layer, seq, h, &mut probes)?
+        let plans = {
+            let mut probes = LayerProbes {
+                stages: &self.stages,
+                seq,
+                q: &qkv.q,
+                k_rep: &k_rep,
+                prof: &mut t.prof,
+                ahat: None,
+                vslash: None,
+                flex: None,
             };
-            debug_assert_eq!(plans.len(), h);
+            self.strategy.plan_layer(layer, seq, h, &mut probes)?
+        };
+        debug_assert_eq!(plans.len(), h);
 
-            // Per-head budgeted attention.
-            let mut attn_out = vec![0f32; h * seq * spec.head_dim];
-            for (head, plan) in plans.iter().enumerate() {
-                let (mask_owned, budget, label) = match &plan.mask {
-                    None => (BlockMask::dense(nb), nb, plan.label),
-                    Some(m) => {
-                        let b = spec.budget_bucket_for(seq, m.max_row());
-                        (m.clone(), b, plan.label)
-                    }
-                };
-                stats.blocks_computed += mask_owned
-                    .count()
-                    .min(nb * (nb + 1) / 2);
-                stats.blocks_total += nb * (nb + 1) / 2;
-                match label {
-                    PatternLabel::Dense => stats.dense += 1,
-                    PatternLabel::Shared => stats.shared += 1,
-                    PatternLabel::VSlash => stats.vslash += 1,
-                    PatternLabel::QueryAware => stats.query_aware += 1,
+        // Per-head budgeted attention.
+        let mut attn_out = vec![0f32; h * seq * spec.head_dim];
+        for (head, plan) in plans.iter().enumerate() {
+            let (mask_owned, budget, label) = match &plan.mask {
+                None => (BlockMask::dense(nb), nb, plan.label),
+                Some(m) => {
+                    let b = spec.budget_bucket_for(seq, m.max_row());
+                    (m.clone(), b, plan.label)
                 }
-                let (idx, valid) = mask_owned.pack(budget);
-                let qh = self.stages.head_q(&qkv.q, head)?;
-                let kh = k_rep.index_axis0(head)?;
-                let vh = v_rep.index_axis0(head)?;
-                let (o, abar) = self.stages.attn_head(
-                    seq, budget, qh, kh, vh, idx.clone(), valid.clone(),
-                    &mut prof)?;
-                attn_out[head * seq * spec.head_dim
-                         ..(head + 1) * seq * spec.head_dim]
-                    .copy_from_slice(o.as_f32()?);
-                if plan.publish {
-                    let full = scatter_abar(
-                        abar.as_f32()?, idx.as_i32()?, valid.as_f32()?, nb,
-                        budget);
-                    self.strategy.publish_abar(layer, head, nb, &full);
-                }
+            };
+            t.stats.blocks_computed += mask_owned
+                .count()
+                .min(nb * (nb + 1) / 2);
+            t.stats.blocks_total += nb * (nb + 1) / 2;
+            match label {
+                PatternLabel::Dense => t.stats.dense += 1,
+                PatternLabel::Shared => t.stats.shared += 1,
+                PatternLabel::VSlash => t.stats.vslash += 1,
+                PatternLabel::QueryAware => t.stats.query_aware += 1,
             }
-            let attn_t = Tensor::f32(vec![h, seq, spec.head_dim], attn_out);
-            x = self.stages.post_attn(layer, attn_t, &x, seq, &mut prof)?;
-            kv.push((qkv.k, qkv.v));
+            let (idx, valid) = mask_owned.pack(budget);
+            let qh = self.stages.head_q(&qkv.q, head)?;
+            let kh = k_rep.index_axis0(head)?;
+            let vh = v_rep.index_axis0(head)?;
+            let (o, abar) = self.stages.attn_head(
+                seq, budget, qh, kh, vh, idx.clone(), valid.clone(),
+                &mut t.prof)?;
+            attn_out[head * seq * spec.head_dim
+                     ..(head + 1) * seq * spec.head_dim]
+                .copy_from_slice(o.as_f32()?);
+            if plan.publish {
+                let full = scatter_abar(
+                    abar.as_f32()?, idx.as_i32()?, valid.as_f32()?, nb,
+                    budget);
+                self.strategy.publish_abar(layer, head, nb, &full);
+            }
         }
+        let attn_t = Tensor::f32(vec![h, seq, spec.head_dim], attn_out);
+        t.x = self.stages.post_attn(layer, attn_t, &t.x, seq, &mut t.prof)?;
+        t.kv.push((qkv.k, qkv.v));
+        t.layers_done += 1;
+        Ok(())
+    }
 
-        stats.latency_us = timer.elapsed_us();
-        stats.profiler = prof;
+    /// Run prefill on a prompt in one shot (drains a [`PrefillTask`]).
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<PrefillResult> {
+        let mut t = self.begin_prefill(tokens)?;
+        let total = t.layers_total.max(1);
+        self.prefill_chunk(&mut t, total)?;
+        self.finish_prefill(t)
+    }
+
+    /// Turn a completed (or to-be-completed) task into a [`PrefillResult`].
+    pub fn finish_prefill(&mut self, mut t: PrefillTask)
+                          -> Result<PrefillResult> {
+        if t.layers_done < t.layers_total {
+            let rest = t.layers_total - t.layers_done;
+            self.prefill_chunk(&mut t, rest)?;
+        }
+        let mut stats = t.stats;
+        stats.profiler = t.prof;
         Ok(PrefillResult {
-            hidden: x,
-            kv,
-            seq,
-            real_len: tokens.len(),
+            hidden: t.x,
+            kv: t.kv,
+            seq: t.seq,
+            real_len: t.real_len,
             stats,
         })
     }
@@ -212,6 +336,9 @@ impl Engine {
 
     /// Logits at the last *real* position: `[V]`.
     pub fn logits_last(&self, pre: &PrefillResult) -> Result<Vec<f32>> {
+        if pre.real_len == 0 {
+            bail!("logits_last on an empty prompt (real_len == 0)");
+        }
         let mut prof = StageProfiler::new();
         let dm = self.stages.spec.hidden;
         let hid = pre.hidden.as_f32()?;
@@ -222,17 +349,13 @@ impl Engine {
         Ok(out.into_f32()?)
     }
 
-    /// Greedy decode `n` tokens after a prefill.  Dense attention over the
-    /// KV cache via the fused decode artifact (all methods share this
-    /// phase, as in the paper's setup).
-    pub fn decode(&mut self, pre: &PrefillResult, n: usize)
-                  -> Result<(Vec<i32>, u64)> {
-        let timer = Timer::start();
+    /// Materialize the padded KV caches of a finished prefill into an
+    /// incremental decode session (capped at `max_new` tokens).
+    pub fn begin_decode(&self, pre: &PrefillResult, max_new: usize)
+                        -> Result<DecodeSession> {
         let spec = self.stages.spec.clone();
-        let mut prof = StageProfiler::new();
         let smax = spec.max_seq;
         let (hkv, d) = (spec.num_kv_heads, spec.head_dim);
-        // materialize padded caches
         let mut kcaches = Vec::new();
         let mut vcaches = Vec::new();
         for (k, v) in &pre.kv {
@@ -252,24 +375,122 @@ impl Engine {
             kcaches.push(kc);
             vcaches.push(vc);
         }
-        let mut out = Vec::with_capacity(n);
-        let mut last = argmax(&self.logits_last(pre)?) as i32;
-        out.push(last);
-        let embed = self.stages.weights.embed.as_f32()?.to_vec();
-        let dm = spec.hidden;
-        for step in 1..n {
-            let pos = (pre.real_len + step - 1) as i32;
-            if pos as usize >= smax {
-                break;
+        let last_row = if pre.real_len == 0 {
+            None
+        } else {
+            let dm = spec.hidden;
+            let hid = pre.hidden.as_f32()?;
+            let row = &hid[(pre.real_len - 1) * dm..pre.real_len * dm];
+            Some(Tensor::f32(vec![1, dm], row.to_vec()))
+        };
+        Ok(DecodeSession {
+            kcaches,
+            vcaches,
+            last_row,
+            real_len: pre.real_len,
+            max_new,
+            produced: 0,
+            last: 0,
+            tokens: Vec::new(),
+            decode_us: 0,
+        })
+    }
+
+    /// Greedy decode `n` tokens after a prefill in one blocking call (the
+    /// compatibility path evals use; drives [`EngineCore::decode_step`]).
+    pub fn decode(&mut self, pre: &PrefillResult, n: usize)
+                  -> Result<(Vec<i32>, u64)> {
+        let mut d = self.begin_decode(pre, n)?;
+        while self.decode_step(&mut d)?.is_some() {}
+        Ok((d.tokens, d.decode_us))
+    }
+}
+
+impl EngineCore for Engine {
+    type Prefill = PrefillTask;
+    type Decode = DecodeSession;
+
+    fn layers_total(&self) -> usize {
+        self.stages.spec.num_layers
+    }
+
+    fn begin_prefill(&mut self, tokens: &[i32]) -> Result<PrefillTask> {
+        let timer = Timer::start();
+        let spec = self.stages.spec.clone();
+        let seq = spec.seq_bucket_for(tokens.len())?;
+        let mut padded = tokens.to_vec();
+        padded.resize(seq, PAD_TOKEN);
+        let mut stats = PrefillStats::default();
+        let mut prof = StageProfiler::new();
+        self.strategy.begin_request(seq);
+        let x = self.stages.embed(&padded, seq, &mut prof)?;
+        stats.latency_us = timer.elapsed_us();
+        Ok(PrefillTask {
+            seq,
+            real_len: tokens.len(),
+            layers_total: spec.num_layers,
+            layers_done: 0,
+            x,
+            kv: Vec::with_capacity(spec.num_layers),
+            stats,
+            prof,
+        })
+    }
+
+    fn prefill_chunk(&mut self, t: &mut PrefillTask, max_layers: usize)
+                     -> Result<bool> {
+        let timer = Timer::start();
+        let end = (t.layers_done + max_layers.max(1)).min(t.layers_total);
+        while t.layers_done < end {
+            self.prefill_layer(t)?;
+        }
+        t.stats.latency_us += timer.elapsed_us();
+        Ok(t.layers_done >= t.layers_total)
+    }
+
+    fn prefill_progress(&self, t: &PrefillTask) -> (usize, usize) {
+        t.progress()
+    }
+
+    fn start_decode(&mut self, t: PrefillTask, max_new: usize)
+                    -> Result<(DecodeSession, PrefillStats)> {
+        let pre = self.finish_prefill(t)?;
+        let stats = pre.stats.clone();
+        Ok((self.begin_decode(&pre, max_new)?, stats))
+    }
+
+    fn decode_step(&mut self, d: &mut DecodeSession) -> Result<Option<i32>> {
+        if d.produced >= d.max_new {
+            return Ok(None);
+        }
+        let timer = Timer::start();
+        let spec = self.stages.spec.clone();
+        let mut prof = StageProfiler::new();
+        let tok = if d.produced == 0 {
+            // First token: argmax over the prefill's last-position logits.
+            let Some(row) = d.last_row.clone() else {
+                return Ok(None); // empty prompt: nothing to condition on
+            };
+            let out = self.stages.lm_head(&row, 1, &mut prof)?;
+            argmax(out.as_f32()?) as i32
+        } else {
+            let pos = (d.real_len + d.produced - 1) as i32;
+            if pos as usize >= spec.max_seq {
+                return Ok(None); // KV cache exhausted
             }
+            let smax = spec.max_seq;
+            let (hkv, hd) = (spec.num_kv_heads, spec.head_dim);
+            let dm = spec.hidden;
             // embed the last token in-rust (row gather)
-            let row = &embed[last as usize * dm..(last as usize + 1) * dm];
+            let embed = self.stages.weights.embed.as_f32()?;
+            let row =
+                &embed[d.last as usize * dm..(d.last as usize + 1) * dm];
             let mut x = Tensor::f32(vec![1, dm], row.to_vec());
             for layer in 0..spec.num_layers {
-                let kc = Tensor::f32(vec![hkv, smax, d],
-                                     kcaches[layer].clone());
-                let vc = Tensor::f32(vec![hkv, smax, d],
-                                     vcaches[layer].clone());
+                let kc = Tensor::f32(vec![hkv, smax, hd],
+                                     d.kcaches[layer].clone());
+                let vc = Tensor::f32(vec![hkv, smax, hd],
+                                     d.vcaches[layer].clone());
                 let (x2, k_new, v_new) = self.stages.decode_layer(
                     layer, &x, &kc, &vc, pos, &mut prof)?;
                 x = x2;
@@ -277,18 +498,81 @@ impl Engine {
                 let kn = k_new.as_f32()?;
                 let vn = v_new.as_f32()?;
                 for hh in 0..hkv {
-                    let dst = hh * smax * d + pos as usize * d;
-                    kcaches[layer][dst..dst + d]
-                        .copy_from_slice(&kn[hh * d..(hh + 1) * d]);
-                    vcaches[layer][dst..dst + d]
-                        .copy_from_slice(&vn[hh * d..(hh + 1) * d]);
+                    let dst = hh * smax * hd + pos as usize * hd;
+                    d.kcaches[layer][dst..dst + hd]
+                        .copy_from_slice(&kn[hh * hd..(hh + 1) * hd]);
+                    d.vcaches[layer][dst..dst + hd]
+                        .copy_from_slice(&vn[hh * hd..(hh + 1) * hd]);
                 }
             }
             let logits = self.stages.lm_head(&x, 1, &mut prof)?;
-            last = argmax(logits.as_f32()?) as i32;
-            out.push(last);
+            argmax(logits.as_f32()?) as i32
+        };
+        d.last = tok;
+        d.tokens.push(tok);
+        d.produced += 1;
+        d.decode_us += timer.elapsed_us();
+        Ok(Some(tok))
+    }
+
+    fn generated<'a>(&self, d: &'a DecodeSession) -> &'a [i32] {
+        &d.tokens
+    }
+
+    fn decode_elapsed_us(&self, d: &DecodeSession) -> u64 {
+        d.decode_us
+    }
+}
+
+/// Builder-style engine construction: the one typed entry point wiring
+/// registry + model + method config (incl. the offline cluster table)
+/// into an [`Engine`].  `eval::build_engine` and `ServerBuilder` both
+/// funnel through here.
+pub struct EngineBuilder {
+    registry: Rc<Registry>,
+    model: String,
+    method: MethodConfig,
+}
+
+impl EngineBuilder {
+    pub fn new(registry: Rc<Registry>, model: &str) -> EngineBuilder {
+        EngineBuilder {
+            registry,
+            model: model.to_string(),
+            method: MethodConfig::default(),
         }
-        Ok((out, timer.elapsed_us()))
+    }
+
+    /// Replace the whole method config (τ, δ, γ, cluster path, kind).
+    pub fn method_config(mut self, m: MethodConfig) -> EngineBuilder {
+        self.method = m;
+        self
+    }
+
+    /// Override just the method kind.
+    pub fn method(mut self, kind: MethodKind) -> EngineBuilder {
+        self.method.kind = kind;
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let spec = self.registry.model(&self.model)?.clone();
+        let clusters = if self.method.kind == MethodKind::SharePrefill {
+            let path = match &self.method.clusters_file {
+                Some(p) => p.clone(),
+                None => self.registry.dir.join(
+                    format!("head_clusters-{}.json", self.model)),
+            };
+            match crate::clustering::load_clusters(&path) {
+                Ok(hc) => Some(hc.assignment),
+                Err(_) => None, // fall back to positional clusters
+            }
+        } else {
+            None
+        };
+        let strategy = build_strategy(&self.method, spec.num_layers,
+                                      spec.num_heads, clusters);
+        Engine::new(self.registry, &self.model, strategy)
     }
 }
 

@@ -40,6 +40,12 @@ impl KvAllocator {
         self.capacity - self.free.len()
     }
 
+    /// Would an `n`-block allocation succeed right now?  (Admission
+    /// probe: the scheduler re-queues rather than rejects on false.)
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
     /// Allocate `n` blocks (all-or-nothing).
     pub fn alloc(&mut self, n: usize) -> Result<Vec<BlockId>> {
         if self.free.len() < n {

@@ -1,5 +1,6 @@
-//! Serving metrics: request latency histograms, throughput counters and
-//! pattern-distribution aggregation across requests.
+//! Serving metrics: request latency histograms (TTFT, prefill, decode,
+//! queueing), throughput counters and pattern-distribution aggregation
+//! across requests.
 
 use crate::util::stats::{Histogram, Summary};
 
@@ -7,11 +8,15 @@ use crate::util::stats::{Histogram, Summary};
 pub struct Metrics {
     pub requests_completed: u64,
     pub requests_rejected: u64,
+    pub requests_cancelled: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_us: Histogram,
     pub decode_us: Histogram,
     pub queue_us: Histogram,
+    /// Arrival → first token, per request (the continuous-batching
+    /// headline: long prompts must not inflate everyone else's TTFT).
+    pub ttft_us: Histogram,
     pub density: Summary,
     pub dense_heads: u64,
     pub shared_heads: u64,
@@ -46,8 +51,9 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests: {} done, {} rejected\n\
+            "requests: {} done, {} rejected, {} cancelled\n\
              tokens: {} prompt, {} generated\n\
+             ttft:    mean {:.1} ms, p99 ≤ {:.1} ms ({} samples)\n\
              prefill: mean {:.1} ms, p99 ≤ {:.1} ms ({} samples)\n\
              decode:  mean {:.1} ms\n\
              queue:   mean {:.2} ms\n\
@@ -55,7 +61,11 @@ impl Metrics {
              patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
              prefill throughput: {:.0} tok/s",
             self.requests_completed, self.requests_rejected,
+            self.requests_cancelled,
             self.prompt_tokens, self.generated_tokens,
+            self.ttft_us.mean_us() / 1e3,
+            self.ttft_us.quantile_us(0.99) as f64 / 1e3,
+            self.ttft_us.count(),
             self.prefill_us.mean_us() / 1e3,
             self.prefill_us.quantile_us(0.99) as f64 / 1e3,
             self.prefill_us.count(),
@@ -85,8 +95,10 @@ mod tests {
         m.record_prefill(&s);
         m.requests_completed = 1;
         m.prompt_tokens = 1024;
+        m.ttft_us.record_us(6_000);
         let r = m.report();
         assert!(r.contains("shared 3"));
+        assert!(r.contains("ttft"));
         assert!(m.prefill_throughput() > 0.0);
         assert!((m.density.mean() - 0.5).abs() < 1e-12);
     }

@@ -1,7 +1,8 @@
-//! The serving coordinator: request/response types, dynamic batcher,
-//! paged KV-cache accounting, the prefill/decode engine (the executor of
-//! the paper's Algorithm 1), the scheduler gluing them together, metrics,
-//! and the thread+channel server front-end.
+//! The serving coordinator: session/event types, admission queue, paged
+//! KV-cache accounting, the chunk-resumable prefill/decode engine (the
+//! executor of the paper's Algorithm 1), the continuous-batching
+//! scheduler gluing them together, metrics, and the thread+channel
+//! server front-end with its streaming session API.
 
 pub mod batcher;
 pub mod engine;
@@ -10,6 +11,12 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod session;
+pub mod sim;
 
-pub use engine::{Engine, PrefillResult};
+pub use engine::{DecodeSession, Engine, EngineBuilder, EngineCore,
+                 PrefillResult, PrefillStats, PrefillTask};
 pub use request::{Request, RequestId, Response};
+pub use scheduler::Scheduler;
+pub use server::{ServerBuilder, ServerHandle};
+pub use session::{Event, EventSink, SessionHandle, SessionState};

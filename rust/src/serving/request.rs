@@ -1,4 +1,5 @@
 //! Request / response types flowing through the serving stack.
+//! (Lifecycle state and streamed events live in [`super::session`].)
 
 use std::time::Instant;
 
@@ -24,27 +25,19 @@ impl Request {
     }
 }
 
-/// Completed request.
+/// Summary of a completed request (also carried by `Event::Done`).
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: RequestId,
     pub generated: Vec<i32>,
-    /// Last-position prompt logits argmax (first generated token source).
     pub prefill_us: u64,
     pub decode_us: u64,
+    /// Time spent queued before prefill started.
     pub queue_us: u64,
+    /// Arrival → first token (the serving-latency headline metric).
+    pub ttft_us: u64,
     /// Fraction of causal blocks actually computed during prefill.
     pub density: f64,
-}
-
-/// Lifecycle state (observability / tests).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RequestState {
-    Queued,
-    Prefilling,
-    Decoding,
-    Done,
-    Rejected,
 }
 
 #[cfg(test)]

@@ -1,91 +1,406 @@
-//! Scheduler: glues batcher + KV admission + engine into the serving loop.
-//! Round-based: pull a batch, admit what the KV allocator can hold, run
-//! prefill → decode per request, release blocks, record metrics.
+//! Scheduler: continuous batching over sessions.
+//!
+//! Each [`Scheduler::run_round`] spends a shared token budget
+//! (`serve.max_batch_tokens`) across the live sessions: every decoding
+//! session advances one token per pass (a decode step costs 1 budget
+//! token) and the single active prefill advances one layer-chunk (a
+//! chunk costs its share of the prompt's tokens, `ceil(prompt / chunks)`)
+//! — so a 32K prompt no longer stalls every decode in flight; decode
+//! steps run *between* its prefill chunks.
+//!
+//! At most one prefill is in flight at a time because pattern strategies
+//! keep per-request state (SharePrefill's pivotal dictionary, reset by
+//! `begin_request`); decode sessions carry no strategy state and batch
+//! freely.  The active prefill is guaranteed at least one chunk per
+//! round even when the budget is smaller than its chunk cost (no
+//! head-of-line starvation), mirroring the batcher's oversized-head rule.
+//!
+//! Admission is KV-first: a session needs its whole-lifetime block count
+//! up front (vLLM-style).  When the allocator is exhausted the head of
+//! the queue *waits* and retries next round (bounded by
+//! `serve.admit_retries`); only after the retry budget is spent does it
+//! get a terminal `Rejected` event — clients never hang.
 
 use anyhow::Result;
 
 use crate::config::ServeConfig;
 
-use super::batcher::Batcher;
-use super::engine::Engine;
-use super::kvcache::KvAllocator;
+use super::batcher::{BatchItem, Batcher};
+use super::engine::{EngineCore, PrefillStats};
+use super::kvcache::{BlockId, KvAllocator};
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{Request, RequestId, Response};
+use super::session::{Event, EventSink, SessionState};
 
-pub struct Scheduler {
-    pub batcher: Batcher,
+/// One in-flight request: the immutable submission, its event stream,
+/// its KV reservation, and whichever engine state its phase carries.
+struct Session<E: EngineCore> {
+    req: Request,
+    sink: EventSink,
+    state: SessionState,
+    blocks: Vec<BlockId>,
+    admit_attempts: usize,
+    prefill: Option<E::Prefill>,
+    decode: Option<E::Decode>,
+    stats: Option<PrefillStats>,
+    queue_us: u64,
+    ttft_us: Option<u64>,
+    emitted: usize,
+}
+
+impl<E: EngineCore> BatchItem for Session<E> {
+    fn cost(&self) -> usize {
+        self.req.prompt_len()
+    }
+}
+
+pub struct Scheduler<E: EngineCore> {
+    queue: Batcher<Session<E>>,
+    prefilling: Option<Session<E>>,
+    decoding: Vec<Session<E>>,
     pub kv: KvAllocator,
     pub metrics: Metrics,
     decode_tokens: usize,
+    chunk_layers: usize,
+    round_budget: usize,
+    max_active: usize,
+    admit_retries: usize,
 }
 
-impl Scheduler {
-    pub fn new(cfg: &ServeConfig) -> Scheduler {
+impl<E: EngineCore> Scheduler<E> {
+    pub fn new(cfg: &ServeConfig) -> Scheduler<E> {
         Scheduler {
-            batcher: Batcher::new(cfg.max_batch_tokens,
-                                  cfg.max_batch_requests,
-                                  cfg.queue_capacity),
+            queue: Batcher::new(cfg.max_batch_tokens,
+                                cfg.max_batch_requests,
+                                cfg.queue_capacity),
+            prefilling: None,
+            decoding: Vec::new(),
             kv: KvAllocator::new(cfg.kv_blocks),
             metrics: Metrics::new(),
             decode_tokens: cfg.decode_tokens,
+            chunk_layers: cfg.chunk_layers.max(1),
+            round_budget: cfg.max_batch_tokens.max(1),
+            max_active: cfg.max_batch_requests.max(1),
+            admit_retries: cfg.admit_retries,
         }
     }
 
-    /// Submit a request; false = queue full (rejected).
-    pub fn submit(&mut self, r: Request) -> bool {
-        let ok = self.batcher.push(r);
-        if !ok {
-            self.metrics.requests_rejected += 1;
+    /// Submit a request with its event sink; false = queue full (the
+    /// session still receives a terminal `Rejected` event).
+    pub fn submit(&mut self, r: Request, sink: EventSink) -> bool {
+        let s = Session {
+            req: r,
+            sink,
+            state: SessionState::Queued,
+            blocks: Vec::new(),
+            admit_attempts: 0,
+            prefill: None,
+            decode: None,
+            stats: None,
+            queue_us: 0,
+            ttft_us: None,
+            emitted: 0,
+        };
+        match self.queue.push(s) {
+            Ok(()) => true,
+            Err(s) => {
+                self.metrics.requests_rejected += 1;
+                s.sink.send(Event::Rejected {
+                    id: s.req.id,
+                    reason: "queue full".to_string(),
+                });
+                false
+            }
         }
-        ok
     }
 
+    /// Queued (not yet admitted) sessions.
     pub fn pending(&self) -> usize {
-        self.batcher.len()
+        self.queue.len()
     }
 
-    /// Run one scheduling round on `engine`. Returns completed responses.
-    pub fn run_round(&mut self, engine: &mut Engine)
-                     -> Result<Vec<Response>> {
-        let batch = self.batcher.next_batch();
-        let mut responses = Vec::with_capacity(batch.len());
-        for req in batch {
-            let queue_us = req.arrived.elapsed().as_micros() as u64;
-            let layers = engine.stages.spec.num_layers;
-            let need = KvAllocator::blocks_needed(
-                req.prompt_len(), self.decode_tokens, layers);
-            let blocks = match self.kv.alloc(need) {
-                Ok(b) => b,
-                Err(_) => {
-                    // out of cache: reject (a fuller system would re-queue)
-                    self.metrics.requests_rejected += 1;
-                    continue;
-                }
-            };
-            let pre = engine.prefill(&req.tokens)?;
-            self.metrics.record_prefill(&pre.stats);
-            self.metrics.prompt_tokens += req.prompt_len() as u64;
-            let n = req.max_new_tokens.min(self.decode_tokens.max(1));
-            let (generated, decode_us) = if n > 0 {
-                engine.decode(&pre, n)?
-            } else {
-                (Vec::new(), 0)
-            };
-            self.kv.release(&blocks)?;
-            self.metrics.decode_us.record_us(decode_us);
-            self.metrics.queue_us.record_us(queue_us);
-            self.metrics.generated_tokens += generated.len() as u64;
-            self.metrics.requests_completed += 1;
-            responses.push(Response {
-                id: req.id,
-                generated,
-                prefill_us: pre.stats.latency_us,
-                decode_us,
-                queue_us,
-                density: pre.stats.density(),
+    /// Admitted sessions currently prefilling or decoding.
+    pub fn active(&self) -> usize {
+        self.decoding.len() + usize::from(self.prefilling.is_some())
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || self.prefilling.is_some()
+            || !self.decoding.is_empty()
+    }
+
+    /// Cancel a session in any non-terminal phase.  Frees its KV blocks
+    /// and emits the terminal `Cancelled` event; false if unknown.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(s) = self.queue.remove_by(|s| s.req.id == id) {
+            self.cancel_session(s);
+            return true;
+        }
+        if self.prefilling.as_ref().map_or(false, |s| s.req.id == id) {
+            let s = self.prefilling.take().unwrap();
+            self.cancel_session(s);
+            return true;
+        }
+        if let Some(i) = self.decoding.iter().position(|s| s.req.id == id) {
+            let s = self.decoding.swap_remove(i);
+            self.cancel_session(s);
+            return true;
+        }
+        false
+    }
+
+    fn cancel_session(&mut self, mut s: Session<E>) {
+        self.release_blocks(&mut s);
+        s.state = SessionState::Cancelled;
+        self.metrics.requests_cancelled += 1;
+        s.sink.send(Event::Cancelled { id: s.req.id });
+    }
+
+    fn reject(&mut self, mut s: Session<E>, reason: &str) {
+        self.release_blocks(&mut s);
+        s.state = SessionState::Rejected;
+        self.metrics.requests_rejected += 1;
+        s.sink.send(Event::Rejected {
+            id: s.req.id,
+            reason: reason.to_string(),
+        });
+    }
+
+    fn release_blocks(&mut self, s: &mut Session<E>) {
+        if !s.blocks.is_empty() {
+            // blocks are only ever handed out by this scheduler, so a
+            // release can only fail on an internal invariant violation
+            self.kv.release(&s.blocks).expect("kv release");
+            s.blocks.clear();
+        }
+    }
+
+    /// Terminal `Error` for one session the engine failed on (its KV
+    /// reservation must not leak with it).
+    fn fail_session(&mut self, mut s: Session<E>, message: &str) {
+        self.release_blocks(&mut s);
+        s.sink.send(Event::Error {
+            id: s.req.id,
+            message: message.to_string(),
+        });
+    }
+
+    /// Fail every live session with a terminal `Error` event (engine
+    /// died); the scheduler stays usable for accounting afterwards.
+    pub fn fail_all(&mut self, message: &str) {
+        let mut all: Vec<Session<E>> = Vec::new();
+        while let Some(s) = self.queue.pop_front() {
+            all.push(s);
+        }
+        if let Some(s) = self.prefilling.take() {
+            all.push(s);
+        }
+        all.append(&mut self.decoding);
+        for mut s in all {
+            self.release_blocks(&mut s);
+            s.sink.send(Event::Error {
+                id: s.req.id,
+                message: message.to_string(),
             });
         }
-        Ok(responses)
+    }
+
+    /// Try to start the next queued prefill(s).  `count_retry` marks the
+    /// once-per-round admission attempt that burns a KV retry.
+    fn admit(&mut self, engine: &mut E, count_retry: bool) -> Result<()> {
+        while self.prefilling.is_none() {
+            if self.active() >= self.max_active {
+                return Ok(());
+            }
+            let Some(front) = self.queue.front() else { return Ok(()) };
+            if front.req.prompt_len() == 0 {
+                let s = self.queue.pop_front().unwrap();
+                self.reject(s, "empty prompt");
+                continue;
+            }
+            let need = KvAllocator::blocks_needed(
+                front.req.prompt_len(), self.decode_tokens,
+                engine.layers_total());
+            if !self.kv.can_alloc(need) {
+                if count_retry {
+                    let f = self.queue.front_mut().unwrap();
+                    f.admit_attempts += 1;
+                    if f.admit_attempts > self.admit_retries {
+                        let s = self.queue.pop_front().unwrap();
+                        self.reject(s, &format!(
+                            "kv cache exhausted: {need} blocks unavailable \
+                             after {} rounds", self.admit_retries));
+                        continue; // the next queued session may be smaller
+                    }
+                }
+                return Ok(()); // head of line waits; FIFO preserved
+            }
+            let mut s = self.queue.pop_front().unwrap();
+            match engine.begin_prefill(&s.req.tokens) {
+                Ok(task) => {
+                    s.blocks = self.kv.alloc(need)?;
+                    s.queue_us = s.req.arrived.elapsed().as_micros() as u64;
+                    s.state = SessionState::Prefilling;
+                    s.prefill = Some(task);
+                    self.prefilling = Some(s);
+                }
+                Err(e) => {
+                    // per-request failure (e.g. prompt exceeds the max
+                    // seq bucket) must not take the server down
+                    self.reject(s, &format!("{e:#}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Budget cost of one prefill chunk: the prompt's tokens spread
+    /// evenly over its chunks.
+    fn chunk_cost(&self, engine: &E, s: &Session<E>) -> usize {
+        let chunks = engine.layers_total().max(1)
+            .div_ceil(self.chunk_layers);
+        s.req.prompt_len().div_ceil(chunks.max(1)).max(1)
+    }
+
+    /// Run one scheduling round. Returns sessions completed this round.
+    pub fn run_round(&mut self, engine: &mut E) -> Result<Vec<Response>> {
+        let mut completed = Vec::new();
+        self.admit(engine, true)?;
+        let mut budget = self.round_budget;
+        let mut prefill_ran = false;
+        loop {
+            let mut progressed = false;
+
+            // Decode pass: one token per live session (latency first).
+            let mut i = 0;
+            while i < self.decoding.len() {
+                if budget == 0 {
+                    break;
+                }
+                let s = &mut self.decoding[i];
+                match engine.decode_step(s.decode.as_mut().unwrap())? {
+                    Some(tok) => {
+                        budget -= 1;
+                        if s.ttft_us.is_none() {
+                            s.ttft_us = Some(
+                                s.req.arrived.elapsed().as_micros() as u64);
+                        }
+                        let index = s.emitted;
+                        s.emitted += 1;
+                        s.sink.send(Event::Token {
+                            id: s.req.id, token: tok, index,
+                        });
+                        progressed = true;
+                        i += 1;
+                    }
+                    None => {
+                        let s = self.decoding.swap_remove(i);
+                        completed.push(self.finish(engine, s));
+                        progressed = true;
+                    }
+                }
+            }
+
+            // One prefill chunk.  The active prefill always gets at
+            // least one chunk per round, even over budget (no
+            // starvation under a small budget).
+            if let Some(mut s) = self.prefilling.take() {
+                let cost = self.chunk_cost(engine, &s);
+                if budget >= cost || !prefill_ran {
+                    budget = budget.saturating_sub(cost);
+                    prefill_ran = true;
+                    progressed = true;
+                    // engine errors here must not drop the taken session
+                    // on the floor: its KV blocks and terminal event
+                    // would leak with it (fail_all can't see it)
+                    let step = engine.prefill_chunk(
+                        s.prefill.as_mut().unwrap(), self.chunk_layers);
+                    let done = match step {
+                        Ok(d) => d,
+                        Err(e) => {
+                            self.fail_session(s, &format!("{e:#}"));
+                            return Err(e);
+                        }
+                    };
+                    let task = s.prefill.as_mut().unwrap();
+                    let (ld, lt) = engine.prefill_progress(task);
+                    s.sink.send(Event::PrefillProgress {
+                        id: s.req.id,
+                        layers_done: ld,
+                        layers_total: lt,
+                    });
+                    if done {
+                        let task = s.prefill.take().unwrap();
+                        let max_new = s.req.max_new_tokens
+                            .min(self.decode_tokens.max(1));
+                        let (dec, stats) =
+                            match engine.start_decode(task, max_new) {
+                                Ok(x) => x,
+                                Err(e) => {
+                                    self.fail_session(s, &format!("{e:#}"));
+                                    return Err(e);
+                                }
+                            };
+                        self.metrics.record_prefill(&stats);
+                        self.metrics.prompt_tokens +=
+                            s.req.prompt_len() as u64;
+                        s.sink.send(Event::PrefillDone {
+                            id: s.req.id,
+                            stats: stats.clone(),
+                        });
+                        s.stats = Some(stats);
+                        s.state = SessionState::Decoding;
+                        s.decode = Some(dec);
+                        self.decoding.push(s);
+                        // the engine is free: pull in the next prefill
+                        self.admit(engine, false)?;
+                    } else {
+                        self.prefilling = Some(s);
+                    }
+                } else {
+                    self.prefilling = Some(s);
+                }
+            }
+
+            if !progressed || budget == 0 {
+                break;
+            }
+        }
+        Ok(completed)
+    }
+
+    /// Retire a decoded-out session: release KV, record metrics, emit
+    /// the terminal `Done` event.
+    fn finish(&mut self, engine: &E, mut s: Session<E>) -> Response {
+        self.release_blocks(&mut s);
+        let d = s.decode.take().unwrap();
+        let generated = engine.generated(&d).to_vec();
+        let decode_us = engine.decode_elapsed_us(&d);
+        let stats = s.stats.take().unwrap_or_default();
+        // no tokens requested → first "result" is prefill completion
+        let ttft_us = s.ttft_us.unwrap_or_else(|| {
+            s.req.arrived.elapsed().as_micros() as u64
+        });
+        self.metrics.decode_us.record_us(decode_us);
+        self.metrics.queue_us.record_us(s.queue_us);
+        self.metrics.ttft_us.record_us(ttft_us);
+        self.metrics.generated_tokens += generated.len() as u64;
+        self.metrics.requests_completed += 1;
+        let response = Response {
+            id: s.req.id,
+            generated,
+            prefill_us: stats.latency_us,
+            decode_us,
+            queue_us: s.queue_us,
+            ttft_us,
+            density: stats.density(),
+        };
+        s.state = SessionState::Done;
+        s.sink.send(Event::Done {
+            id: s.req.id,
+            response: response.clone(),
+        });
+        response
     }
 }
 
@@ -93,14 +408,52 @@ impl Scheduler {
 mod tests {
     use super::*;
     use crate::config::ServeConfig;
+    use crate::serving::sim::SimEngine;
 
     #[test]
     fn submit_reject_accounting() {
         let cfg = ServeConfig { queue_capacity: 1, ..Default::default() };
-        let mut s = Scheduler::new(&cfg);
-        assert!(s.submit(Request::new(0, vec![0; 8], 0)));
-        assert!(!s.submit(Request::new(1, vec![0; 8], 0)));
+        let mut s: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        assert!(s.submit(Request::new(0, vec![0; 8], 0),
+                         EventSink::null()));
+        assert!(!s.submit(Request::new(1, vec![0; 8], 0),
+                          EventSink::null()));
         assert_eq!(s.metrics.requests_rejected, 1);
         assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn round_completes_sessions_and_frees_kv() {
+        let cfg = ServeConfig::default();
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        for i in 0..3 {
+            assert!(sched.submit(Request::new(i, vec![7; 64], 2),
+                                 sink.clone()));
+        }
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.run_round(&mut engine).unwrap());
+        }
+        drop(sink);
+        assert_eq!(done.len(), 3);
+        assert_eq!(sched.metrics.requests_completed, 3);
+        assert_eq!(sched.kv.used(), 0, "all kv blocks released");
+        for r in &done {
+            assert_eq!(r.generated.len(), 2);
+        }
+        let events: Vec<Event> = rx.iter().collect();
+        let dones = events.iter()
+            .filter(|e| matches!(e, Event::Done { .. }))
+            .count();
+        assert_eq!(dones, 3);
+    }
+
+    #[test]
+    fn cancel_unknown_id_is_false() {
+        let cfg = ServeConfig::default();
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        assert!(!sched.cancel(99));
     }
 }

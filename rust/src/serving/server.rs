@@ -1,68 +1,89 @@
-//! Thread + channel server front-end: clients submit [`Request`]s through
-//! an mpsc sender; a worker thread owns the engine (PJRT handles are not
-//! `Send`-safe across this crate's wrappers, so the engine lives on its
-//! thread and the handle talks over channels — the std-thread analog of
-//! the tokio actor pattern this architecture would use with more cores).
+//! Thread + channel server front-end: clients submit prompts through a
+//! [`ServerHandle`] and read back a per-session [`Event`] stream; a
+//! worker thread owns the engine (PJRT handles are not `Send`-safe
+//! across this crate's wrappers, so the engine lives on its thread and
+//! the handle talks over channels — the std-thread analog of the tokio
+//! actor pattern this architecture would use with more cores).
+//!
+//! The worker runs [`Scheduler::run_round`] in a loop, ingesting
+//! commands between rounds, so cancellation and new submissions take
+//! effect at chunk granularity — a long prompt mid-prefill no longer
+//! blocks the command stream.  `Shutdown` drains all in-flight work
+//! before the metrics report is released.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Duration;
 
-use super::request::{Request, Response};
+use anyhow::Result;
+
+use crate::config::{Config, MethodKind};
+
+use super::engine::{EngineBuilder, EngineCore};
+use super::request::{Request, RequestId, Response};
+use super::scheduler::Scheduler;
+use super::session::{EventSink, SessionHandle};
 
 /// Commands accepted by the serving thread.
 pub enum Command {
-    Submit(Request),
-    /// Drain the queue, then send a metrics report and stop.
+    Submit(Request, EventSink),
+    Cancel(RequestId),
+    /// Drain all in-flight work, then release the metrics report.
     Shutdown,
 }
 
-/// Client handle.
+/// Client handle: submit/cancel sessions, shut the server down.
 pub struct ServerHandle {
     pub tx: mpsc::Sender<Command>,
-    pub responses: mpsc::Receiver<Response>,
-    pub report: mpsc::Receiver<String>,
+    report: mpsc::Receiver<String>,
+    next_id: AtomicU64,
 }
 
 impl ServerHandle {
-    pub fn submit(&self, r: Request) {
-        let _ = self.tx.send(Command::Submit(r));
+    /// Submit a prompt; returns the per-session event stream.
+    pub fn submit(&self, tokens: Vec<i32>, max_new_tokens: usize)
+                  -> SessionHandle {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (sink, events) = EventSink::channel();
+        let _ = self.tx.send(Command::Submit(
+            Request::new(id, tokens, max_new_tokens), sink));
+        SessionHandle { id, events }
     }
 
-    pub fn shutdown_and_report(self) -> (Vec<Response>, String) {
+    /// One-call compatibility path: submit and block until the terminal
+    /// event (evals and scripts that don't want to stream).
+    pub fn submit_blocking(&self, tokens: Vec<i32>, max_new_tokens: usize)
+                           -> Result<Response> {
+        self.submit(tokens, max_new_tokens).wait()
+    }
+
+    /// Request cancellation of a session in any non-terminal phase; its
+    /// stream receives a terminal `Cancelled` event when it lands.
+    pub fn cancel(&self, id: RequestId) {
+        let _ = self.tx.send(Command::Cancel(id));
+    }
+
+    /// Graceful shutdown: drain every in-flight session, then return the
+    /// lifetime metrics report.
+    pub fn shutdown(self) -> String {
         let _ = self.tx.send(Command::Shutdown);
-        let mut out = Vec::new();
-        // collect whatever is in flight until the report arrives
-        loop {
-            match self.responses.recv_timeout(Duration::from_millis(50)) {
-                Ok(r) => out.push(r),
-                Err(_) => {
-                    if let Ok(rep) = self.report.try_recv() {
-                        // drain any stragglers
-                        while let Ok(r) = self.responses.try_recv() {
-                            out.push(r);
-                        }
-                        return (out, rep);
-                    }
-                }
-            }
-        }
+        self.report.recv().unwrap_or_else(
+            |_| "server worker exited without a report".to_string())
     }
 }
 
-/// Spawn the serving loop. `make_engine` runs on the worker thread (PJRT
-/// client construction included) — errors surface through the report
-/// channel.
-pub fn spawn<F>(make_engine: F) -> ServerHandle
+/// Spawn the serving loop around an engine built by `factory` *on the
+/// worker thread* (PJRT client construction included — its handles never
+/// cross threads).  Generic over [`EngineCore`] so tests and benches can
+/// serve the artifact-free `SimEngine`.
+pub fn spawn<E, F>(factory: F) -> ServerHandle
 where
-    F: FnOnce() -> anyhow::Result<(super::scheduler::Scheduler,
-                                   super::engine::Engine)>
-        + Send + 'static,
+    E: EngineCore + 'static,
+    F: FnOnce() -> Result<(Scheduler<E>, E)> + Send + 'static,
 {
     let (tx, rx) = mpsc::channel::<Command>();
-    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
     let (rep_tx, rep_rx) = mpsc::channel::<String>();
     std::thread::spawn(move || {
-        let (mut sched, mut engine) = match make_engine() {
+        let (mut sched, mut engine) = match factory() {
             Ok(x) => x,
             Err(e) => {
                 let _ = rep_tx.send(format!("engine init failed: {e:#}"));
@@ -71,42 +92,115 @@ where
         };
         let mut shutting_down = false;
         loop {
-            // ingest commands (non-blocking when work is pending)
+            // ingest commands (blocking only when fully idle)
             loop {
-                let cmd = if sched.pending() == 0 && !shutting_down {
+                let cmd = if !sched.has_work() && !shutting_down {
                     match rx.recv() {
                         Ok(c) => c,
-                        Err(_) => return,
+                        Err(_) => {
+                            // all handles dropped: drain and exit
+                            shutting_down = true;
+                            break;
+                        }
                     }
                 } else {
                     match rx.try_recv() {
                         Ok(c) => c,
-                        Err(_) => break,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            shutting_down = true;
+                            break;
+                        }
                     }
                 };
                 match cmd {
-                    Command::Submit(r) => {
-                        sched.submit(r);
+                    Command::Submit(r, sink) => {
+                        sched.submit(r, sink);
+                    }
+                    Command::Cancel(id) => {
+                        sched.cancel(id);
                     }
                     Command::Shutdown => shutting_down = true,
                 }
             }
-            match sched.run_round(&mut engine) {
-                Ok(rs) => {
-                    for r in rs {
-                        let _ = resp_tx.send(r);
-                    }
-                }
-                Err(e) => {
-                    let _ = rep_tx.send(format!("engine error: {e:#}"));
-                    return;
-                }
+            if let Err(e) = sched.run_round(&mut engine) {
+                // terminal engine failure: every live session gets an
+                // Error event so no client hangs
+                sched.fail_all(&format!("{e:#}"));
+                let _ = rep_tx.send(format!("engine error: {e:#}"));
+                return;
             }
-            if shutting_down && sched.pending() == 0 {
+            if shutting_down && !sched.has_work() {
                 let _ = rep_tx.send(sched.metrics.report());
                 return;
             }
         }
     });
-    ServerHandle { tx, responses: resp_rx, report: rep_rx }
+    ServerHandle { tx, report: rep_rx, next_id: AtomicU64::new(0) }
+}
+
+/// Builder-style server construction: one typed entry point from
+/// [`Config`] to a running server, replacing the ad-hoc closure+tuple
+/// wiring each caller used to repeat.
+pub struct ServerBuilder {
+    config: Config,
+    model: String,
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder {
+            config: Config::default(),
+            model: "sim-llama".to_string(),
+        }
+    }
+
+    /// Replace the whole config (method + serve + paths).
+    pub fn config(mut self, cfg: Config) -> ServerBuilder {
+        self.config = cfg;
+        self
+    }
+
+    pub fn model(mut self, model: &str) -> ServerBuilder {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Override just the method kind.
+    pub fn method(mut self, kind: MethodKind) -> ServerBuilder {
+        self.config.method.kind = kind;
+        self
+    }
+
+    /// Layers advanced per prefill chunk (1 = finest interleaving).
+    pub fn chunk_layers(mut self, n: usize) -> ServerBuilder {
+        self.config.serve.chunk_layers = n.max(1);
+        self
+    }
+
+    /// Decode-step cap per request.
+    pub fn decode_tokens(mut self, n: usize) -> ServerBuilder {
+        self.config.serve.decode_tokens = n;
+        self
+    }
+
+    /// Spawn with the real artifact-backed engine (built on the worker
+    /// thread via [`EngineBuilder`]).
+    pub fn spawn(self) -> ServerHandle {
+        let ServerBuilder { config, model } = self;
+        let serve = config.serve.clone();
+        spawn(move || {
+            let registry = crate::eval::open_registry(&config)?;
+            let engine = EngineBuilder::new(registry, &model)
+                .method_config(config.method.clone())
+                .build()?;
+            Ok((Scheduler::new(&serve), engine))
+        })
+    }
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
 }

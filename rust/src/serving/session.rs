@@ -1,0 +1,218 @@
+//! Session lifecycle + streamed per-request events.
+//!
+//! A submitted request becomes a *session* that walks the lifecycle
+//! `Queued → Prefilling → Decoding → Done | Cancelled | Rejected`,
+//! emitting [`Event`]s on its own channel as it goes: `PrefillProgress`
+//! per chunk, `PrefillDone` with the full [`PrefillStats`] (this is the
+//! TTFT-relevant moment), one `Token` per decoded token, and exactly one
+//! terminal event (`Done`, `Cancelled`, `Rejected`, or `Error`) — clients
+//! never hang waiting on a dropped request.
+
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+
+use super::engine::PrefillStats;
+use super::request::{RequestId, Response};
+
+/// Lifecycle state of a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Done,
+    Cancelled,
+    Rejected,
+}
+
+/// Streamed per-request event.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A prefill chunk finished (`layers_done` of `layers_total`).
+    PrefillProgress {
+        id: RequestId,
+        layers_done: usize,
+        layers_total: usize,
+    },
+    /// Prefill completed; density/pattern accounting attached.
+    PrefillDone { id: RequestId, stats: PrefillStats },
+    /// One decoded token (`index` counts from 0 within the session).
+    Token { id: RequestId, token: i32, index: usize },
+    /// Terminal: the session completed normally.
+    Done { id: RequestId, response: Response },
+    /// Terminal: cancelled by the client.
+    Cancelled { id: RequestId },
+    /// Terminal: admission refused (queue full, KV exhausted after
+    /// bounded retries, empty/oversized prompt).
+    Rejected { id: RequestId, reason: String },
+    /// Terminal: the engine failed while serving this session.
+    Error { id: RequestId, message: String },
+}
+
+impl Event {
+    pub fn id(&self) -> RequestId {
+        match self {
+            Event::PrefillProgress { id, .. }
+            | Event::PrefillDone { id, .. }
+            | Event::Token { id, .. }
+            | Event::Done { id, .. }
+            | Event::Cancelled { id }
+            | Event::Rejected { id, .. }
+            | Event::Error { id, .. } => *id,
+        }
+    }
+
+    /// True for the events that end a session's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self,
+                 Event::Done { .. } | Event::Cancelled { .. }
+                 | Event::Rejected { .. } | Event::Error { .. })
+    }
+}
+
+/// Sending half of a session's event stream.  Cloneable so tests can
+/// merge several sessions into one globally-ordered stream; sends to a
+/// dropped receiver are silently discarded (a client that walked away
+/// does not stall the server).
+#[derive(Clone)]
+pub struct EventSink {
+    tx: mpsc::Sender<Event>,
+}
+
+impl EventSink {
+    pub fn channel() -> (EventSink, mpsc::Receiver<Event>) {
+        let (tx, rx) = mpsc::channel();
+        (EventSink { tx }, rx)
+    }
+
+    /// A sink whose events go nowhere (receiver already dropped).
+    pub fn null() -> EventSink {
+        let (sink, rx) = EventSink::channel();
+        drop(rx);
+        sink
+    }
+
+    pub fn send(&self, ev: Event) {
+        let _ = self.tx.send(ev);
+    }
+}
+
+/// Client-side handle to one session's event stream.
+pub struct SessionHandle {
+    pub id: RequestId,
+    pub events: mpsc::Receiver<Event>,
+}
+
+impl SessionHandle {
+    /// Next event, blocking; `None` once the stream is closed.
+    pub fn next_event(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Block until the terminal event; `Ok(Response)` on `Done`, an
+    /// error describing the terminal state otherwise.  Intermediate
+    /// events are discarded — the one-call path evals use.
+    pub fn wait(self) -> Result<Response> {
+        for ev in self.events.iter() {
+            match ev {
+                Event::Done { response, .. } => return Ok(response),
+                Event::Rejected { reason, .. } => {
+                    bail!("request {} rejected: {reason}", self.id)
+                }
+                Event::Cancelled { .. } => {
+                    bail!("request {} cancelled", self.id)
+                }
+                Event::Error { message, .. } => {
+                    bail!("request {} failed: {message}", self.id)
+                }
+                _ => {}
+            }
+        }
+        bail!("server dropped session {} without a terminal event", self.id)
+    }
+
+    /// Drain the full stream (through the terminal event or disconnect).
+    pub fn collect(self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for ev in self.events.iter() {
+            let terminal = ev.is_terminal();
+            out.push(ev);
+            if terminal {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminal_classification() {
+        let done = Event::Done {
+            id: 1,
+            response: Response {
+                id: 1,
+                generated: vec![],
+                prefill_us: 0,
+                decode_us: 0,
+                queue_us: 0,
+                ttft_us: 0,
+                density: 1.0,
+            },
+        };
+        assert!(done.is_terminal());
+        assert_eq!(done.id(), 1);
+        let prog = Event::PrefillProgress {
+            id: 2, layers_done: 1, layers_total: 4,
+        };
+        assert!(!prog.is_terminal());
+        assert_eq!(prog.id(), 2);
+        assert!(Event::Cancelled { id: 3 }.is_terminal());
+    }
+
+    #[test]
+    fn wait_returns_response() {
+        let (sink, rx) = EventSink::channel();
+        let h = SessionHandle { id: 9, events: rx };
+        sink.send(Event::Token { id: 9, token: 5, index: 0 });
+        sink.send(Event::Done {
+            id: 9,
+            response: Response {
+                id: 9,
+                generated: vec![5],
+                prefill_us: 1,
+                decode_us: 1,
+                queue_us: 0,
+                ttft_us: 1,
+                density: 0.5,
+            },
+        });
+        let r = h.wait().unwrap();
+        assert_eq!(r.generated, vec![5]);
+    }
+
+    #[test]
+    fn wait_surfaces_rejection() {
+        let (sink, rx) = EventSink::channel();
+        let h = SessionHandle { id: 4, events: rx };
+        sink.send(Event::Rejected { id: 4, reason: "queue full".into() });
+        let e = h.wait().unwrap_err();
+        assert!(format!("{e}").contains("rejected"));
+    }
+
+    #[test]
+    fn wait_detects_dropped_server() {
+        let (sink, rx) = EventSink::channel();
+        let h = SessionHandle { id: 8, events: rx };
+        drop(sink); // server died without a terminal event
+        assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn null_sink_swallows() {
+        EventSink::null().send(Event::Cancelled { id: 0 });
+    }
+}

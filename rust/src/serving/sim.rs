@@ -1,0 +1,143 @@
+//! Deterministic artifact-free engine for scheduler/server tests and
+//! coordinator benches.
+//!
+//! [`SimEngine`] implements [`EngineCore`] with pure bookkeeping: a
+//! prefill "layer" is a counter increment and a decode step emits
+//! `prompt_len + step` as the token.  That is enough to exercise every
+//! scheduling property — chunk interleaving, KV admission/re-queueing,
+//! cancellation, shutdown draining — in CI, where the compiled HLO
+//! artifacts (and the PJRT runtime) are unavailable.
+
+use anyhow::{bail, Result};
+
+use super::engine::{EngineCore, PrefillStats};
+use crate::BLOCK_SIZE;
+
+pub struct SimEngine {
+    layers: usize,
+    /// Prompts longer than this fail `begin_prefill`, mimicking the real
+    /// engine's "exceeds max seq bucket" rejection path.
+    max_prompt: usize,
+}
+
+pub struct SimPrefill {
+    prompt_len: usize,
+    layers_done: usize,
+    layers_total: usize,
+}
+
+pub struct SimDecode {
+    prompt_len: usize,
+    produced: usize,
+    max_new: usize,
+    tokens: Vec<i32>,
+    decode_us: u64,
+}
+
+impl SimEngine {
+    pub fn new(layers: usize) -> SimEngine {
+        SimEngine { layers: layers.max(1), max_prompt: usize::MAX }
+    }
+
+    pub fn with_max_prompt(mut self, max_prompt: usize) -> SimEngine {
+        self.max_prompt = max_prompt;
+        self
+    }
+}
+
+impl EngineCore for SimEngine {
+    type Prefill = SimPrefill;
+    type Decode = SimDecode;
+
+    fn layers_total(&self) -> usize {
+        self.layers
+    }
+
+    fn begin_prefill(&mut self, tokens: &[i32]) -> Result<SimPrefill> {
+        if tokens.len() > self.max_prompt {
+            bail!("prompt of {} tokens exceeds max bucket {}",
+                  tokens.len(), self.max_prompt);
+        }
+        Ok(SimPrefill {
+            prompt_len: tokens.len(),
+            layers_done: 0,
+            layers_total: self.layers,
+        })
+    }
+
+    fn prefill_chunk(&mut self, t: &mut SimPrefill, max_layers: usize)
+                     -> Result<bool> {
+        t.layers_done =
+            (t.layers_done + max_layers.max(1)).min(t.layers_total);
+        Ok(t.layers_done >= t.layers_total)
+    }
+
+    fn prefill_progress(&self, t: &SimPrefill) -> (usize, usize) {
+        (t.layers_done, t.layers_total)
+    }
+
+    fn start_decode(&mut self, t: SimPrefill, max_new: usize)
+                    -> Result<(SimDecode, PrefillStats)> {
+        let nb = t.prompt_len.div_ceil(BLOCK_SIZE).max(1);
+        let causal = nb * (nb + 1) / 2 * t.layers_total;
+        let stats = PrefillStats {
+            latency_us: 1,
+            blocks_computed: causal.div_ceil(2),
+            blocks_total: causal,
+            shared: t.layers_total,
+            ..Default::default()
+        };
+        Ok((SimDecode {
+            prompt_len: t.prompt_len,
+            produced: 0,
+            max_new,
+            tokens: Vec::new(),
+            decode_us: 0,
+        }, stats))
+    }
+
+    fn decode_step(&mut self, d: &mut SimDecode) -> Result<Option<i32>> {
+        if d.produced >= d.max_new {
+            return Ok(None);
+        }
+        let tok = (d.prompt_len + d.produced) as i32;
+        d.produced += 1;
+        d.tokens.push(tok);
+        d.decode_us += 1;
+        Ok(Some(tok))
+    }
+
+    fn generated<'a>(&self, d: &'a SimDecode) -> &'a [i32] {
+        &d.tokens
+    }
+
+    fn decode_elapsed_us(&self, d: &SimDecode) -> u64 {
+        d.decode_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunked_progress_and_decode() {
+        let mut e = SimEngine::new(4);
+        let mut t = e.begin_prefill(&[1, 2, 3]).unwrap();
+        assert!(!e.prefill_chunk(&mut t, 1).unwrap());
+        assert_eq!(e.prefill_progress(&t), (1, 4));
+        assert!(e.prefill_chunk(&mut t, 3).unwrap());
+        let (mut d, stats) = e.start_decode(t, 2).unwrap();
+        assert!(stats.blocks_total > 0);
+        assert_eq!(e.decode_step(&mut d).unwrap(), Some(3));
+        assert_eq!(e.decode_step(&mut d).unwrap(), Some(4));
+        assert_eq!(e.decode_step(&mut d).unwrap(), None);
+        assert_eq!(e.generated(&d), &[3, 4]);
+    }
+
+    #[test]
+    fn oversized_prompt_fails_begin() {
+        let mut e = SimEngine::new(2).with_max_prompt(4);
+        assert!(e.begin_prefill(&[0; 8]).is_err());
+    }
+}

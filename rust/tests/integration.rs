@@ -7,8 +7,8 @@ use std::rc::Rc;
 use shareprefill::config::{Config, MethodKind};
 use shareprefill::eval::{build_engine, open_registry};
 use shareprefill::runtime::Registry;
-use shareprefill::serving::request::Request;
-use shareprefill::serving::scheduler::Scheduler;
+use shareprefill::serving::{Engine, EngineCore, Event, EventSink, Request,
+                            Scheduler};
 use shareprefill::workloads::tasks::{latency_prompt, sample, Task};
 
 fn registry() -> Option<Rc<Registry>> {
@@ -84,12 +84,15 @@ fn scheduler_end_to_end() {
     let cfg = Config::default();
     let mut engine = build_engine(&reg, &cfg, "sim-llama",
                                   MethodKind::SharePrefill).unwrap();
-    let mut sched = Scheduler::new(&cfg.serve);
+    let mut sched: Scheduler<Engine> = Scheduler::new(&cfg.serve);
+    let (sink, rx) = EventSink::channel();
     for i in 0..3 {
-        assert!(sched.submit(Request::new(i, latency_prompt(256), 2)));
+        assert!(sched.submit(Request::new(i, latency_prompt(256), 2),
+                             sink.clone()));
     }
+    drop(sink);
     let mut done = Vec::new();
-    while sched.pending() > 0 {
+    while sched.has_work() {
         done.extend(sched.run_round(&mut engine).unwrap());
     }
     assert_eq!(done.len(), 3);
@@ -98,6 +101,64 @@ fn scheduler_end_to_end() {
     for r in &done {
         assert_eq!(r.generated.len(), 2);
         assert!(r.prefill_us > 0);
+        assert!(r.ttft_us > 0);
+    }
+    let events: Vec<Event> = rx.iter().collect();
+    let dones = events.iter()
+        .filter(|e| matches!(e, Event::Done { .. }))
+        .count();
+    let prefill_dones = events.iter()
+        .filter(|e| matches!(e, Event::PrefillDone { .. }))
+        .count();
+    assert_eq!(dones, 3);
+    assert_eq!(prefill_dones, 3);
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_bitwise() {
+    // The acceptance property of the session API: a prompt prefilled
+    // layer-chunk by layer-chunk — with decode steps of another session
+    // interleaved between chunks, exactly as the scheduler does — yields
+    // bit-identical hidden states and identical block accounting to the
+    // one-shot path.
+    let Some(reg) = registry() else { return };
+    let cfg = Config::default();
+    let mut engine = build_engine(&reg, &cfg, "sim-llama",
+                                  MethodKind::SharePrefill).unwrap();
+    let prompt = latency_prompt(300);
+
+    let mono = engine.prefill(&prompt).unwrap();
+
+    // a second session mid-decode, stepped between the chunks
+    let warm = engine.prefill(&latency_prompt(100)).unwrap();
+    let mut dec = engine.begin_decode(&warm, 16).unwrap();
+
+    let mut task = engine.begin_prefill(&prompt).unwrap();
+    loop {
+        let done = engine.prefill_chunk(&mut task, 1).unwrap();
+        let _ = engine.decode_step(&mut dec).unwrap();
+        if done {
+            break;
+        }
+    }
+    let chunked = engine.finish_prefill(task).unwrap();
+
+    assert_eq!(mono.seq, chunked.seq);
+    assert_eq!(mono.real_len, chunked.real_len);
+    assert_eq!(mono.hidden.as_f32().unwrap(),
+               chunked.hidden.as_f32().unwrap(),
+               "chunked prefill diverged from monolithic hidden states");
+    assert_eq!(mono.stats.blocks_computed, chunked.stats.blocks_computed);
+    assert_eq!(mono.stats.blocks_total, chunked.stats.blocks_total);
+    assert_eq!((mono.stats.dense, mono.stats.shared, mono.stats.vslash),
+               (chunked.stats.dense, chunked.stats.shared,
+                chunked.stats.vslash));
+    for (l, ((mk, mv), (ck, cv))) in
+        mono.kv.iter().zip(chunked.kv.iter()).enumerate() {
+        assert_eq!(mk.as_f32().unwrap(), ck.as_f32().unwrap(),
+                   "layer {l} K cache diverged");
+        assert_eq!(mv.as_f32().unwrap(), cv.as_f32().unwrap(),
+                   "layer {l} V cache diverged");
     }
 }
 

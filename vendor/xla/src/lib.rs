@@ -1,0 +1,296 @@
+//! Offline stub of the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The container image carries no libxla/PJRT shared library, so this
+//! vendored crate keeps the workspace compiling and the pure-host parts
+//! working:
+//!
+//! * [`Literal`] is a real host-side implementation (shape + typed data),
+//!   enough for `Tensor::to_literal` / `from_literal` round-trips and
+//!   their unit tests.
+//! * The PJRT surface ([`PjRtClient`], [`PjRtLoadedExecutable`], ...)
+//!   compiles but returns errors at runtime — `PjRtClient::cpu()` fails
+//!   up front, so nothing downstream ever reaches an executing path.
+//!
+//! Swapping in the real xla-rs bindings is a one-line change in the root
+//! `Cargo.toml`; the API mirrored here is exactly the subset
+//! `rust/src/runtime/` uses.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable — built against the vendored \
+         stub `xla` crate (no libxla in this environment); link the real \
+         xla-rs bindings to execute artifacts"))
+}
+
+/// Element types the manifest can mention (subset of XLA's set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+    Tuple,
+}
+
+/// Typed storage behind a [`Literal`].  Public only because the sealed
+/// [`NativeType`] trait must name it; treat as an implementation detail.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Host element types [`Literal`] can hold (`f32` and `i32` here).
+pub trait NativeType: sealed::Sealed + Copy + 'static {
+    const TYPE: PrimitiveType;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TYPE: PrimitiveType = PrimitiveType::F32;
+
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TYPE: PrimitiveType = PrimitiveType::S32;
+
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host literal: dims + typed data (row-major), or a tuple of literals.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: Data::Tuple(parts) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} incompatible with {} elements",
+                self.element_count())));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => PrimitiveType::F32,
+            Data::I32(_) => PrimitiveType::S32,
+            Data::Tuple(_) => {
+                return Err(Error::new("array_shape of a tuple literal"))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error::new("literal element type mismatch in to_vec")
+        })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error::new("to_tuple on a non-tuple literal")),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT surface: compiles, errors at runtime (no libxla in this image).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+#[derive(Debug, Clone)]
+pub struct PjRtDevice;
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn addressable_devices(&self) -> Vec<PjRtDevice> {
+        vec![PjRtDevice]
+    }
+
+    pub fn buffer_from_host_literal(&self, _device: Option<&PjRtDevice>,
+                                    _lit: &Literal) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        PjRtClient
+    }
+
+    pub fn execute_b(&self, _inputs: &[&PjRtBuffer])
+                     -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = Literal::vec1(&[1f32, 2., 3., 4.]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4.]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(5i32);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![5]);
+        let t = Literal::tuple(vec![s.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_stubbed() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
