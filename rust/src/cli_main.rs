@@ -7,7 +7,8 @@ use std::rc::Rc;
 use crate::config::{Config, MethodKind};
 use crate::eval::{ablation, build_engine, infinitebench, latency,
                   open_registry, perplexity};
-use crate::methods::{HeadPlan, PatternStrategy, Probes};
+use crate::methods::{HeadPlan, NoState, PatternState, PatternStrategy,
+                     Probes};
 use crate::serving::{Engine, ServerBuilder};
 use crate::substrate::cli::Args;
 use crate::util::ascii::{heatmap, mask_map};
@@ -24,7 +25,8 @@ SUBCOMMANDS
             (chunked prefill + continuous batching; per-request TTFT)
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
-            [--chunk-layers N] [--admit-retries N]
+            [--chunk-layers N] [--max-concurrent-prefills N]
+            [--admit-retries N]
   eval      Table 1: InfiniteBench-sim suite
             [--model M] [--methods a,b,..] [--samples N] [--ctx L]
   ablate    Table 2: ablations [--model M] [--samples N] [--ctx L]
@@ -88,8 +90,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         .model(&model)
         .spawn();
     println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
-              ({} layer(s)/prefill chunk)",
-             cfg.method.kind.name(), cfg.serve.chunk_layers);
+              ({} layer(s)/prefill chunk, {} concurrent prefill(s))",
+             cfg.method.kind.name(), cfg.serve.chunk_layers,
+             cfg.serve.max_concurrent_prefills);
     let sessions: Vec<_> = (0..n)
         .map(|_| handle.submit(tasks::latency_prompt(ctx),
                                cfg.serve.decode_tokens))
@@ -170,7 +173,13 @@ fn cmd_latency(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 /// Strategy that runs every head dense and collects the full abar maps —
-/// the calibration path for `cluster` and `patterns`.
+/// the calibration path for `cluster` and `patterns`.  Collection is an
+/// engine-wide side channel, deliberately *not* per-request pattern
+/// state: calibration runs one prompt at a time through the serial
+/// `Engine::prefill` path (`collect_head_maps` owns the buffer
+/// lifecycle), and maps from concurrent prefills would interleave —
+/// never drive a `DenseCollector` engine through the multi-prefill
+/// scheduler.
 pub struct DenseCollector {
     pub maps: Rc<RefCell<Vec<Vec<f32>>>>,
 }
@@ -180,22 +189,24 @@ impl PatternStrategy for DenseCollector {
         MethodKind::Flash
     }
 
-    fn begin_request(&mut self, _seq: usize) {
-        self.maps.borrow_mut().clear();
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        Box::new(NoState)
     }
 
-    fn plan_layer(&mut self, _l: usize, _s: usize, h: usize,
-                  _p: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+    fn plan_layer(&self, _state: &mut dyn PatternState, _l: usize,
+                  _s: usize, h: usize, _p: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
         Ok((0..h).map(|_| HeadPlan::dense(true)).collect())
     }
 
-    fn publish_abar(&mut self, _layer: usize, _head: usize, _nb: usize,
-                    abar: &[f32]) {
+    fn publish_abar(&self, _state: &mut dyn PatternState, _layer: usize,
+                    _head: usize, _nb: usize, abar: &[f32]) {
         self.maps.borrow_mut().push(abar.to_vec());
     }
 }
 
-/// Collect each head's dense block-average map on one prompt.
+/// Collect each head's dense block-average map on one prompt (serial
+/// prefill; owns the collector's buffer lifecycle).
 pub fn collect_head_maps(registry: &Rc<crate::runtime::Registry>,
                          model: &str, prompt: &[i32])
                          -> Result<(Vec<Vec<f32>>, usize)> {

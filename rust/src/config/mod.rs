@@ -96,6 +96,11 @@ pub struct ServeConfig {
     /// Layers advanced per prefill chunk (1 = finest interleaving of
     /// decode steps between chunks; `num_layers` = monolithic prefill).
     pub chunk_layers: usize,
+    /// Prefills the scheduler interleaves concurrently (pattern state is
+    /// per-request, so any value is sound).  1 = the old strictly-serial
+    /// prefill pipeline; the default 2 lets a short prompt overtake a
+    /// long prefill (shortest-remaining-work-first fairness).
+    pub max_concurrent_prefills: usize,
     /// Rounds a KV-starved request waits at the head of the queue before
     /// it is rejected (bounded re-queueing; clients never hang).
     pub admit_retries: usize,
@@ -110,6 +115,7 @@ impl Default for ServeConfig {
             decode_tokens: 8,
             kv_blocks: 1024,
             chunk_layers: 1,
+            max_concurrent_prefills: 2,
             admit_retries: 4,
         }
     }
@@ -172,6 +178,9 @@ impl Config {
             t.usize_or("serve.kv_blocks", self.serve.kv_blocks);
         self.serve.chunk_layers =
             t.usize_or("serve.chunk_layers", self.serve.chunk_layers);
+        self.serve.max_concurrent_prefills =
+            t.usize_or("serve.max_concurrent_prefills",
+                       self.serve.max_concurrent_prefills);
         self.serve.admit_retries =
             t.usize_or("serve.admit_retries", self.serve.admit_retries);
         if let Some(v) = t.get("paths.artifacts") {
@@ -200,6 +209,9 @@ impl Config {
             args.usize_or("max-batch-tokens", self.serve.max_batch_tokens)?;
         self.serve.chunk_layers =
             args.usize_or("chunk-layers", self.serve.chunk_layers)?;
+        self.serve.max_concurrent_prefills =
+            args.usize_or("max-concurrent-prefills",
+                          self.serve.max_concurrent_prefills)?;
         self.serve.admit_retries =
             args.usize_or("admit-retries", self.serve.admit_retries)?;
         Ok(())
@@ -218,6 +230,7 @@ mod tests {
         assert!((c.method.delta - 0.3).abs() < 1e-12);
         assert!((c.method.gamma - 0.65).abs() < 1e-6);
         assert_eq!(c.serve.chunk_layers, 1);
+        assert_eq!(c.serve.max_concurrent_prefills, 2);
         assert_eq!(c.serve.admit_retries, 4);
     }
 
@@ -225,13 +238,25 @@ mod tests {
     fn toml_overrides() {
         let t = tomlmini::parse(
             "[method]\nkind = \"flexprefill\"\ntau = 0.5\n\
-             [serve]\ndecode_tokens = 3\nchunk_layers = 2\n").unwrap();
+             [serve]\ndecode_tokens = 3\nchunk_layers = 2\n\
+             max_concurrent_prefills = 4\n").unwrap();
         let mut c = Config::default();
         c.apply_toml(&t).unwrap();
         assert_eq!(c.method.kind, MethodKind::FlexPrefill);
         assert!((c.method.tau - 0.5).abs() < 1e-12);
         assert_eq!(c.serve.decode_tokens, 3);
         assert_eq!(c.serve.chunk_layers, 2);
+        assert_eq!(c.serve.max_concurrent_prefills, 4);
+    }
+
+    #[test]
+    fn cli_max_concurrent_prefills() {
+        let args = Args::parse(
+            ["x", "--max-concurrent-prefills", "1"]
+                .map(String::from), &[]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.max_concurrent_prefills, 1);
     }
 
     #[test]

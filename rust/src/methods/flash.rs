@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::config::MethodKind;
 
-use super::{HeadPlan, PatternStrategy, Probes};
+use super::{HeadPlan, NoState, PatternState, PatternStrategy, Probes};
 
 #[derive(Default)]
 pub struct Flash;
@@ -22,10 +22,13 @@ impl PatternStrategy for Flash {
         MethodKind::Flash
     }
 
-    fn begin_request(&mut self, _seq: usize) {}
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        Box::new(NoState)
+    }
 
-    fn plan_layer(&mut self, _layer: usize, _seq: usize, num_heads: usize,
-                  _probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+    fn plan_layer(&self, _state: &mut dyn PatternState, _layer: usize,
+                  _seq: usize, num_heads: usize, _probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
         Ok((0..num_heads).map(|_| HeadPlan::dense(false)).collect())
     }
 }
@@ -37,9 +40,10 @@ mod tests {
 
     #[test]
     fn all_heads_dense_no_probes() {
-        let mut f = Flash::new();
-        f.begin_request(1024);
-        let plans = f.plan_layer(0, 1024, 8, &mut NoProbes).unwrap();
+        let f = Flash::new();
+        let mut st = f.begin_request(1024);
+        let plans = f.plan_layer(st.as_mut(), 0, 1024, 8, &mut NoProbes)
+            .unwrap();
         assert_eq!(plans.len(), 8);
         assert!(plans.iter().all(|p| p.mask.is_none() && !p.publish));
     }

@@ -19,7 +19,8 @@ use crate::config::MethodKind;
 use crate::util::math::{cumulative_select, js_distance};
 use crate::BLOCK_SIZE;
 
-use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+use super::{HeadPlan, NoState, PatternLabel, PatternState,
+            PatternStrategy, Probes};
 
 pub struct FlexPrefill {
     gamma: f32,
@@ -71,10 +72,15 @@ impl PatternStrategy for FlexPrefill {
         MethodKind::FlexPrefill
     }
 
-    fn begin_request(&mut self, _seq: usize) {}
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        // patterns are re-estimated per layer from the pooled probes;
+        // nothing carries across layers or requests
+        Box::new(NoState)
+    }
 
-    fn plan_layer(&mut self, _layer: usize, seq: usize, num_heads: usize,
-                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+    fn plan_layer(&self, _state: &mut dyn PatternState, _layer: usize,
+                  seq: usize, num_heads: usize, probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
         let nb = seq / BLOCK_SIZE;
         let flex = probes.flex_map()?.clone();
         let amap = probes.vslash_map()?;
@@ -135,8 +141,10 @@ mod tests {
         let seq = 4 * BLOCK_SIZE;
         // structured probes where pooled estimate == truth
         let mut probes = FakeProbes::consistent(3, seq);
-        let mut f = FlexPrefill::new(0.9, 0.5);
-        let plans = f.plan_layer(0, seq, 3, &mut probes).unwrap();
+        let f = FlexPrefill::new(0.9, 0.5);
+        let mut st = f.begin_request(seq);
+        let plans = f.plan_layer(st.as_mut(), 0, seq, 3, &mut probes)
+            .unwrap();
         assert!(plans.iter().any(|p| p.label == PatternLabel::QueryAware));
     }
 
@@ -145,8 +153,10 @@ mod tests {
         let seq = 4 * BLOCK_SIZE;
         // probes where pooled map disagrees with the true map
         let mut probes = FakeProbes::inconsistent(2, seq);
-        let mut f = FlexPrefill::new(0.9, 0.05);
-        let plans = f.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let f = FlexPrefill::new(0.9, 0.05);
+        let mut st = f.begin_request(seq);
+        let plans = f.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
     }
 
@@ -154,8 +164,10 @@ mod tests {
     fn masks_are_causal_with_diagonal() {
         let seq = 4 * BLOCK_SIZE;
         let mut probes = FakeProbes::consistent(2, seq);
-        let mut f = FlexPrefill::new(0.9, 0.9);
-        for p in f.plan_layer(0, seq, 2, &mut probes).unwrap() {
+        let f = FlexPrefill::new(0.9, 0.9);
+        let mut st = f.begin_request(seq);
+        for p in f.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap() {
             let m = p.mask.unwrap();
             for i in 0..m.nb {
                 assert!(m.contains(i, i));

@@ -10,7 +10,8 @@ use crate::attention::search_vslash;
 use crate::config::MethodKind;
 use crate::BLOCK_SIZE;
 
-use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+use super::{HeadPlan, NoState, PatternLabel, PatternState,
+            PatternStrategy, Probes};
 
 pub struct MInference {
     gamma: f32,
@@ -18,18 +19,18 @@ pub struct MInference {
     /// (`shareprefill calibrate-minference`), mirroring MInference's
     /// offline per-head config search.
     pub per_head_gamma: Option<Vec<f32>>,
-    num_heads: usize,
 }
 
 impl MInference {
     pub fn new(gamma: f32) -> MInference {
-        MInference { gamma, per_head_gamma: None, num_heads: 0 }
+        MInference { gamma, per_head_gamma: None }
     }
 
-    fn head_gamma(&self, layer: usize, head: usize) -> f32 {
+    fn head_gamma(&self, layer: usize, head: usize, num_heads: usize)
+                  -> f32 {
         match &self.per_head_gamma {
             Some(v) => {
-                let idx = layer * self.num_heads + head;
+                let idx = layer * num_heads + head;
                 v.get(idx).copied().unwrap_or(self.gamma)
             }
             None => self.gamma,
@@ -42,18 +43,22 @@ impl PatternStrategy for MInference {
         MethodKind::MInference
     }
 
-    fn begin_request(&mut self, _seq: usize) {}
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        // indices are re-searched per layer from the probes; nothing
+        // carries across layers, so requests share the no-op state
+        Box::new(NoState)
+    }
 
-    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
-                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
-        self.num_heads = num_heads;
+    fn plan_layer(&self, _state: &mut dyn PatternState, layer: usize,
+                  seq: usize, num_heads: usize, probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
         let amap = probes.vslash_map()?;
         let bs = BLOCK_SIZE;
         let mut plans = Vec::with_capacity(num_heads);
         for h in 0..num_heads {
             let head_map = amap.index_axis0(h)?;
             let mask = search_vslash(head_map.as_f32()?, bs, seq,
-                                     self.head_gamma(layer, h));
+                                     self.head_gamma(layer, h, num_heads));
             plans.push(HeadPlan::sparse(mask, PatternLabel::VSlash));
         }
         Ok(plans)
@@ -69,9 +74,10 @@ mod tests {
     fn every_head_vslash() {
         let seq = 4 * BLOCK_SIZE;
         let mut probes = FakeProbes::structured(2, seq);
-        let mut m = MInference::new(0.9);
-        m.begin_request(seq);
-        let plans = m.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let m = MInference::new(0.9);
+        let mut st = m.begin_request(seq);
+        let plans = m.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert_eq!(plans.len(), 2);
         for p in &plans {
             assert_eq!(p.label, PatternLabel::VSlash);
@@ -87,7 +93,9 @@ mod tests {
         let mut probes = FakeProbes::structured(2, seq);
         let mut m = MInference::new(0.9);
         m.per_head_gamma = Some(vec![0.5, 0.99]);
-        let plans = m.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let mut st = m.begin_request(seq);
+        let plans = m.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         let c0 = plans[0].mask.as_ref().unwrap().count();
         let c1 = plans[1].mask.as_ref().unwrap().count();
         assert!(c0 <= c1, "lower γ must not select more blocks ({c0} vs {c1})");

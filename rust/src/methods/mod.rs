@@ -8,6 +8,11 @@
 //! call.  SharePrefill additionally receives the full block-averaged QK
 //! map of heads that ran dense (via [`PatternStrategy::publish_abar`]) to
 //! construct pivotal patterns (Alg. 2).
+//!
+//! Strategies are *stateless planners*: everything a request mutates
+//! (SharePrefill's evolving pivotal dictionary) lives in a
+//! [`PatternState`] value minted per request, carried by the prefill
+//! task, so concurrent prefills never share or clobber pattern state.
 
 pub mod flash;
 pub mod flexprefill;
@@ -15,6 +20,7 @@ pub mod minference;
 pub mod shareprefill;
 
 use anyhow::Result;
+use std::any::Any;
 
 use crate::attention::BlockMask;
 use crate::config::{MethodConfig, MethodKind};
@@ -23,7 +29,7 @@ use crate::runtime::Tensor;
 pub use flash::Flash;
 pub use flexprefill::FlexPrefill;
 pub use minference::MInference;
-pub use shareprefill::SharePrefill;
+pub use shareprefill::{SharePrefill, SharePrefillState};
 
 /// Label of the pattern a head ended up with (drives Figure 6 and the
 /// pattern-distribution metrics).
@@ -83,21 +89,69 @@ pub trait Probes {
     fn flex_map(&mut self) -> Result<&Tensor>;
 }
 
-/// A pattern strategy (one per method).
+/// Per-request mutable pattern state.  Minted by
+/// [`PatternStrategy::begin_request`], owned by the request's
+/// `PrefillTask`, and dropped with it — so any number of prefills can
+/// be in flight on one engine, and the state of a half-done prefill is
+/// a *value* a future multi-engine router can hand around.
+///
+/// Strategies downcast to their concrete type with [`state_mut`] /
+/// [`state_ref`]; stateless strategies share [`NoState`].
+pub trait PatternState: Any {
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// The shared no-op state for strategies with no per-request memory.
+pub struct NoState;
+
+impl PatternState for NoState {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// Downcast a request's pattern state to a strategy's concrete type.
+/// Panics on mismatch — a task can only ever be driven by the strategy
+/// that began it, so a mismatch is a caller bug, not a runtime input.
+pub fn state_mut<T: PatternState>(state: &mut dyn PatternState) -> &mut T {
+    state.as_any_mut().downcast_mut::<T>()
+        .expect("pattern state downcast: task begun by a different strategy")
+}
+
+/// Shared-reference counterpart of [`state_mut`].
+pub fn state_ref<T: PatternState>(state: &dyn PatternState) -> &T {
+    state.as_any().downcast_ref::<T>()
+        .expect("pattern state downcast: task begun by a different strategy")
+}
+
+/// A pattern strategy (one per method): a *stateless planner*.  All
+/// per-request mutable state (SharePrefill's evolving pivotal
+/// dictionary) lives in the [`PatternState`] value minted by
+/// [`PatternStrategy::begin_request`] and carried by the request's
+/// prefill task, so chunks of any number of concurrent prefills may
+/// interleave on one engine without crosstalk.
 pub trait PatternStrategy {
     fn kind(&self) -> MethodKind;
 
-    /// Reset per-request state (pattern dictionaries are input-dependent).
-    fn begin_request(&mut self, seq: usize);
+    /// Mint fresh per-request state (pattern dictionaries are
+    /// input-dependent; one state per prefill, dropped with its task).
+    fn begin_request(&self, seq: usize) -> Box<dyn PatternState>;
 
-    /// Decide a plan per query head for this layer.
-    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
-                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>>;
+    /// Decide a plan per query head for this layer of the request that
+    /// owns `state`.
+    fn plan_layer(&self, state: &mut dyn PatternState, layer: usize,
+                  seq: usize, num_heads: usize, probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>>;
 
     /// Receive the full `[NB, NB]` block-averaged QK map of a head whose
-    /// plan had `publish = true` (ran dense). Default: ignore.
-    fn publish_abar(&mut self, _layer: usize, _head: usize, _nb: usize,
-                    _abar: &[f32]) {
+    /// plan had `publish = true` (ran dense), into the owning request's
+    /// state. Default: ignore.
+    fn publish_abar(&self, _state: &mut dyn PatternState, _layer: usize,
+                    _head: usize, _nb: usize, _abar: &[f32]) {
     }
 }
 

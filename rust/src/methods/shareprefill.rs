@@ -12,18 +12,26 @@
 //!    block-averaged QK map Ã, *Construct Pivotal Pattern* (Alg. 2)
 //!    publishes (ã, M) into the evolving per-request dictionary.
 //!
+//! The strategy itself is a stateless planner (τ, δ, γ, the offline
+//! cluster table); the evolving pivotal dictionary is *request* state,
+//! held in [`SharePrefillState`] — one per in-flight prefill, so chunks
+//! of concurrent prompts can interleave without sharing patterns across
+//! requests (patterns are input-dependent, Section 4).
+//!
 //! Ablations (Table 2): `tau <= 0` disables sharing entirely (no dense
 //! bootstrap either — pure vertical-slash); `delta > 1` disables the
 //! highly-sparse-head exclusion.
 
 use anyhow::Result;
+use std::any::Any;
 
 use crate::attention::{construct_pivotal, decide_pattern, search_vslash,
                        Decision, PivotalDict};
 use crate::config::MethodKind;
 use crate::BLOCK_SIZE;
 
-use super::{HeadPlan, PatternLabel, PatternStrategy, Probes};
+use super::{state_mut, HeadPlan, PatternLabel, PatternState,
+            PatternStrategy, Probes};
 
 pub struct SharePrefill {
     tau: f64,
@@ -32,10 +40,23 @@ pub struct SharePrefill {
     num_heads: usize,
     /// (layer * num_heads + head) → cluster id (None = noise).
     clusters: Vec<Option<usize>>,
-    /// Evolving per-request pivotal dictionary (cluster → (ã, M)).
+}
+
+/// Per-request pattern state: the evolving pivotal dictionary plus the
+/// request's decision statistics (Figure 6).
+pub struct SharePrefillState {
+    /// Evolving pivotal dictionary (cluster → (ã, M)) for one request.
     dict: PivotalDict,
-    /// Decision statistics for the current request (Figure 6).
     pub stats: DecisionStats,
+}
+
+impl PatternState for SharePrefillState {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
 }
 
 /// Counts of pattern kinds chosen during a request.
@@ -60,15 +81,7 @@ impl SharePrefill {
         });
         assert_eq!(clusters.len(), num_layers * num_heads,
                    "cluster table must cover every (layer, head)");
-        SharePrefill {
-            tau,
-            delta,
-            gamma,
-            num_heads,
-            clusters,
-            dict: PivotalDict::new(),
-            stats: DecisionStats::default(),
-        }
+        SharePrefill { tau, delta, gamma, num_heads, clusters }
     }
 
     fn cluster_of(&self, layer: usize, head: usize) -> Option<usize> {
@@ -81,16 +94,20 @@ impl PatternStrategy for SharePrefill {
         MethodKind::SharePrefill
     }
 
-    fn begin_request(&mut self, _seq: usize) {
-        // Patterns are input-dependent: the dictionary evolves within one
-        // prefill and resets across requests.
-        self.dict.clear();
-        self.stats = DecisionStats::default();
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        // Patterns are input-dependent: each request evolves its own
+        // dictionary from scratch, independent of concurrent prefills.
+        Box::new(SharePrefillState {
+            dict: PivotalDict::new(),
+            stats: DecisionStats::default(),
+        })
     }
 
-    fn plan_layer(&mut self, layer: usize, seq: usize, num_heads: usize,
-                  probes: &mut dyn Probes) -> Result<Vec<HeadPlan>> {
+    fn plan_layer(&self, state: &mut dyn PatternState, layer: usize,
+                  seq: usize, num_heads: usize, probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
         debug_assert_eq!(num_heads, self.num_heads);
+        let st = state_mut::<SharePrefillState>(state);
         let ahat_t = probes.ahat()?.clone();
         let nb = seq / BLOCK_SIZE;
         let mut plans = Vec::with_capacity(num_heads);
@@ -104,16 +121,16 @@ impl PatternStrategy for SharePrefill {
             } else {
                 self.cluster_of(layer, h)
             };
-            let info = decide_pattern(ahat, cluster, &self.dict, self.delta,
+            let info = decide_pattern(ahat, cluster, &st.dict, self.delta,
                                       self.tau);
             match info.decision {
                 Decision::Dense => {
-                    self.stats.dense += 1;
+                    st.stats.dense += 1;
                     plans.push(HeadPlan::dense(true));
                 }
                 Decision::SharedPivot => {
-                    self.stats.shared += 1;
-                    let entry = &self.dict[&info.cluster.unwrap()];
+                    st.stats.shared += 1;
+                    let entry = &st.dict[&info.cluster.unwrap()];
                     plans.push(HeadPlan {
                         mask: Some(entry.mask.clone()),
                         label: PatternLabel::Shared,
@@ -121,7 +138,7 @@ impl PatternStrategy for SharePrefill {
                     });
                 }
                 Decision::VSlash => {
-                    self.stats.vslash += 1;
+                    st.stats.vslash += 1;
                     let amap_t = probes.vslash_map()?.index_axis0(h)?;
                     let mask = search_vslash(amap_t.as_f32()?, BLOCK_SIZE,
                                              seq, self.gamma);
@@ -134,12 +151,13 @@ impl PatternStrategy for SharePrefill {
         Ok(plans)
     }
 
-    fn publish_abar(&mut self, layer: usize, head: usize, nb: usize,
-                    abar: &[f32]) {
+    fn publish_abar(&self, state: &mut dyn PatternState, layer: usize,
+                    head: usize, nb: usize, abar: &[f32]) {
         if let Some(c) = self.cluster_of(layer, head) {
+            let st = state_mut::<SharePrefillState>(state);
             let entry = construct_pivotal(abar, nb, self.gamma,
                                           (layer, head));
-            self.dict.insert(c, entry);
+            st.dict.insert(c, entry);
         }
     }
 }
@@ -148,6 +166,7 @@ impl PatternStrategy for SharePrefill {
 mod tests {
     use super::*;
     use crate::methods::tests_support::FakeProbes;
+    use crate::methods::state_ref;
     use crate::util::math::NEG_INF;
 
     fn uniform_abar(nb: usize) -> Vec<f32> {
@@ -160,58 +179,138 @@ mod tests {
         m
     }
 
+    fn stats_of(state: &dyn PatternState) -> &DecisionStats {
+        &state_ref::<SharePrefillState>(state).stats
+    }
+
     #[test]
     fn first_head_dense_then_shared() {
         let seq = 4 * BLOCK_SIZE;
         let nb = 4;
         // two heads, same cluster, flat probes (similar + not sparse)
         let clusters = vec![Some(0), Some(0)];
-        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2, Some(clusters));
-        sp.begin_request(seq);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2, Some(clusters));
+        let mut st = sp.begin_request(seq);
         let mut probes = FakeProbes::flat(2, seq);
-        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert!(plans[0].mask.is_none() && plans[0].publish,
                 "first head must bootstrap dense");
         // publish the dense head's map, re-plan: second head shares
-        sp.publish_abar(0, 0, nb, &uniform_abar(nb));
-        let plans2 = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        sp.publish_abar(st.as_mut(), 0, 0, nb, &uniform_abar(nb));
+        let plans2 = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert_eq!(plans2[1].label, PatternLabel::Shared);
-        assert!(sp.stats.shared >= 1);
+        assert!(stats_of(st.as_ref()).shared >= 1);
     }
 
     #[test]
     fn noise_cluster_uses_vslash() {
         let seq = 4 * BLOCK_SIZE;
-        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
-                                       Some(vec![None, None]));
-        sp.begin_request(seq);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
+                                   Some(vec![None, None]));
+        let mut st = sp.begin_request(seq);
         let mut probes = FakeProbes::flat(2, seq);
-        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
     }
 
     #[test]
     fn tau_zero_is_pure_vslash() {
         let seq = 4 * BLOCK_SIZE;
-        let mut sp = SharePrefill::new(0.0, 0.3, 0.9, 1, 2,
-                                       Some(vec![Some(0), Some(0)]));
-        sp.begin_request(seq);
+        let sp = SharePrefill::new(0.0, 0.3, 0.9, 1, 2,
+                                   Some(vec![Some(0), Some(0)]));
+        let mut st = sp.begin_request(seq);
         let mut probes = FakeProbes::flat(2, seq);
-        let plans = sp.plan_layer(0, seq, 2, &mut probes).unwrap();
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
         assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
-        assert_eq!(sp.stats.dense, 0);
+        assert_eq!(stats_of(st.as_ref()).dense, 0);
     }
 
     #[test]
-    fn dict_resets_between_requests() {
+    fn each_request_gets_fresh_independent_state() {
         let seq = 4 * BLOCK_SIZE;
-        let mut sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 1,
-                                       Some(vec![Some(0)]));
-        sp.begin_request(seq);
-        sp.publish_abar(0, 0, 4, &uniform_abar(4));
-        assert!(!sp.dict.is_empty());
-        sp.begin_request(seq);
-        assert!(sp.dict.is_empty());
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 1,
+                                   Some(vec![Some(0)]));
+        let mut s1 = sp.begin_request(seq);
+        sp.publish_abar(s1.as_mut(), 0, 0, 4, &uniform_abar(4));
+        assert!(!state_ref::<SharePrefillState>(s1.as_ref())
+            .dict.is_empty());
+        // a second request starts empty…
+        let s2 = sp.begin_request(seq);
+        assert!(state_ref::<SharePrefillState>(s2.as_ref())
+            .dict.is_empty());
+        // …and the first keeps its dictionary: states are independent
+        assert!(!state_ref::<SharePrefillState>(s1.as_ref())
+            .dict.is_empty());
+    }
+
+    /// Advance one request through all layers, optionally interleaving a
+    /// second request (its own probes + state) between our layers; dense
+    /// heads publish a uniform abar so sharing kicks in.
+    fn plan_request(
+        sp: &SharePrefill, seq: usize, layers: usize, nb: usize,
+        probes: &mut FakeProbes,
+        mut other: Option<(&mut FakeProbes, &mut dyn PatternState)>,
+    ) -> Vec<(usize, PatternLabel, Option<crate::attention::BlockMask>)> {
+        let mut st = sp.begin_request(seq);
+        let mut out = Vec::new();
+        for layer in 0..layers {
+            let plans = sp.plan_layer(st.as_mut(), layer, seq, 2, probes)
+                .unwrap();
+            for (h, p) in plans.iter().enumerate() {
+                if p.publish {
+                    sp.publish_abar(st.as_mut(), layer, h, nb,
+                                    &uniform_abar(nb));
+                }
+                out.push((layer, p.label, p.mask.clone()));
+            }
+            // advance the *other* request between our layers
+            if let Some((op, ost)) = other.as_mut() {
+                let oplans = sp.plan_layer(&mut **ost, layer, seq, 2,
+                                           &mut **op).unwrap();
+                for (h, p) in oplans.iter().enumerate() {
+                    if p.publish {
+                        sp.publish_abar(&mut **ost, layer, h, nb,
+                                        &uniform_abar(nb));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The tentpole property at the strategy level: two requests planned
+    /// with interleaved `plan_layer`/`publish_abar` calls produce exactly
+    /// the plans each would get planned serially.
+    #[test]
+    fn interleaved_requests_match_serial_plans() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let layers = 2;
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, layers, 2,
+                                   Some(vec![Some(0); 4]));
+
+        // one request plans over flat probes, the other over structured
+        // ones — different inputs, so leaked state would change plans
+        let mut flat = FakeProbes::flat(2, seq);
+        let serial = plan_request(&sp, seq, layers, nb, &mut flat, None);
+
+        let mut flat2 = FakeProbes::flat(2, seq);
+        let mut structured = FakeProbes::structured(2, seq);
+        let mut other_state = sp.begin_request(seq);
+        let interleaved = plan_request(
+            &sp, seq, layers, nb, &mut flat2,
+            Some((&mut structured, other_state.as_mut())));
+
+        assert_eq!(serial.len(), interleaved.len());
+        for (a, b) in serial.iter().zip(interleaved.iter()) {
+            assert_eq!(a.0, b.0, "layer mismatch");
+            assert_eq!(a.1, b.1, "label changed under interleaving");
+            assert_eq!(a.2, b.2, "mask changed under interleaving");
+        }
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!
 //! Prefill is *resumable*: [`EngineCore::begin_prefill`] returns a
 //! [`PrefillTask`] that [`EngineCore::prefill_chunk`] advances layer-chunk
-//! by layer-chunk, so the scheduler can interleave decode steps of other
-//! sessions between chunks of a long prompt (continuous batching).  The
+//! by layer-chunk, so the scheduler can interleave decode steps — and
+//! prefill chunks of *other prompts* — between chunks of a long prompt
+//! (continuous batching).  The
 //! one-shot [`Engine::prefill`] is a thin wrapper that drains the task in
 //! a single chunk — both paths execute the identical per-layer body
 //! ([`Engine::prefill_layer`]), so chunked and monolithic prefill are
@@ -20,10 +21,14 @@
 //! token per call (dense attention via the fused decode artifact — all
 //! baselines share this phase, as in the paper).
 //!
-//! At most one prefill may be in flight per engine: strategies keep
-//! per-request state (SharePrefill's evolving pivotal dictionary), reset
-//! by `begin_request`.  Decode sessions carry no strategy state and may
-//! interleave freely.
+//! Any number of prefills may be in flight per engine: strategies are
+//! stateless planners, and each [`PrefillTask`] owns its request's
+//! [`PatternState`] (SharePrefill's evolving pivotal dictionary), minted
+//! by `begin_request` and dropped with the task.  Chunks of concurrent
+//! prompts interleave without crosstalk; decode sessions carry no
+//! strategy state at all.
+//!
+//! [`PatternState`]: crate::methods::PatternState
 
 use anyhow::{bail, Result};
 use std::rc::Rc;
@@ -31,7 +36,8 @@ use std::rc::Rc;
 use crate::attention::pivotal::scatter_abar;
 use crate::attention::BlockMask;
 use crate::config::{MethodConfig, MethodKind};
-use crate::methods::{build_strategy, PatternLabel, PatternStrategy, Probes};
+use crate::methods::{build_strategy, PatternLabel, PatternState,
+                     PatternStrategy, Probes};
 use crate::model::Stages;
 use crate::runtime::{Registry, Tensor};
 use crate::util::timer::{StageProfiler, Timer};
@@ -93,6 +99,10 @@ pub struct PrefillTask {
     kv: Vec<(Tensor, Tensor)>,
     stats: PrefillStats,
     prof: StageProfiler,
+    /// This request's pattern state (SharePrefill's pivotal dictionary
+    /// et al.) — request-scoped, so tasks of concurrent prompts can
+    /// interleave on one engine without sharing patterns.
+    pattern: Box<dyn PatternState>,
 }
 
 impl PrefillTask {
@@ -153,7 +163,9 @@ pub trait EngineCore {
     /// Transformer depth (drives KV admission and chunk accounting).
     fn layers_total(&self) -> usize;
 
-    /// Start a prefill (strategy per-request state is reset here).
+    /// Start a prefill.  The returned task owns all of its request's
+    /// state (including the strategy's pattern state), so any number of
+    /// tasks may be live and advanced in any interleaving.
     fn begin_prefill(&mut self, tokens: &[i32]) -> Result<Self::Prefill>;
 
     /// Advance up to `max_layers` layers; true when the stack is done.
@@ -254,7 +266,8 @@ impl Engine {
                 vslash: None,
                 flex: None,
             };
-            self.strategy.plan_layer(layer, seq, h, &mut probes)?
+            self.strategy.plan_layer(&mut *t.pattern, layer, seq, h,
+                                     &mut probes)?
         };
         debug_assert_eq!(plans.len(), h);
 
@@ -292,7 +305,8 @@ impl Engine {
                 let full = scatter_abar(
                     abar.as_f32()?, idx.as_i32()?, valid.as_f32()?, nb,
                     budget);
-                self.strategy.publish_abar(layer, head, nb, &full);
+                self.strategy.publish_abar(&mut *t.pattern, layer, head,
+                                           nb, &full);
             }
         }
         let attn_t = Tensor::f32(vec![h, seq, spec.head_dim], attn_out);
@@ -422,7 +436,7 @@ impl EngineCore for Engine {
         padded.resize(seq, PAD_TOKEN);
         let mut stats = PrefillStats::default();
         let mut prof = StageProfiler::new();
-        self.strategy.begin_request(seq);
+        let pattern = self.strategy.begin_request(seq);
         let x = self.stages.embed(&padded, seq, &mut prof)?;
         stats.latency_us = timer.elapsed_us();
         Ok(PrefillTask {
@@ -434,6 +448,7 @@ impl EngineCore for Engine {
             kv: Vec::with_capacity(spec.num_layers),
             stats,
             prof,
+            pattern,
         })
     }
 

@@ -1,6 +1,7 @@
 //! Serving metrics: request latency histograms (TTFT, prefill, decode,
-//! queueing), throughput counters and pattern-distribution aggregation
-//! across requests.
+//! queueing), throughput counters, per-round budget occupancy (where do
+//! the round's tokens actually go — decode, prefill, or idle?) and
+//! pattern-distribution aggregation across requests.
 
 use crate::util::stats::{Histogram, Summary};
 
@@ -22,6 +23,16 @@ pub struct Metrics {
     pub shared_heads: u64,
     pub vslash_heads: u64,
     pub query_aware_heads: u64,
+    /// Scheduling rounds that had (or could have had) work.
+    pub rounds: u64,
+    /// Round-budget tokens spent on decode steps (1 per token).
+    pub decode_budget_tokens: u64,
+    /// Tokens spent on prefill chunks, budgeted + the round-end
+    /// budget-exempt chunk (so this may exceed `rounds × budget`).
+    pub prefill_budget_tokens: u64,
+    /// Round-budget tokens left unspent by budgeted work (exempt-chunk
+    /// overshoot never masks unused budget).
+    pub idle_budget_tokens: u64,
 }
 
 impl Metrics {
@@ -38,6 +49,34 @@ impl Metrics {
         self.query_aware_heads += stats.query_aware as u64;
     }
 
+    /// Account one scheduling round's budget spend: `decode` tokens on
+    /// decode steps, `prefill` tokens on budgeted prefill chunks, and
+    /// `exempt` tokens on the round-end budget-exempt chunk.  Idle is
+    /// what the *budget* left unspent — the exempt chunk runs outside
+    /// the budget, so it counts as prefill work but cannot mask budget
+    /// tokens that genuinely went unused.
+    pub fn record_round(&mut self, decode: usize, prefill: usize,
+                        exempt: usize, budget: usize) {
+        self.rounds += 1;
+        self.decode_budget_tokens += decode as u64;
+        self.prefill_budget_tokens += (prefill + exempt) as u64;
+        self.idle_budget_tokens +=
+            budget.saturating_sub(decode + prefill) as u64;
+    }
+
+    /// Budget occupancy fractions `(decode, prefill, idle)` across all
+    /// recorded rounds; zeros before any round ran.
+    pub fn occupancy(&self) -> (f64, f64, f64) {
+        let total = (self.decode_budget_tokens + self.prefill_budget_tokens
+                     + self.idle_budget_tokens) as f64;
+        if total == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (self.decode_budget_tokens as f64 / total,
+         self.prefill_budget_tokens as f64 / total,
+         self.idle_budget_tokens as f64 / total)
+    }
+
     /// Tokens per second over the lifetime prompt tokens.
     pub fn prefill_throughput(&self) -> f64 {
         let total_us: f64 =
@@ -50,6 +89,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let (occ_d, occ_p, occ_i) = self.occupancy();
         format!(
             "requests: {} done, {} rejected, {} cancelled\n\
              tokens: {} prompt, {} generated\n\
@@ -59,6 +99,8 @@ impl Metrics {
              queue:   mean {:.2} ms\n\
              density: mean {:.3} (computed/causal blocks)\n\
              patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
+             rounds:  {} (budget occupancy: {:.0}% decode, {:.0}% \
+             prefill, {:.0}% idle)\n\
              prefill throughput: {:.0} tok/s",
             self.requests_completed, self.requests_rejected,
             self.requests_cancelled,
@@ -74,6 +116,7 @@ impl Metrics {
             self.density.mean(),
             self.dense_heads, self.shared_heads, self.vslash_heads,
             self.query_aware_heads,
+            self.rounds, occ_d * 100.0, occ_p * 100.0, occ_i * 100.0,
             self.prefill_throughput(),
         )
     }
@@ -99,7 +142,25 @@ mod tests {
         let r = m.report();
         assert!(r.contains("shared 3"));
         assert!(r.contains("ttft"));
+        assert!(r.contains("budget occupancy"));
         assert!(m.prefill_throughput() > 0.0);
         assert!((m.density.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_occupancy_accounting() {
+        let mut m = Metrics::new();
+        assert_eq!(m.occupancy(), (0.0, 0.0, 0.0));
+        m.record_round(4, 2, 0, 8); // 2 idle
+        // exempt-only round: the 10-token chunk ran outside the budget,
+        // so all 8 budget tokens were genuinely idle
+        m.record_round(0, 0, 10, 8);
+        assert_eq!(m.rounds, 2);
+        assert_eq!(m.decode_budget_tokens, 4);
+        assert_eq!(m.prefill_budget_tokens, 12);
+        assert_eq!(m.idle_budget_tokens, 10);
+        let (d, p, i) = m.occupancy();
+        assert!((d + p + i - 1.0).abs() < 1e-12);
+        assert!((d - 4.0 / 26.0).abs() < 1e-12);
     }
 }

@@ -19,4 +19,5 @@ pub use engine::{DecodeSession, Engine, EngineBuilder, EngineCore,
 pub use request::{Request, RequestId, Response};
 pub use scheduler::Scheduler;
 pub use server::{ServerBuilder, ServerHandle};
-pub use session::{Event, EventSink, SessionHandle, SessionState};
+pub use session::{Event, EventSink, RejectReason, SessionHandle,
+                  SessionState};

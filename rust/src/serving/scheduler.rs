@@ -3,23 +3,43 @@
 //! Each [`Scheduler::run_round`] spends a shared token budget
 //! (`serve.max_batch_tokens`) across the live sessions: every decoding
 //! session advances one token per pass (a decode step costs 1 budget
-//! token) and the single active prefill advances one layer-chunk (a
-//! chunk costs its share of the prompt's tokens, `ceil(prompt / chunks)`)
-//! — so a 32K prompt no longer stalls every decode in flight; decode
-//! steps run *between* its prefill chunks.
+//! token) and up to `serve.max_concurrent_prefills` live prefills each
+//! advance one layer-chunk per pass (a chunk costs its share of the
+//! prompt's tokens, `ceil(prompt / chunks)`) — so a 32K prompt stalls
+//! neither the decodes in flight nor the short prompts queued behind it.
 //!
-//! At most one prefill is in flight at a time because pattern strategies
-//! keep per-request state (SharePrefill's pivotal dictionary, reset by
-//! `begin_request`); decode sessions carry no strategy state and batch
-//! freely.  The active prefill is guaranteed at least one chunk per
-//! round even when the budget is smaller than its chunk cost (no
-//! head-of-line starvation), mirroring the batcher's oversized-head rule.
+//! Multiple prefills can interleave because pattern strategies are
+//! stateless planners: each `PrefillTask` owns its request's
+//! [`PatternState`] (SharePrefill's pivotal dictionary), so chunks of
+//! different prompts never share or clobber pattern state.
+//!
+//! **Fairness policy: shortest-remaining-work first.**  Within each
+//! round's budgeted prefill pass, live prefills run in ascending order
+//! of remaining budget cost (chunks left × per-chunk cost, ties by
+//! submission id), so a freshly admitted short prompt overtakes a long
+//! prompt mid-prefill and its TTFT stops paying for the 100k-token
+//! request ahead of it.  A chunk that exceeds the *remaining* budget
+//! never runs in that pass; instead, at round end one *budget-exempt*
+//! chunk goes to the longest-starved prefill that got no budgeted
+//! chunk.  This keeps a mega-chunk from crowding out everyone else's
+//! within-budget work, prevents deterministic starvation (e.g. two
+//! equal-cost chunks under a budget that fits only one — the SRF
+//! tie-break would otherwise skip the same prompt every round), and
+//! bounds any prefill's wait to (live skipped prefills − 1) rounds.
+//! The cost: a round's prefill spend may overshoot `max_batch_tokens`
+//! by at most that one chunk.  With `max_concurrent_prefills = 1` this
+//! reproduces the old "active prefill always gets ≥ 1 chunk per round"
+//! rule chunk-for-chunk (decode steps now additionally use budget the
+//! old code discarded when the chunk overshot the round).
 //!
 //! Admission is KV-first: a session needs its whole-lifetime block count
 //! up front (vLLM-style).  When the allocator is exhausted the head of
 //! the queue *waits* and retries next round (bounded by
 //! `serve.admit_retries`); only after the retry budget is spent does it
-//! get a terminal `Rejected` event — clients never hang.
+//! get a terminal `Rejected` event — clients never hang, and the
+//! [`RejectReason`] tells them whether the condition was transient.
+//!
+//! [`PatternState`]: crate::methods::PatternState
 
 use anyhow::Result;
 
@@ -30,7 +50,7 @@ use super::engine::{EngineCore, PrefillStats};
 use super::kvcache::{BlockId, KvAllocator};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
-use super::session::{Event, EventSink, SessionState};
+use super::session::{Event, EventSink, RejectReason, SessionState};
 
 /// One in-flight request: the immutable submission, its event stream,
 /// its KV reservation, and whichever engine state its phase carries.
@@ -46,6 +66,9 @@ struct Session<E: EngineCore> {
     queue_us: u64,
     ttft_us: Option<u64>,
     emitted: usize,
+    /// Rounds since this prefill last advanced a chunk (starvation
+    /// counter feeding the budget-exempt chunk grant).
+    rounds_starved: u64,
 }
 
 impl<E: EngineCore> BatchItem for Session<E> {
@@ -56,7 +79,7 @@ impl<E: EngineCore> BatchItem for Session<E> {
 
 pub struct Scheduler<E: EngineCore> {
     queue: Batcher<Session<E>>,
-    prefilling: Option<Session<E>>,
+    prefilling: Vec<Session<E>>,
     decoding: Vec<Session<E>>,
     pub kv: KvAllocator,
     pub metrics: Metrics,
@@ -64,6 +87,7 @@ pub struct Scheduler<E: EngineCore> {
     chunk_layers: usize,
     round_budget: usize,
     max_active: usize,
+    max_prefills: usize,
     admit_retries: usize,
 }
 
@@ -73,7 +97,7 @@ impl<E: EngineCore> Scheduler<E> {
             queue: Batcher::new(cfg.max_batch_tokens,
                                 cfg.max_batch_requests,
                                 cfg.queue_capacity),
-            prefilling: None,
+            prefilling: Vec::new(),
             decoding: Vec::new(),
             kv: KvAllocator::new(cfg.kv_blocks),
             metrics: Metrics::new(),
@@ -81,6 +105,7 @@ impl<E: EngineCore> Scheduler<E> {
             chunk_layers: cfg.chunk_layers.max(1),
             round_budget: cfg.max_batch_tokens.max(1),
             max_active: cfg.max_batch_requests.max(1),
+            max_prefills: cfg.max_concurrent_prefills.max(1),
             admit_retries: cfg.admit_retries,
         }
     }
@@ -100,6 +125,7 @@ impl<E: EngineCore> Scheduler<E> {
             queue_us: 0,
             ttft_us: None,
             emitted: 0,
+            rounds_starved: 0,
         };
         match self.queue.push(s) {
             Ok(()) => true,
@@ -107,7 +133,7 @@ impl<E: EngineCore> Scheduler<E> {
                 self.metrics.requests_rejected += 1;
                 s.sink.send(Event::Rejected {
                     id: s.req.id,
-                    reason: "queue full".to_string(),
+                    reason: RejectReason::QueueFull,
                 });
                 false
             }
@@ -121,11 +147,16 @@ impl<E: EngineCore> Scheduler<E> {
 
     /// Admitted sessions currently prefilling or decoding.
     pub fn active(&self) -> usize {
-        self.decoding.len() + usize::from(self.prefilling.is_some())
+        self.decoding.len() + self.prefilling.len()
+    }
+
+    /// Prefills currently in flight (≤ `serve.max_concurrent_prefills`).
+    pub fn prefills_in_flight(&self) -> usize {
+        self.prefilling.len()
     }
 
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || self.prefilling.is_some()
+        !self.queue.is_empty() || !self.prefilling.is_empty()
             || !self.decoding.is_empty()
     }
 
@@ -136,8 +167,8 @@ impl<E: EngineCore> Scheduler<E> {
             self.cancel_session(s);
             return true;
         }
-        if self.prefilling.as_ref().map_or(false, |s| s.req.id == id) {
-            let s = self.prefilling.take().unwrap();
+        if let Some(i) = self.prefilling.iter().position(|s| s.req.id == id) {
+            let s = self.prefilling.swap_remove(i);
             self.cancel_session(s);
             return true;
         }
@@ -156,14 +187,11 @@ impl<E: EngineCore> Scheduler<E> {
         s.sink.send(Event::Cancelled { id: s.req.id });
     }
 
-    fn reject(&mut self, mut s: Session<E>, reason: &str) {
+    fn reject(&mut self, mut s: Session<E>, reason: RejectReason) {
         self.release_blocks(&mut s);
         s.state = SessionState::Rejected;
         self.metrics.requests_rejected += 1;
-        s.sink.send(Event::Rejected {
-            id: s.req.id,
-            reason: reason.to_string(),
-        });
+        s.sink.send(Event::Rejected { id: s.req.id, reason });
     }
 
     fn release_blocks(&mut self, s: &mut Session<E>) {
@@ -192,9 +220,7 @@ impl<E: EngineCore> Scheduler<E> {
         while let Some(s) = self.queue.pop_front() {
             all.push(s);
         }
-        if let Some(s) = self.prefilling.take() {
-            all.push(s);
-        }
+        all.append(&mut self.prefilling);
         all.append(&mut self.decoding);
         for mut s in all {
             self.release_blocks(&mut s);
@@ -205,17 +231,17 @@ impl<E: EngineCore> Scheduler<E> {
         }
     }
 
-    /// Try to start the next queued prefill(s).  `count_retry` marks the
-    /// once-per-round admission attempt that burns a KV retry.
+    /// Fill free prefill slots from the queue head (FIFO).  `count_retry`
+    /// marks the once-per-round admission attempt that burns a KV retry.
     fn admit(&mut self, engine: &mut E, count_retry: bool) -> Result<()> {
-        while self.prefilling.is_none() {
+        while self.prefilling.len() < self.max_prefills {
             if self.active() >= self.max_active {
                 return Ok(());
             }
             let Some(front) = self.queue.front() else { return Ok(()) };
             if front.req.prompt_len() == 0 {
                 let s = self.queue.pop_front().unwrap();
-                self.reject(s, "empty prompt");
+                self.reject(s, RejectReason::EmptyPrompt);
                 continue;
             }
             let need = KvAllocator::blocks_needed(
@@ -227,9 +253,10 @@ impl<E: EngineCore> Scheduler<E> {
                     f.admit_attempts += 1;
                     if f.admit_attempts > self.admit_retries {
                         let s = self.queue.pop_front().unwrap();
-                        self.reject(s, &format!(
-                            "kv cache exhausted: {need} blocks unavailable \
-                             after {} rounds", self.admit_retries));
+                        self.reject(s, RejectReason::KvExhausted {
+                            blocks_needed: need,
+                            retries: self.admit_retries,
+                        });
                         continue; // the next queued session may be smaller
                     }
                 }
@@ -242,12 +269,14 @@ impl<E: EngineCore> Scheduler<E> {
                     s.queue_us = s.req.arrived.elapsed().as_micros() as u64;
                     s.state = SessionState::Prefilling;
                     s.prefill = Some(task);
-                    self.prefilling = Some(s);
+                    self.prefilling.push(s);
                 }
                 Err(e) => {
                     // per-request failure (e.g. prompt exceeds the max
                     // seq bucket) must not take the server down
-                    self.reject(s, &format!("{e:#}"));
+                    self.reject(s, RejectReason::EngineRefused {
+                        message: format!("{e:#}"),
+                    });
                 }
             }
         }
@@ -262,12 +291,76 @@ impl<E: EngineCore> Scheduler<E> {
         s.req.prompt_len().div_ceil(chunks.max(1)).max(1)
     }
 
+    /// Remaining budget cost of a live prefill — the shortest-remaining-
+    /// work sort key: chunks left × per-chunk cost.
+    fn remaining_cost(&self, engine: &E, s: &Session<E>) -> usize {
+        let (done, total) = engine.prefill_progress(
+            s.prefill.as_ref().expect("prefilling session has a task"));
+        let chunks_left =
+            total.saturating_sub(done).div_ceil(self.chunk_layers);
+        chunks_left * self.chunk_cost(engine, s)
+    }
+
+    /// Advance one chunk of the live prefill at `self.prefilling[i]`:
+    /// run the engine, emit `PrefillProgress`, and on completion move
+    /// the session to decoding and refill the freed prefill slot.
+    /// Engine errors must not drop the session on the floor — its KV
+    /// blocks and terminal event would leak (`fail_all` can't see a
+    /// taken session) — so the failing session is failed here before
+    /// the error propagates.
+    fn advance_prefill(&mut self, engine: &mut E, i: usize) -> Result<()> {
+        let id = self.prefilling[i].req.id;
+        let step = engine.prefill_chunk(
+            self.prefilling[i].prefill.as_mut().unwrap(),
+            self.chunk_layers);
+        let done = match step {
+            Ok(d) => d,
+            Err(e) => {
+                let s = self.prefilling.swap_remove(i);
+                self.fail_session(s, &format!("{e:#}"));
+                return Err(e);
+            }
+        };
+        let s = &mut self.prefilling[i];
+        let (ld, lt) = engine.prefill_progress(s.prefill.as_ref().unwrap());
+        s.sink.send(Event::PrefillProgress {
+            id,
+            layers_done: ld,
+            layers_total: lt,
+        });
+        if done {
+            let mut s = self.prefilling.swap_remove(i);
+            let task = s.prefill.take().unwrap();
+            let max_new = s.req.max_new_tokens
+                .min(self.decode_tokens.max(1));
+            let (dec, stats) = match engine.start_decode(task, max_new) {
+                Ok(x) => x,
+                Err(e) => {
+                    self.fail_session(s, &format!("{e:#}"));
+                    return Err(e);
+                }
+            };
+            self.metrics.record_prefill(&stats);
+            self.metrics.prompt_tokens += s.req.prompt_len() as u64;
+            s.sink.send(Event::PrefillDone { id, stats: stats.clone() });
+            s.stats = Some(stats);
+            s.state = SessionState::Decoding;
+            s.decode = Some(dec);
+            self.decoding.push(s);
+            // a prefill slot freed: pull in the next queued prompt
+            self.admit(engine, false)?;
+        }
+        Ok(())
+    }
+
     /// Run one scheduling round. Returns sessions completed this round.
     pub fn run_round(&mut self, engine: &mut E) -> Result<Vec<Response>> {
         let mut completed = Vec::new();
         self.admit(engine, true)?;
+        let track_round = self.has_work();
         let mut budget = self.round_budget;
-        let mut prefill_ran = false;
+        let (mut spent_decode, mut spent_prefill) = (0usize, 0usize);
+        let mut ran_ids: Vec<RequestId> = Vec::new();
         loop {
             let mut progressed = false;
 
@@ -281,6 +374,7 @@ impl<E: EngineCore> Scheduler<E> {
                 match engine.decode_step(s.decode.as_mut().unwrap())? {
                     Some(tok) => {
                         budget -= 1;
+                        spent_decode += 1;
                         if s.ttft_us.is_none() {
                             s.ttft_us = Some(
                                 s.req.arrived.elapsed().as_micros() as u64);
@@ -301,70 +395,66 @@ impl<E: EngineCore> Scheduler<E> {
                 }
             }
 
-            // One prefill chunk.  The active prefill always gets at
-            // least one chunk per round, even over budget (no
-            // starvation under a small budget).
-            if let Some(mut s) = self.prefilling.take() {
-                let cost = self.chunk_cost(engine, &s);
-                if budget >= cost || !prefill_ran {
-                    budget = budget.saturating_sub(cost);
-                    prefill_ran = true;
-                    progressed = true;
-                    // engine errors here must not drop the taken session
-                    // on the floor: its KV blocks and terminal event
-                    // would leak with it (fail_all can't see it)
-                    let step = engine.prefill_chunk(
-                        s.prefill.as_mut().unwrap(), self.chunk_layers);
-                    let done = match step {
-                        Ok(d) => d,
-                        Err(e) => {
-                            self.fail_session(s, &format!("{e:#}"));
-                            return Err(e);
-                        }
-                    };
-                    let task = s.prefill.as_mut().unwrap();
-                    let (ld, lt) = engine.prefill_progress(task);
-                    s.sink.send(Event::PrefillProgress {
-                        id: s.req.id,
-                        layers_done: ld,
-                        layers_total: lt,
-                    });
-                    if done {
-                        let task = s.prefill.take().unwrap();
-                        let max_new = s.req.max_new_tokens
-                            .min(self.decode_tokens.max(1));
-                        let (dec, stats) =
-                            match engine.start_decode(task, max_new) {
-                                Ok(x) => x,
-                                Err(e) => {
-                                    self.fail_session(s, &format!("{e:#}"));
-                                    return Err(e);
-                                }
-                            };
-                        self.metrics.record_prefill(&stats);
-                        self.metrics.prompt_tokens +=
-                            s.req.prompt_len() as u64;
-                        s.sink.send(Event::PrefillDone {
-                            id: s.req.id,
-                            stats: stats.clone(),
-                        });
-                        s.stats = Some(stats);
-                        s.state = SessionState::Decoding;
-                        s.decode = Some(dec);
-                        self.decoding.push(s);
-                        // the engine is free: pull in the next prefill
-                        self.admit(engine, false)?;
-                    } else {
-                        self.prefilling = Some(s);
-                    }
-                } else {
-                    self.prefilling = Some(s);
+            // Budgeted prefill pass: one chunk per live prefill whose
+            // chunk fits the remaining budget, shortest-remaining-work
+            // first.  Over-budget prompts wait for the round-end exempt
+            // grant so a mega-chunk cannot crowd out everyone else's
+            // within-budget chunks and decode steps.
+            let mut order: Vec<(usize, RequestId)> = self.prefilling.iter()
+                .map(|s| (self.remaining_cost(engine, s), s.req.id))
+                .collect();
+            order.sort_unstable();
+            for (_, id) in order {
+                let Some(i) = self.prefilling.iter()
+                    .position(|s| s.req.id == id) else { continue };
+                let cost = self.chunk_cost(engine, &self.prefilling[i]);
+                if budget < cost {
+                    continue; // over budget: round-end grant at best
                 }
+                budget -= cost;
+                spent_prefill += cost;
+                progressed = true;
+                if !ran_ids.contains(&id) {
+                    ran_ids.push(id);
+                }
+                self.advance_prefill(engine, i)?;
             }
 
             if !progressed || budget == 0 {
                 break;
             }
+        }
+        // One budget-exempt chunk per round for the longest-starved
+        // prefill that got no budgeted chunk — its chunk exceeded what
+        // was left of the budget (ties → earliest submission).  Running
+        // it after the budgeted work keeps a big chunk from crowding
+        // out everyone else's within-budget work, and the
+        // `rounds_starved` rotation bounds any skipped prefill's wait
+        // to (live skipped prefills − 1) rounds; the round's prefill
+        // spend may overshoot the budget by at most this one chunk.
+        // With max_concurrent_prefills = 1 this reproduces the old
+        // guaranteed-chunk rule chunk-for-chunk.
+        let mut spent_exempt = 0usize;
+        let exempt = self.prefilling.iter().enumerate()
+            .filter(|(_, s)| !ran_ids.contains(&s.req.id))
+            .max_by_key(|(_, s)| (s.rounds_starved,
+                                  std::cmp::Reverse(s.req.id)))
+            .map(|(i, s)| (i, s.req.id));
+        if let Some((i, id)) = exempt {
+            spent_exempt = self.chunk_cost(engine, &self.prefilling[i]);
+            ran_ids.push(id);
+            self.advance_prefill(engine, i)?;
+        }
+        for s in &mut self.prefilling {
+            if ran_ids.contains(&s.req.id) {
+                s.rounds_starved = 0;
+            } else {
+                s.rounds_starved += 1;
+            }
+        }
+        if track_round {
+            self.metrics.record_round(spent_decode, spent_prefill,
+                                      spent_exempt, self.round_budget);
         }
         Ok(completed)
     }
@@ -455,5 +545,24 @@ mod tests {
         let cfg = ServeConfig::default();
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
         assert!(!sched.cancel(99));
+    }
+
+    #[test]
+    fn round_occupancy_is_recorded() {
+        let cfg = ServeConfig::default();
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        sched.submit(Request::new(0, vec![7; 64], 2), EventSink::null());
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert!(sched.metrics.rounds > 0);
+        let spent = sched.metrics.decode_budget_tokens
+            + sched.metrics.prefill_budget_tokens;
+        assert!(spent > 0, "budget spend must be accounted");
+        // idle rounds with no work at all are not recorded
+        let rounds_before = sched.metrics.rounds;
+        sched.run_round(&mut engine).unwrap();
+        assert_eq!(sched.metrics.rounds, rounds_before);
     }
 }

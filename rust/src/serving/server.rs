@@ -178,6 +178,13 @@ impl ServerBuilder {
         self
     }
 
+    /// Prefills the scheduler interleaves concurrently (1 = the old
+    /// strictly-serial prefill pipeline).
+    pub fn max_concurrent_prefills(mut self, n: usize) -> ServerBuilder {
+        self.config.serve.max_concurrent_prefills = n.max(1);
+        self
+    }
+
     /// Decode-step cap per request.
     pub fn decode_tokens(mut self, n: usize) -> ServerBuilder {
         self.config.serve.decode_tokens = n;

@@ -9,6 +9,7 @@
 //! never hang waiting on a dropped request.
 
 use anyhow::{bail, Result};
+use std::fmt;
 use std::sync::mpsc;
 
 use super::engine::PrefillStats;
@@ -23,6 +24,59 @@ pub enum SessionState {
     Done,
     Cancelled,
     Rejected,
+}
+
+/// Why a session was refused admission (carried by the terminal
+/// `Rejected` event).  Structured so clients can tell a transient
+/// capacity condition (KV starvation under load — retry later) from a
+/// request that can never succeed (empty/oversized prompt — fix it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission queue at capacity.
+    QueueFull,
+    /// Zero-token prompt: nothing to prefill or condition on.
+    EmptyPrompt,
+    /// The KV allocator could not reserve the request's whole-lifetime
+    /// block count within the bounded re-queue budget.
+    KvExhausted { blocks_needed: usize, retries: usize },
+    /// The engine refused the prompt at `begin_prefill` (e.g. it
+    /// exceeds the largest compiled seq bucket).
+    EngineRefused { message: String },
+}
+
+impl RejectReason {
+    /// Stable machine-readable tag (log/metric friendly).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue-full",
+            RejectReason::EmptyPrompt => "empty-prompt",
+            RejectReason::KvExhausted { .. } => "kv-exhausted",
+            RejectReason::EngineRefused { .. } => "engine-refused",
+        }
+    }
+
+    /// Transient conditions clear on their own; resubmitting the same
+    /// request later may succeed.
+    pub fn is_transient(&self) -> bool {
+        matches!(self,
+                 RejectReason::QueueFull | RejectReason::KvExhausted { .. })
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full"),
+            RejectReason::EmptyPrompt => write!(f, "empty prompt"),
+            RejectReason::KvExhausted { blocks_needed, retries } => {
+                write!(f, "kv cache exhausted: {blocks_needed} blocks \
+                           unavailable after {retries} rounds")
+            }
+            RejectReason::EngineRefused { message } => {
+                write!(f, "{message}")
+            }
+        }
+    }
 }
 
 /// Streamed per-request event.
@@ -42,9 +96,9 @@ pub enum Event {
     Done { id: RequestId, response: Response },
     /// Terminal: cancelled by the client.
     Cancelled { id: RequestId },
-    /// Terminal: admission refused (queue full, KV exhausted after
-    /// bounded retries, empty/oversized prompt).
-    Rejected { id: RequestId, reason: String },
+    /// Terminal: admission refused; `reason` says why (queue full, KV
+    /// exhausted after bounded retries, empty/oversized prompt).
+    Rejected { id: RequestId, reason: RejectReason },
     /// Terminal: the engine failed while serving this session.
     Error { id: RequestId, message: String },
 }
@@ -198,9 +252,21 @@ mod tests {
     fn wait_surfaces_rejection() {
         let (sink, rx) = EventSink::channel();
         let h = SessionHandle { id: 4, events: rx };
-        sink.send(Event::Rejected { id: 4, reason: "queue full".into() });
+        sink.send(Event::Rejected { id: 4, reason: RejectReason::QueueFull });
         let e = h.wait().unwrap_err();
         assert!(format!("{e}").contains("rejected"));
+        assert!(format!("{e}").contains("queue full"));
+    }
+
+    #[test]
+    fn reject_reason_kinds_are_distinct() {
+        let kv = RejectReason::KvExhausted { blocks_needed: 4, retries: 3 };
+        assert_eq!(kv.kind(), "kv-exhausted");
+        assert!(kv.is_transient());
+        assert_eq!(RejectReason::EmptyPrompt.kind(), "empty-prompt");
+        assert!(!RejectReason::EmptyPrompt.is_transient());
+        assert_ne!(kv.kind(), RejectReason::EmptyPrompt.kind());
+        assert!(format!("{kv}").contains("4 blocks"));
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub struct SimEngine {
     /// Prompts longer than this fail `begin_prefill`, mimicking the real
     /// engine's "exceeds max seq bucket" rejection path.
     max_prompt: usize,
+    /// Simulated compute: busy-wait this many nanoseconds per prompt
+    /// token per layer inside `prefill_chunk` (0 = instant).  Lets the
+    /// coordinator benches measure realistic wall-clock TTFT ordering
+    /// (e.g. short prompts overtaking a long prefill) without artifacts.
+    ns_per_token_layer: u64,
 }
 
 pub struct SimPrefill {
@@ -36,11 +41,21 @@ pub struct SimDecode {
 
 impl SimEngine {
     pub fn new(layers: usize) -> SimEngine {
-        SimEngine { layers: layers.max(1), max_prompt: usize::MAX }
+        SimEngine {
+            layers: layers.max(1),
+            max_prompt: usize::MAX,
+            ns_per_token_layer: 0,
+        }
     }
 
     pub fn with_max_prompt(mut self, max_prompt: usize) -> SimEngine {
         self.max_prompt = max_prompt;
+        self
+    }
+
+    /// Attach simulated prefill compute (ns per prompt token per layer).
+    pub fn with_work(mut self, ns_per_token_layer: u64) -> SimEngine {
+        self.ns_per_token_layer = ns_per_token_layer;
         self
     }
 }
@@ -67,8 +82,18 @@ impl EngineCore for SimEngine {
 
     fn prefill_chunk(&mut self, t: &mut SimPrefill, max_layers: usize)
                      -> Result<bool> {
+        let before = t.layers_done;
         t.layers_done =
             (t.layers_done + max_layers.max(1)).min(t.layers_total);
+        if self.ns_per_token_layer > 0 {
+            let advanced = (t.layers_done - before) as u64;
+            let ns = advanced * t.prompt_len as u64
+                * self.ns_per_token_layer;
+            let t0 = std::time::Instant::now();
+            while (t0.elapsed().as_nanos() as u64) < ns {
+                std::hint::spin_loop();
+            }
+        }
         Ok(t.layers_done >= t.layers_total)
     }
 
@@ -139,5 +164,16 @@ mod tests {
     fn oversized_prompt_fails_begin() {
         let mut e = SimEngine::new(2).with_max_prompt(4);
         assert!(e.begin_prefill(&[0; 8]).is_err());
+    }
+
+    #[test]
+    fn simulated_work_takes_proportional_time() {
+        let mut e = SimEngine::new(2).with_work(1_000); // 1µs/token/layer
+        let mut t = e.begin_prefill(&[1; 100]).unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(!e.prefill_chunk(&mut t, 1).unwrap());
+        // 1 layer × 100 tokens × 1µs = 100µs minimum
+        assert!(t0.elapsed().as_micros() >= 100);
+        assert!(e.prefill_chunk(&mut t, 1).unwrap());
     }
 }

@@ -163,6 +163,60 @@ fn chunked_prefill_matches_monolithic_bitwise() {
 }
 
 #[test]
+fn interleaved_multi_prefill_matches_serial_bitwise() {
+    // The tentpole property of per-request pattern state: two prompts
+    // prefilled with their layer-chunks interleaved on ONE engine (as
+    // the multi-prefill scheduler now does) yield hidden states, KV and
+    // block accounting bit-identical to prefilling each serially.
+    let Some(reg) = registry() else { return };
+    let cfg = Config::default();
+    let mut engine = build_engine(&reg, &cfg, "sim-llama",
+                                  MethodKind::SharePrefill).unwrap();
+    let prompt_a = latency_prompt(300);
+    let prompt_b = sample(Task::EnDia, 5, 200).prompt;
+
+    let serial_a = engine.prefill(&prompt_a).unwrap();
+    let serial_b = engine.prefill(&prompt_b).unwrap();
+
+    let mut ta = engine.begin_prefill(&prompt_a).unwrap();
+    let mut tb = engine.begin_prefill(&prompt_b).unwrap();
+    loop {
+        let da = engine.prefill_chunk(&mut ta, 1).unwrap();
+        let db = engine.prefill_chunk(&mut tb, 1).unwrap();
+        if da && db {
+            break;
+        }
+    }
+    let inter_a = engine.finish_prefill(ta).unwrap();
+    let inter_b = engine.finish_prefill(tb).unwrap();
+
+    for (name, serial, inter) in [("a", &serial_a, &inter_a),
+                                  ("b", &serial_b, &inter_b)] {
+        assert_eq!(serial.seq, inter.seq);
+        assert_eq!(serial.real_len, inter.real_len);
+        assert_eq!(serial.hidden.as_f32().unwrap(),
+                   inter.hidden.as_f32().unwrap(),
+                   "prompt {name}: interleaved prefill diverged from \
+                    serial hidden states");
+        assert_eq!(serial.stats.blocks_computed,
+                   inter.stats.blocks_computed,
+                   "prompt {name}: block accounting diverged");
+        assert_eq!((serial.stats.dense, serial.stats.shared,
+                    serial.stats.vslash),
+                   (inter.stats.dense, inter.stats.shared,
+                    inter.stats.vslash),
+                   "prompt {name}: pattern decisions diverged");
+        for (l, ((sk, sv), (ik, iv))) in
+            serial.kv.iter().zip(inter.kv.iter()).enumerate() {
+            assert_eq!(sk.as_f32().unwrap(), ik.as_f32().unwrap(),
+                       "prompt {name} layer {l} K cache diverged");
+            assert_eq!(sv.as_f32().unwrap(), iv.as_f32().unwrap(),
+                       "prompt {name} layer {l} V cache diverged");
+        }
+    }
+}
+
+#[test]
 fn seq_bucket_padding_preserves_last_logits() {
     // A 200-token prompt runs at the 256 bucket; its last-position logits
     // must not depend on the padding (causality).

@@ -1,14 +1,18 @@
 //! Server/scheduler lifecycle tests over the artifact-free `SimEngine`:
 //! these run in CI with no compiled artifacts and pin down the session
-//! API's contracts — chunked prefill interleaves decode, KV-starved
-//! requests re-queue then reject with a terminal event, cancellation
-//! works mid-prefill, and shutdown drains every in-flight session.
+//! API's contracts — chunked prefill interleaves decode, concurrent
+//! prefills interleave chunks (and stay strictly serial at
+//! `max_concurrent_prefills = 1`), short prompts overtake long
+//! prefills, KV-starved requests re-queue then reject with a typed
+//! `RejectReason`, cancellation works mid-prefill (including with other
+//! prefills in flight), and shutdown drains every in-flight session —
+//! always exactly one terminal event per session.
 
 use shareprefill::config::ServeConfig;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::server;
 use shareprefill::serving::sim::SimEngine;
-use shareprefill::serving::{Event, EventSink, Request};
+use shareprefill::serving::{Event, EventSink, RejectReason, Request};
 
 fn drain<E: shareprefill::serving::EngineCore>(
     sched: &mut Scheduler<E>, engine: &mut E) {
@@ -85,6 +89,231 @@ fn decode_interleaves_between_prefill_chunks() {
         assert_eq!(done.generated.len(), want);
     }
     assert_eq!(sched.kv.used(), 0);
+}
+
+/// With `max_concurrent_prefills > 1`, chunks of two prompts interleave
+/// within one engine — the multi-prefill tentpole property at the
+/// scheduler level.
+#[test]
+fn concurrent_prefills_interleave_chunks() {
+    let cfg = ServeConfig {
+        max_batch_tokens: 8192,
+        chunk_layers: 1,
+        decode_tokens: 2,
+        max_concurrent_prefills: 2,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(6);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 640], 2), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![1; 640], 2), sink.clone()));
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let events: Vec<Event> = rx.iter().collect();
+
+    // chunk progress of request 1 lands before request 0 finishes its
+    // prefill (and vice versa): the prefills genuinely interleave
+    let done_0 = events.iter()
+        .position(|e| matches!(e, Event::PrefillDone { id: 0, .. }))
+        .expect("request 0 never finished prefill");
+    let progress_1_before = events[..done_0].iter()
+        .filter(|e| matches!(e, Event::PrefillProgress { id: 1, .. }))
+        .count();
+    assert!(progress_1_before >= 1,
+            "no chunk of request 1 ran during request 0's prefill");
+    for id in [0u64, 1] {
+        let terminals = events.iter()
+            .filter(|e| e.id() == id && e.is_terminal())
+            .count();
+        assert_eq!(terminals, 1, "request {id}: exactly one terminal");
+        assert!(events.iter().any(|e| matches!(
+            e, Event::Done { id: i, .. } if *i == id)));
+    }
+    assert_eq!(sched.kv.used(), 0);
+}
+
+/// Regression for the PR-2 contract: with `max_concurrent_prefills = 1`
+/// prefills stay strictly serial — no chunk of a later prompt runs
+/// before the earlier prompt's `PrefillDone`.
+#[test]
+fn single_prefill_mode_stays_serial() {
+    let cfg = ServeConfig {
+        max_batch_tokens: 8192,
+        chunk_layers: 1,
+        decode_tokens: 2,
+        max_concurrent_prefills: 1,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(6);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 640], 2), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![1; 640], 2), sink.clone()));
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let events: Vec<Event> = rx.iter().collect();
+    let done_0 = events.iter()
+        .position(|e| matches!(e, Event::PrefillDone { id: 0, .. }))
+        .expect("request 0 never finished prefill");
+    let progress_1_before = events[..done_0].iter()
+        .filter(|e| matches!(e, Event::PrefillProgress { id: 1, .. }))
+        .count();
+    assert_eq!(progress_1_before, 0,
+               "serial mode must not interleave prefills");
+    assert_eq!(sched.metrics.requests_completed, 2);
+    assert_eq!(sched.kv.used(), 0);
+}
+
+/// Shortest-remaining-work-first: a short prompt submitted *after* a
+/// long one finishes its prefill first when concurrency allows.
+#[test]
+fn short_prompt_overtakes_long_prefill() {
+    // budget fits the long prompt's exempt chunk (4096/8 = 512) plus all
+    // 8 of the short prompt's chunks (64/8 = 8 each) per round, so the
+    // short prompt finishes its whole prefill while the long one is on
+    // chunk 1 — the TTFT fairness win in one assert
+    let cfg = ServeConfig {
+        max_batch_tokens: 600,
+        chunk_layers: 1,
+        decode_tokens: 2,
+        max_concurrent_prefills: 2,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(8);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 4096], 2), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![1; 64], 2), sink.clone()));
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let events: Vec<Event> = rx.iter().collect();
+    let done_long = events.iter()
+        .position(|e| matches!(e, Event::PrefillDone { id: 0, .. }))
+        .unwrap();
+    let done_short = events.iter()
+        .position(|e| matches!(e, Event::PrefillDone { id: 1, .. }))
+        .unwrap();
+    assert!(done_short < done_long,
+            "short prompt must not wait out the long prefill");
+    assert_eq!(sched.metrics.requests_completed, 2);
+    assert_eq!(sched.kv.used(), 0);
+}
+
+/// The over-budget regime the fairness redesign targets: when the long
+/// prompt's chunk alone outweighs the whole round budget, short prompts
+/// still prefill at full speed inside the budget (the mega-chunk is
+/// deferred to the round-end exempt grant, not allowed to eat the
+/// round), and the long prompt still advances exactly one chunk per
+/// round — no starvation either way.
+#[test]
+fn short_prompts_progress_when_long_chunk_exceeds_budget() {
+    let cfg = ServeConfig {
+        max_batch_tokens: 400, // long chunk cost: 4096/8 = 512 > 400
+        chunk_layers: 1,
+        decode_tokens: 2,
+        max_concurrent_prefills: 2,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(8);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 4096], 2), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![1; 64], 2), sink.clone()));
+    sched.run_round(&mut engine).unwrap();
+    let round1: Vec<Event> = rx.try_iter().collect();
+    assert!(round1.iter().any(|e| matches!(e, Event::Done { id: 1, .. })),
+            "short prompt must complete within the first round; the \
+             long prompt's over-budget chunk must not eat the round");
+    let long_chunks = round1.iter()
+        .filter(|e| matches!(e, Event::PrefillProgress { id: 0, .. }))
+        .count();
+    assert_eq!(long_chunks, 1,
+               "long prompt advances exactly its one exempt chunk");
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let rest: Vec<Event> = rx.iter().collect();
+    assert!(rest.iter().any(|e| matches!(e, Event::Done { id: 0, .. })),
+            "long prompt must not starve");
+    assert_eq!(sched.metrics.requests_completed, 2);
+    assert_eq!(sched.kv.used(), 0);
+}
+
+/// Cancel one of two concurrent prefills mid-flight: its KV frees, the
+/// survivor completes, and every session ends in exactly one terminal
+/// event.
+#[test]
+fn cancel_one_concurrent_prefill_mid_flight() {
+    let cfg = ServeConfig {
+        max_batch_tokens: 1, // at most the exempt chunk per round
+        chunk_layers: 1,
+        decode_tokens: 2,
+        max_concurrent_prefills: 2,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(8);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 640], 2), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![1; 320], 2), sink.clone()));
+    // a few partial rounds: both prefills live, neither done
+    for _ in 0..4 {
+        sched.run_round(&mut engine).unwrap();
+    }
+    assert_eq!(sched.prefills_in_flight(), 2);
+    let kv_both = sched.kv.used();
+    assert!(kv_both > 0);
+    assert!(sched.cancel(0));
+    assert!(sched.kv.used() < kv_both,
+            "cancelling must free the cancelled prefill's KV");
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let events: Vec<Event> = rx.iter().collect();
+    for id in [0u64, 1] {
+        let terminals = events.iter()
+            .filter(|e| e.id() == id && e.is_terminal())
+            .count();
+        assert_eq!(terminals, 1, "request {id}: exactly one terminal");
+    }
+    assert!(events.iter().any(|e| matches!(e, Event::Cancelled { id: 0 })));
+    assert!(events.iter().any(|e| matches!(e, Event::Done { id: 1, .. })),
+            "survivor must still complete");
+    assert_eq!(sched.kv.used(), 0);
+    assert_eq!(sched.metrics.requests_cancelled, 1);
+    assert_eq!(sched.metrics.requests_completed, 1);
+}
+
+/// `Rejected` now says why: KV starvation after bounded retries and an
+/// empty prompt produce distinguishable `RejectReason`s.
+#[test]
+fn reject_reasons_distinguish_kv_from_empty() {
+    let cfg = ServeConfig {
+        kv_blocks: 2, // a 64-token, 4-layer request needs 4
+        decode_tokens: 0,
+        admit_retries: 3,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(4);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+    let (sink, rx) = EventSink::channel();
+    assert!(sched.submit(Request::new(0, vec![1; 64], 0), sink.clone()));
+    assert!(sched.submit(Request::new(1, vec![], 0), sink.clone()));
+    drain(&mut sched, &mut engine);
+    drop(sink);
+    let mut kinds = std::collections::HashMap::new();
+    for e in rx.iter() {
+        if let Event::Rejected { id, reason } = e {
+            kinds.insert(id, reason);
+        }
+    }
+    let kv = kinds.get(&0).expect("kv-starved request must be rejected");
+    assert_eq!(kv.kind(), "kv-exhausted");
+    assert!(kv.is_transient());
+    assert!(matches!(kv, RejectReason::KvExhausted {
+        blocks_needed: 4, retries: 3 }));
+    let empty = kinds.get(&1).expect("empty prompt must be rejected");
+    assert_eq!(empty.kind(), "empty-prompt");
+    assert!(!empty.is_transient());
 }
 
 /// KV-starved head of queue waits (bounded) and is admitted once blocks
