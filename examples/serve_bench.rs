@@ -5,7 +5,7 @@
 //! TTFT and throughput per method.  Results are recorded in
 //! EXPERIMENTS.md.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
 //! 1. **Per-method uniform stream** (needs `make artifacts`): the real
 //!    engine under concurrent equal-length prompts.
@@ -14,6 +14,11 @@
 //!    of short prompts, run at `max_concurrent_prefills` 1 vs 4 — the
 //!    per-class TTFT p50/p95 shows what interleaved multi-prefill buys
 //!    short prompts stuck behind a long one.
+//! 3. **Repeated workload, cross-request pattern cache** (artifact-free):
+//!    the same-length prompt stream served with the cache off vs on —
+//!    warm requests skip the pivotal bootstrap, so per-request prefill
+//!    cost drops after the first (cold) request and the metrics report
+//!    shows the cache hit rate.
 //!
 //!   cargo run --release --example serve_bench [requests] [ctx]
 
@@ -76,6 +81,59 @@ fn mixed_length_scenario(max_prefills: usize) {
     println!("{report}\n");
 }
 
+/// Repeated-workload cache scenario: one prompt length served
+/// `REPEATS` times, cache off vs on (SimEngine, simulated compute,
+/// serial prefills so every repeat after the first runs warm).
+fn pattern_cache_scenario() {
+    const TOKENS: usize = 2048;
+    const REPEATS: usize = 8;
+    const LAYERS: usize = 8;
+    const NS_PER_TOKEN_LAYER: u64 = 200;
+
+    let run = |cache_on: bool| {
+        let cfg = ServeConfig {
+            max_batch_tokens: 4096,
+            chunk_layers: 1,
+            decode_tokens: 2,
+            kv_blocks: 4096,
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        let handle = server::spawn(move || {
+            let engine = SimEngine::new(LAYERS)
+                .with_work(NS_PER_TOKEN_LAYER);
+            let engine = if cache_on {
+                engine.with_pattern_cache()
+            } else {
+                engine
+            };
+            Ok((Scheduler::new(&cfg), engine))
+        });
+        let mut prefill_ms = Vec::new();
+        for _ in 0..REPEATS {
+            // serial submits: each waits, so repeats always run warm
+            match handle.submit(vec![7; TOKENS], 2).wait() {
+                Ok(r) => prefill_ms.push(r.prefill_us as f64 / 1e3),
+                Err(e) => println!("request failed: {e:#}"),
+            }
+        }
+        (prefill_ms, handle.shutdown())
+    };
+
+    println!("== cross-request pattern cache, repeated workload \
+              ({TOKENS} tok x{REPEATS}) ==");
+    let (off, _) = run(false);
+    let (on, report) = run(true);
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    println!("cache off: prefill mean {:8.2} ms", mean(&off));
+    if on.len() > 1 {
+        let (cold, warm) = (on[0], mean(&on[1..]));
+        println!("cache on:  cold {cold:8.2} ms, warm mean {warm:8.2} ms \
+                  ({:.2}x faster warm)", cold / warm);
+    }
+    println!("{report}\n");
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
@@ -120,5 +178,9 @@ fn main() -> anyhow::Result<()> {
     // off (serial, PR-2 behavior) vs on
     mixed_length_scenario(1);
     mixed_length_scenario(4);
+
+    // the amortization headline: warm-cache prefill cost on a repeated
+    // workload vs the cold/cache-off baseline
+    pattern_cache_scenario();
     Ok(())
 }

@@ -26,7 +26,9 @@ SUBCOMMANDS
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
             [--chunk-layers N] [--max-concurrent-prefills N]
-            [--admit-retries N]
+            [--admit-retries N] [--pattern-cache]
+            [--pattern-cache-capacity N] [--pattern-cache-validation T]
+            [--pattern-cache-max-age N]
   eval      Table 1: InfiniteBench-sim suite
             [--model M] [--methods a,b,..] [--samples N] [--ctx L]
   ablate    Table 2: ablations [--model M] [--samples N] [--ctx L]
@@ -45,7 +47,7 @@ COMMON  --artifacts DIR   (default: artifacts)
 
 pub fn run_cli() -> Result<()> {
     let args = Args::from_env(&["help", "verbose", "similarity",
-                                "distribution"])?;
+                                "distribution", "pattern-cache"])?;
     if args.flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());
@@ -90,9 +92,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         .model(&model)
         .spawn();
     println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
-              ({} layer(s)/prefill chunk, {} concurrent prefill(s))",
+              ({} layer(s)/prefill chunk, {} concurrent prefill(s), \
+              pattern cache {})",
              cfg.method.kind.name(), cfg.serve.chunk_layers,
-             cfg.serve.max_concurrent_prefills);
+             cfg.serve.max_concurrent_prefills,
+             if cfg.serve.pattern_cache.enabled { "on" } else { "off" });
     let sessions: Vec<_> = (0..n)
         .map(|_| handle.submit(tasks::latency_prompt(ctx),
                                cfg.serve.decode_tokens))

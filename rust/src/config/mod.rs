@@ -80,6 +80,40 @@ impl Default for MethodConfig {
     }
 }
 
+/// Cross-request pattern cache knobs (`serve.pattern_cache` in TOML).
+///
+/// The cache reuses pivotal patterns observed on earlier requests
+/// (length-bucketed) so warm requests skip the dense pivotal bootstrap
+/// for heads whose cached pattern passes a cheap probe-recall
+/// validation.  Off by default: with `enabled = false` the serving
+/// stack is bit-identical to a cache-less build.
+#[derive(Debug, Clone)]
+pub struct PatternCacheConfig {
+    /// Master switch; false = never consult or populate the cache.
+    pub enabled: bool,
+    /// Max cached patterns across all length buckets (LRU eviction).
+    pub capacity: usize,
+    /// Probe-recall threshold a cached pattern must pass per head: the
+    /// fraction of the request's observed last-row attention mass the
+    /// cached mask covers.  Below it the head falls back to the exact
+    /// (dense bootstrap) path — a stale pattern is never used silently.
+    pub validation: f64,
+    /// Publishes an entry may survive without being refreshed before it
+    /// is treated as stale and dropped on lookup.
+    pub max_age: u64,
+}
+
+impl Default for PatternCacheConfig {
+    fn default() -> Self {
+        PatternCacheConfig {
+            enabled: false,
+            capacity: 256,
+            validation: 0.75,
+            max_age: 64,
+        }
+    }
+}
+
 /// Serving engine parameters.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -104,6 +138,8 @@ pub struct ServeConfig {
     /// Rounds a KV-starved request waits at the head of the queue before
     /// it is rejected (bounded re-queueing; clients never hang).
     pub admit_retries: usize,
+    /// Cross-request pivotal-pattern cache (SharePrefill only).
+    pub pattern_cache: PatternCacheConfig,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +153,7 @@ impl Default for ServeConfig {
             chunk_layers: 1,
             max_concurrent_prefills: 2,
             admit_retries: 4,
+            pattern_cache: PatternCacheConfig::default(),
         }
     }
 }
@@ -183,6 +220,15 @@ impl Config {
                        self.serve.max_concurrent_prefills);
         self.serve.admit_retries =
             t.usize_or("serve.admit_retries", self.serve.admit_retries);
+        let pc = &mut self.serve.pattern_cache;
+        pc.enabled = t.bool_or("serve.pattern_cache.enabled", pc.enabled);
+        pc.capacity =
+            t.usize_or("serve.pattern_cache.capacity", pc.capacity);
+        pc.validation =
+            t.f64_or("serve.pattern_cache.validation", pc.validation);
+        pc.max_age =
+            t.usize_or("serve.pattern_cache.max_age", pc.max_age as usize)
+                as u64;
         if let Some(v) = t.get("paths.artifacts") {
             self.paths.artifacts = PathBuf::from(v.as_str()?);
         }
@@ -214,6 +260,16 @@ impl Config {
                           self.serve.max_concurrent_prefills)?;
         self.serve.admit_retries =
             args.usize_or("admit-retries", self.serve.admit_retries)?;
+        if args.flag("pattern-cache") {
+            self.serve.pattern_cache.enabled = true;
+        }
+        let pc = &mut self.serve.pattern_cache;
+        pc.capacity = args.usize_or("pattern-cache-capacity", pc.capacity)?;
+        pc.validation =
+            args.f64_or("pattern-cache-validation", pc.validation)?;
+        pc.max_age =
+            args.usize_or("pattern-cache-max-age", pc.max_age as usize)?
+                as u64;
         Ok(())
     }
 }
@@ -247,6 +303,41 @@ mod tests {
         assert_eq!(c.serve.decode_tokens, 3);
         assert_eq!(c.serve.chunk_layers, 2);
         assert_eq!(c.serve.max_concurrent_prefills, 4);
+    }
+
+    #[test]
+    fn pattern_cache_defaults_off() {
+        let c = Config::default();
+        assert!(!c.serve.pattern_cache.enabled);
+        assert_eq!(c.serve.pattern_cache.capacity, 256);
+        assert!((c.serve.pattern_cache.validation - 0.75).abs() < 1e-12);
+        assert_eq!(c.serve.pattern_cache.max_age, 64);
+    }
+
+    #[test]
+    fn pattern_cache_toml_overrides() {
+        let t = tomlmini::parse(
+            "[serve.pattern_cache]\nenabled = true\ncapacity = 8\n\
+             validation = 0.9\nmax_age = 3\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&t).unwrap();
+        assert!(c.serve.pattern_cache.enabled);
+        assert_eq!(c.serve.pattern_cache.capacity, 8);
+        assert!((c.serve.pattern_cache.validation - 0.9).abs() < 1e-12);
+        assert_eq!(c.serve.pattern_cache.max_age, 3);
+    }
+
+    #[test]
+    fn pattern_cache_cli_overrides() {
+        let args = Args::parse(
+            ["x", "--pattern-cache", "--pattern-cache-capacity", "16",
+             "--pattern-cache-validation", "0.5"]
+                .map(String::from), &["pattern-cache"]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert!(c.serve.pattern_cache.enabled);
+        assert_eq!(c.serve.pattern_cache.capacity, 16);
+        assert!((c.serve.pattern_cache.validation - 0.5).abs() < 1e-12);
     }
 
     #[test]

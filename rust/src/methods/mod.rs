@@ -17,10 +17,13 @@
 pub mod flash;
 pub mod flexprefill;
 pub mod minference;
+pub mod pattern_cache;
 pub mod shareprefill;
 
 use anyhow::Result;
 use std::any::Any;
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use crate::attention::BlockMask;
 use crate::config::{MethodConfig, MethodKind};
@@ -29,6 +32,7 @@ use crate::runtime::Tensor;
 pub use flash::Flash;
 pub use flexprefill::FlexPrefill;
 pub use minference::MInference;
+pub use pattern_cache::{PatternCache, PatternCacheStats};
 pub use shareprefill::{SharePrefill, SharePrefillState};
 
 /// Label of the pattern a head ended up with (drives Figure 6 and the
@@ -56,6 +60,24 @@ impl PatternLabel {
     }
 }
 
+/// How the cross-request pattern cache participated in a head's plan
+/// (drives the cache hit/miss/invalidation metrics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheDecision {
+    /// Cache disabled, or not applicable to this head (only heads that
+    /// would otherwise bootstrap dense consult it).
+    Off,
+    /// Cache enabled but held no pattern for this head's cluster at
+    /// this length bucket — the exact (dense bootstrap) path ran.
+    Miss,
+    /// A cached pattern passed probe validation and was reused: the
+    /// head skipped the full-attention pivotal computation.
+    Hit,
+    /// A cached pattern existed but failed probe validation — the
+    /// exact path ran and its fresh pattern will refresh the cache.
+    Rejected,
+}
+
 /// Per-head plan for one layer.
 #[derive(Debug, Clone)]
 pub struct HeadPlan {
@@ -65,15 +87,29 @@ pub struct HeadPlan {
     /// SharePrefill: this head's full abar map must be scattered and handed
     /// back via `publish_abar` after the attention call.
     pub publish: bool,
+    /// Cross-request cache involvement (Off everywhere the cache is
+    /// disabled, so cache-off plans are indistinguishable from a
+    /// cache-less build).
+    pub cache: CacheDecision,
 }
 
 impl HeadPlan {
     pub fn dense(publish: bool) -> HeadPlan {
-        HeadPlan { mask: None, label: PatternLabel::Dense, publish }
+        HeadPlan {
+            mask: None,
+            label: PatternLabel::Dense,
+            publish,
+            cache: CacheDecision::Off,
+        }
     }
 
     pub fn sparse(mask: BlockMask, label: PatternLabel) -> HeadPlan {
-        HeadPlan { mask: Some(mask), label, publish: false }
+        HeadPlan {
+            mask: Some(mask),
+            label,
+            publish: false,
+            cache: CacheDecision::Off,
+        }
     }
 }
 
@@ -153,12 +189,24 @@ pub trait PatternStrategy {
     fn publish_abar(&self, _state: &mut dyn PatternState, _layer: usize,
                     _head: usize, _nb: usize, _abar: &[f32]) {
     }
+
+    /// The request's prefill completed: distill whatever of its pattern
+    /// state should outlive it.  SharePrefill publishes the request's
+    /// pivotal dictionary into the cross-request [`PatternCache`]; the
+    /// engine calls this exactly once per task, at completion, so
+    /// interleaved prefills never observe half-built patterns.
+    /// Default: no-op.
+    fn end_request(&self, _state: &dyn PatternState, _seq: usize) {
+    }
 }
 
-/// Instantiate the strategy for a method config.
+/// Instantiate the strategy for a method config.  `cache` is the
+/// engine-owned cross-request pattern cache; only SharePrefill consumes
+/// it (and only when the cache is enabled).
 pub fn build_strategy(cfg: &MethodConfig, num_layers: usize,
                       num_heads: usize,
-                      clusters: Option<Vec<Option<usize>>>)
+                      clusters: Option<Vec<Option<usize>>>,
+                      cache: Option<Rc<RefCell<PatternCache>>>)
                       -> Box<dyn PatternStrategy> {
     match cfg.kind {
         MethodKind::Flash => Box::new(Flash::new()),
@@ -166,8 +214,10 @@ pub fn build_strategy(cfg: &MethodConfig, num_layers: usize,
         MethodKind::FlexPrefill => {
             Box::new(FlexPrefill::new(cfg.gamma, cfg.flex_tau))
         }
-        MethodKind::SharePrefill => Box::new(SharePrefill::new(
-            cfg.tau, cfg.delta, cfg.gamma, num_layers, num_heads, clusters)),
+        MethodKind::SharePrefill => Box::new(
+            SharePrefill::new(cfg.tau, cfg.delta, cfg.gamma, num_layers,
+                              num_heads, clusters)
+                .with_cache(cache)),
     }
 }
 

@@ -1,0 +1,357 @@
+//! **Cross-request pattern cache** — amortizing the pivotal bootstrap
+//! across prompts.
+//!
+//! The paper's second key observation (Section 4) is that inter-head
+//! pattern similarity "remains remarkably consistent across diverse
+//! inputs".  Within one request SharePrefill already exploits this by
+//! sharing each cluster's pivotal pattern across its heads; this module
+//! extends the amortization *across requests*: when a prefill
+//! completes, its per-cluster pivotal entries (ã, M) are distilled into
+//! a length-bucketed cache owned by the engine, and later requests at
+//! the same seq bucket start with those entries as *warm candidates*.
+//!
+//! A warm candidate is never trusted blindly — patterns are
+//! input-dependent, so each head that would bootstrap dense first runs
+//! a cheap probe-based validation ([`probe_recall`]): the fraction of
+//! the head's observed last-row-block attention mass (the â probe the
+//! strategy computes anyway) covered by the cached mask's last row.
+//! Only above `serve.pattern_cache.validation` is the cached pattern
+//! adopted; otherwise the head falls back to the exact dense-bootstrap
+//! path, and the fresh pattern it constructs refreshes the cache at
+//! publish time.  A stale pattern can cost a validation miss, never a
+//! silently-wrong mask.
+//!
+//! Eviction is two-tier: entries unrefreshed for `max_age` publishes
+//! are dropped on lookup (staleness), and the total entry count is
+//! bounded by `capacity` with least-recently-refreshed-first eviction.
+//!
+//! Single-threaded by design: the engine and its strategies live on one
+//! worker thread (see `serving/server.rs`), so the cache is shared via
+//! `Rc<RefCell<_>>` like the calibration collector in `cli_main`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::attention::{BlockMask, PivotalDict, PivotalEntry};
+use crate::config::PatternCacheConfig;
+
+/// Lifetime counters of one cache instance (inserts / refreshes happen
+/// at publish; expirations and evictions at lookup / publish).  Per-head
+/// hit / miss / validation-failure counts live in the per-request
+/// `DecisionStats` and aggregate into the serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct PatternCacheStats {
+    /// Entries inserted for a (bucket, cluster) not previously cached.
+    pub inserts: u64,
+    /// Entries overwritten with a fresher pattern.
+    pub refreshes: u64,
+    /// Entries dropped because they out-aged `max_age` publishes.
+    pub expired: u64,
+    /// Entries dropped to respect `capacity`.
+    pub evicted: u64,
+    /// `lookup` calls (one per SharePrefill request when enabled).
+    pub lookups: u64,
+    /// Lookups that returned at least one warm candidate.
+    pub warm_lookups: u64,
+}
+
+/// One cached pattern plus its freshness stamp.  Entries are immutable
+/// once published, so lookups hand out `Rc` clones — a warm request's
+/// candidate snapshot costs a refcount bump per cluster, not a deep
+/// copy of every mask at the bucket.
+#[derive(Debug, Clone)]
+struct CacheSlot {
+    entry: Rc<PivotalEntry>,
+    /// Publish generation at which this entry was last (re)written.
+    refreshed_at: u64,
+}
+
+/// The cross-request pivotal-pattern cache: seq bucket → cluster id →
+/// cached entry.  Owned engine-side, shared into the SharePrefill
+/// strategy; populated by [`PatternCache::publish`] when a prefill
+/// completes and consulted by [`PatternCache::lookup`] at
+/// `begin_request`.  Because candidates are snapshotted per request at
+/// `begin_request` and publishes happen only at prefill completion,
+/// interleaved prefills never observe each other's half-built patterns.
+#[derive(Debug)]
+pub struct PatternCache {
+    cfg: PatternCacheConfig,
+    buckets: HashMap<usize, HashMap<usize, CacheSlot>>,
+    /// Monotone publish counter (the staleness clock).
+    generation: u64,
+    pub stats: PatternCacheStats,
+}
+
+impl PatternCache {
+    pub fn new(cfg: PatternCacheConfig) -> PatternCache {
+        PatternCache {
+            cfg,
+            buckets: HashMap::new(),
+            generation: 0,
+            stats: PatternCacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Per-head probe-recall threshold warm candidates must pass.
+    pub fn validation(&self) -> f64 {
+        self.cfg.validation
+    }
+
+    /// Cached entries across all length buckets.
+    pub fn len(&self) -> usize {
+        self.buckets.values().map(HashMap::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Warm candidates for a request running at seq bucket `seq`
+    /// (cluster id → shared entry).  Prunes entries that out-aged
+    /// `max_age` publishes; empty when the cache is disabled or cold.
+    pub fn lookup(&mut self, seq: usize)
+                  -> HashMap<usize, Rc<PivotalEntry>> {
+        if !self.cfg.enabled {
+            return HashMap::new();
+        }
+        self.stats.lookups += 1;
+        if let Some(bucket) = self.buckets.get_mut(&seq) {
+            let (gen, max_age) = (self.generation, self.cfg.max_age);
+            let before = bucket.len();
+            bucket.retain(|_, s| gen - s.refreshed_at <= max_age);
+            self.stats.expired += (before - bucket.len()) as u64;
+        }
+        let out: HashMap<usize, Rc<PivotalEntry>> = self.buckets.get(&seq)
+            .map(|b| b.iter().map(|(c, s)| (*c, s.entry.clone())).collect())
+            .unwrap_or_default();
+        if !out.is_empty() {
+            self.stats.warm_lookups += 1;
+        }
+        out
+    }
+
+    /// Distill a finished request's pivotal dictionary into the cache:
+    /// every (cluster → entry) the request constructed or adopted is
+    /// inserted (or refreshed) under its seq bucket, then capacity is
+    /// enforced by evicting the least-recently-refreshed entries.
+    pub fn publish(&mut self, seq: usize, dict: &PivotalDict) {
+        self.publish_request(seq, dict, &HashMap::new());
+    }
+
+    /// [`PatternCache::publish`] that additionally knows which clusters
+    /// the request adopted *verbatim* from the cache: those get their
+    /// freshness stamp bumped by re-sharing the existing immutable
+    /// entry (a refcount bump), only genuinely new or re-derived
+    /// entries pay the deep copy.
+    pub fn publish_request(&mut self, seq: usize, dict: &PivotalDict,
+                           adopted: &HashMap<usize, Rc<PivotalEntry>>) {
+        if !self.cfg.enabled || dict.is_empty() || self.cfg.capacity == 0 {
+            return;
+        }
+        self.generation += 1;
+        let gen = self.generation;
+        let bucket = self.buckets.entry(seq).or_default();
+        for (&cluster, entry) in dict {
+            let slot = CacheSlot {
+                entry: match adopted.get(&cluster) {
+                    Some(rc) => rc.clone(),
+                    None => Rc::new(entry.clone()),
+                },
+                refreshed_at: gen,
+            };
+            match bucket.insert(cluster, slot) {
+                Some(_) => self.stats.refreshes += 1,
+                None => self.stats.inserts += 1,
+            }
+        }
+        self.enforce_capacity();
+    }
+
+    /// Drop least-recently-refreshed entries until within capacity
+    /// (deterministic: ties break by (bucket, cluster) key order).
+    fn enforce_capacity(&mut self) {
+        let excess = self.len().saturating_sub(self.cfg.capacity);
+        if excess == 0 {
+            return;
+        }
+        let mut all: Vec<(u64, usize, usize)> = self.buckets.iter()
+            .flat_map(|(&seq, b)| {
+                b.iter().map(move |(&c, s)| (s.refreshed_at, seq, c))
+            })
+            .collect();
+        all.sort_unstable();
+        for &(_, seq, cluster) in all.iter().take(excess) {
+            if let Some(b) = self.buckets.get_mut(&seq) {
+                b.remove(&cluster);
+                self.stats.evicted += 1;
+            }
+        }
+        self.buckets.retain(|_, b| !b.is_empty());
+    }
+}
+
+/// Probe-based validation score for a cached mask: the fraction of the
+/// request's observed last-row-block attention mass (â, a distribution
+/// over kv blocks) that the mask's last row covers.  This is the
+/// recall the head would get on the blocks the probe says matter —
+/// cheap (the â probe is computed anyway) and conservative (a pattern
+/// from a differently-shaped prompt scores low and is rejected).
+pub fn probe_recall(ahat: &[f32], mask: &BlockMask) -> f64 {
+    if mask.nb == 0 || ahat.len() != mask.nb {
+        return 0.0;
+    }
+    mask.row(mask.nb - 1).iter()
+        .map(|&j| ahat[j as usize] as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(nb: usize, tag: usize) -> PivotalEntry {
+        PivotalEntry {
+            ahat_last: vec![1.0 / nb as f32; nb],
+            mask: BlockMask::dense(nb),
+            source: (tag, 0),
+        }
+    }
+
+    fn dict_of(pairs: &[(usize, usize)]) -> PivotalDict {
+        // (cluster, nb) pairs
+        pairs.iter()
+            .map(|&(c, nb)| (c, entry(nb, c)))
+            .collect()
+    }
+
+    fn on(capacity: usize, max_age: u64) -> PatternCacheConfig {
+        PatternCacheConfig {
+            enabled: true,
+            capacity,
+            validation: 0.75,
+            max_age,
+        }
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut c = PatternCache::new(PatternCacheConfig::default());
+        assert!(!c.enabled());
+        c.publish(256, &dict_of(&[(0, 4)]));
+        assert!(c.is_empty());
+        assert!(c.lookup(256).is_empty());
+        assert_eq!(c.stats.lookups, 0, "disabled lookups are not counted");
+    }
+
+    #[test]
+    fn publish_then_lookup_same_bucket() {
+        let mut c = PatternCache::new(on(16, 8));
+        c.publish(256, &dict_of(&[(0, 4), (1, 4)]));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.inserts, 2);
+        let warm = c.lookup(256);
+        assert_eq!(warm.len(), 2);
+        assert_eq!(warm[&0].mask.nb, 4);
+        assert_eq!(c.stats.warm_lookups, 1);
+        // a different length bucket is cold
+        assert!(c.lookup(512).is_empty());
+        assert_eq!(c.stats.lookups, 2);
+        assert_eq!(c.stats.warm_lookups, 1);
+    }
+
+    #[test]
+    fn republish_refreshes_not_duplicates() {
+        let mut c = PatternCache::new(on(16, 8));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.inserts, 1);
+        assert_eq!(c.stats.refreshes, 1);
+    }
+
+    #[test]
+    fn stale_entries_expire_on_lookup() {
+        let mut c = PatternCache::new(on(16, 2));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        // two more publishes age the entry to exactly max_age: still live
+        c.publish(512, &dict_of(&[(1, 8)]));
+        c.publish(512, &dict_of(&[(2, 8)]));
+        assert_eq!(c.lookup(256).len(), 1);
+        // one more publish pushes it past max_age: expired on lookup
+        c.publish(512, &dict_of(&[(3, 8)]));
+        assert!(c.lookup(256).is_empty());
+        assert_eq!(c.stats.expired, 1);
+        // refreshing resurrects the bucket
+        c.publish(256, &dict_of(&[(0, 4)]));
+        assert_eq!(c.lookup(256).len(), 1);
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_refreshed() {
+        let mut c = PatternCache::new(on(2, 1000));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        c.publish(512, &dict_of(&[(1, 8)]));
+        c.publish(1024, &dict_of(&[(2, 16)]));
+        assert_eq!(c.len(), 2, "capacity must be enforced");
+        assert_eq!(c.stats.evicted, 1);
+        // the oldest publish (bucket 256) was the victim
+        assert!(c.lookup(256).is_empty());
+        assert_eq!(c.lookup(512).len(), 1);
+        assert_eq!(c.lookup(1024).len(), 1);
+    }
+
+    #[test]
+    fn refresh_protects_from_eviction() {
+        let mut c = PatternCache::new(on(2, 1000));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        c.publish(512, &dict_of(&[(1, 8)]));
+        c.publish(256, &dict_of(&[(0, 4)])); // refresh 256
+        c.publish(1024, &dict_of(&[(2, 16)]));
+        // 512 is now the least recently refreshed → evicted
+        assert!(c.lookup(512).is_empty());
+        assert_eq!(c.lookup(256).len(), 1);
+    }
+
+    #[test]
+    fn publish_request_reuses_adopted_entries() {
+        let mut c = PatternCache::new(on(16, 8));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        let rc = c.lookup(256)[&0].clone();
+        // a request that adopted cluster 0 verbatim (its dict holds an
+        // owned copy) must refresh by sharing, not re-cloning
+        let dict: PivotalDict =
+            [(0usize, (*rc).clone())].into_iter().collect();
+        let adopted: HashMap<usize, Rc<PivotalEntry>> =
+            [(0usize, rc.clone())].into_iter().collect();
+        c.publish_request(256, &dict, &adopted);
+        assert_eq!(c.stats.refreshes, 1);
+        assert!(Rc::ptr_eq(&c.lookup(256)[&0], &rc),
+                "adopted entry must be shared, not deep-copied");
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = PatternCache::new(on(0, 8));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn probe_recall_scores_last_row_coverage() {
+        let nb = 4;
+        let ahat = [0.4f32, 0.3, 0.2, 0.1];
+        // dense mask covers everything
+        assert!((probe_recall(&ahat, &BlockMask::dense(nb)) - 1.0).abs()
+                < 1e-6);
+        // last row covering blocks {0, 3} → 0.4 + 0.1
+        let m = BlockMask::from_pairs(nb, [(3, 0), (3, 3), (0, 0)]);
+        assert!((probe_recall(&ahat, &m) - 0.5).abs() < 1e-6);
+        // length mismatch is an automatic fail, never a panic
+        assert_eq!(probe_recall(&ahat, &BlockMask::dense(8)), 0.0);
+        assert_eq!(probe_recall(&ahat, &BlockMask::empty(4)), 0.0);
+    }
+}

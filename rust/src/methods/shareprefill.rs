@@ -24,14 +24,18 @@
 
 use anyhow::Result;
 use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::attention::{construct_pivotal, decide_pattern, search_vslash,
-                       Decision, PivotalDict};
+                       Decision, PivotalDict, PivotalEntry};
 use crate::config::MethodKind;
 use crate::BLOCK_SIZE;
 
-use super::{state_mut, HeadPlan, PatternLabel, PatternState,
-            PatternStrategy, Probes};
+use super::pattern_cache::{probe_recall, PatternCache};
+use super::{state_mut, state_ref, CacheDecision, HeadPlan, PatternLabel,
+            PatternState, PatternStrategy, Probes};
 
 pub struct SharePrefill {
     tau: f64,
@@ -40,6 +44,9 @@ pub struct SharePrefill {
     num_heads: usize,
     /// (layer * num_heads + head) → cluster id (None = noise).
     clusters: Vec<Option<usize>>,
+    /// Engine-owned cross-request pattern cache: consulted at
+    /// `begin_request` (warm candidates), refreshed at `end_request`.
+    cache: Option<Rc<RefCell<PatternCache>>>,
 }
 
 /// Per-request pattern state: the evolving pivotal dictionary plus the
@@ -47,6 +54,20 @@ pub struct SharePrefill {
 pub struct SharePrefillState {
     /// Evolving pivotal dictionary (cluster → (ã, M)) for one request.
     dict: PivotalDict,
+    /// Cached patterns for this request's length bucket, snapshotted at
+    /// `begin_request` (empty when the cache is off or cold).  Shared
+    /// immutable entries: validated per head before use and never
+    /// mutated mid-request, so interleaved prefills cannot observe
+    /// each other's patterns.
+    warm: HashMap<usize, Rc<PivotalEntry>>,
+    /// Clusters whose warm candidate was adopted verbatim (cache hits)
+    /// — published back by freshness bump, not deep copy.
+    adopted: Vec<usize>,
+    /// Whether the cross-request cache participates in this request.
+    cache_on: bool,
+    /// Probe-recall threshold warm candidates must pass (copied from
+    /// the cache config so `plan_layer` never re-borrows the cache).
+    validation: f64,
     pub stats: DecisionStats,
 }
 
@@ -59,12 +80,21 @@ impl PatternState for SharePrefillState {
     }
 }
 
-/// Counts of pattern kinds chosen during a request.
-#[derive(Debug, Default, Clone)]
+/// Counts of pattern kinds chosen during a request, plus how the
+/// cross-request cache participated (all-zero when the cache is off).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
 pub struct DecisionStats {
     pub dense: usize,
     pub shared: usize,
     pub vslash: usize,
+    /// Heads that reused a validated cached pattern (skipped the dense
+    /// pivotal bootstrap).
+    pub cache_hits: usize,
+    /// Dense-bootstrap heads the enabled cache had no pattern for.
+    pub cache_misses: usize,
+    /// Heads whose cached pattern failed probe validation (exact path
+    /// ran instead).
+    pub cache_rejected: usize,
 }
 
 impl SharePrefill {
@@ -81,7 +111,16 @@ impl SharePrefill {
         });
         assert_eq!(clusters.len(), num_layers * num_heads,
                    "cluster table must cover every (layer, head)");
-        SharePrefill { tau, delta, gamma, num_heads, clusters }
+        SharePrefill { tau, delta, gamma, num_heads, clusters, cache: None }
+    }
+
+    /// Attach the engine-owned cross-request pattern cache (`None` or a
+    /// disabled cache leave behavior bit-identical to a cache-less
+    /// build).
+    pub fn with_cache(mut self, cache: Option<Rc<RefCell<PatternCache>>>)
+                      -> SharePrefill {
+        self.cache = cache;
+        self
     }
 
     fn cluster_of(&self, layer: usize, head: usize) -> Option<usize> {
@@ -94,11 +133,26 @@ impl PatternStrategy for SharePrefill {
         MethodKind::SharePrefill
     }
 
-    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+    fn begin_request(&self, seq: usize) -> Box<dyn PatternState> {
         // Patterns are input-dependent: each request evolves its own
         // dictionary from scratch, independent of concurrent prefills.
+        // With the cross-request cache enabled, patterns observed on
+        // earlier requests at this length bucket ride along as warm
+        // candidates — validated per head before any use.
+        let (warm, cache_on, validation) = match &self.cache {
+            Some(c) if c.borrow().enabled() => {
+                let mut cache = c.borrow_mut();
+                let validation = cache.validation();
+                (cache.lookup(seq), true, validation)
+            }
+            _ => (HashMap::new(), false, 0.0),
+        };
         Box::new(SharePrefillState {
             dict: PivotalDict::new(),
+            warm,
+            adopted: Vec::new(),
+            cache_on,
+            validation,
             stats: DecisionStats::default(),
         })
     }
@@ -125,8 +179,58 @@ impl PatternStrategy for SharePrefill {
                                       self.tau);
             match info.decision {
                 Decision::Dense => {
-                    st.stats.dense += 1;
-                    plans.push(HeadPlan::dense(true));
+                    // Before paying for the pivotal bootstrap, try the
+                    // cross-request cache: a warm candidate is adopted
+                    // only if its mask covers >= `validation` of this
+                    // head's observed probe mass — a stale pattern can
+                    // cost a rejection, never a silently-wrong mask.
+                    let cache = if !st.cache_on {
+                        CacheDecision::Off
+                    } else {
+                        match info.cluster.and_then(|c| st.warm.get(&c)) {
+                            Some(cand) if cand.ahat_last.len() == nb
+                                && cand.mask.nb == nb
+                                && probe_recall(ahat, &cand.mask)
+                                    >= st.validation => CacheDecision::Hit,
+                            Some(_) => CacheDecision::Rejected,
+                            None => CacheDecision::Miss,
+                        }
+                    };
+                    if cache == CacheDecision::Hit {
+                        let c = info.cluster.unwrap();
+                        // one deep copy, only on actual adoption (the
+                        // dict owns its entries)
+                        let entry = (*st.warm[&c]).clone();
+                        let mask = entry.mask.clone();
+                        // adopted entry becomes the cluster's pivot, so
+                        // later heads share against it exactly as they
+                        // would against a freshly constructed one; once
+                        // present it is never overwritten (Dense can't
+                        // fire for this cluster again), so end_request
+                        // may refresh it by sharing instead of copying
+                        st.dict.insert(c, entry);
+                        st.adopted.push(c);
+                        st.stats.shared += 1;
+                        st.stats.cache_hits += 1;
+                        plans.push(HeadPlan {
+                            mask: Some(mask),
+                            label: PatternLabel::Shared,
+                            publish: false,
+                            cache,
+                        });
+                    } else {
+                        match cache {
+                            CacheDecision::Miss => st.stats.cache_misses += 1,
+                            CacheDecision::Rejected => {
+                                st.stats.cache_rejected += 1;
+                            }
+                            _ => {}
+                        }
+                        st.stats.dense += 1;
+                        let mut plan = HeadPlan::dense(true);
+                        plan.cache = cache;
+                        plans.push(plan);
+                    }
                 }
                 Decision::SharedPivot => {
                     st.stats.shared += 1;
@@ -135,6 +239,7 @@ impl PatternStrategy for SharePrefill {
                         mask: Some(entry.mask.clone()),
                         label: PatternLabel::Shared,
                         publish: false,
+                        cache: CacheDecision::Off,
                     });
                 }
                 Decision::VSlash => {
@@ -158,6 +263,26 @@ impl PatternStrategy for SharePrefill {
             let entry = construct_pivotal(abar, nb, self.gamma,
                                           (layer, head));
             st.dict.insert(c, entry);
+            // A freshly constructed pattern replaces any cache adoption
+            // for this cluster (possible when a same-layer head was
+            // planned dense before another head's hit landed in the
+            // dict): end_request must publish the fresh entry, not
+            // freshness-bump the candidate a head just re-derived past.
+            st.adopted.retain(|&a| a != c);
+        }
+    }
+
+    fn end_request(&self, state: &dyn PatternState, seq: usize) {
+        if let Some(cache) = &self.cache {
+            let st = state_ref::<SharePrefillState>(state);
+            // Publishing the whole dictionary also refreshes entries
+            // this request adopted from the cache (LRU freshness);
+            // adopted entries are re-shared, not deep-copied.
+            let adopted: HashMap<usize, Rc<PivotalEntry>> = st.adopted
+                .iter()
+                .filter_map(|c| st.warm.get(c).map(|rc| (*c, rc.clone())))
+                .collect();
+            cache.borrow_mut().publish_request(seq, &st.dict, &adopted);
         }
     }
 }
@@ -318,5 +443,258 @@ mod tests {
         let sp = SharePrefill::new(0.2, 0.3, 0.9, 3, 4, None);
         assert_eq!(sp.clusters.len(), 12);
         assert!(sp.clusters.iter().all(Option::is_some));
+    }
+
+    // ---- cross-request pattern cache ----
+
+    use crate::attention::BlockMask;
+    use crate::config::PatternCacheConfig;
+
+    fn enabled_cache(validation: f64) -> Rc<RefCell<PatternCache>> {
+        Rc::new(RefCell::new(PatternCache::new(PatternCacheConfig {
+            enabled: true,
+            capacity: 64,
+            validation,
+            max_age: 64,
+        })))
+    }
+
+    fn seeded_cache(seq: usize, mask: BlockMask, validation: f64)
+                    -> Rc<RefCell<PatternCache>> {
+        let nb = mask.nb;
+        let cache = enabled_cache(validation);
+        let mut dict = PivotalDict::new();
+        dict.insert(0, PivotalEntry {
+            ahat_last: vec![1.0 / nb as f32; nb],
+            mask,
+            source: (0, 0),
+        });
+        cache.borrow_mut().publish(seq, &dict);
+        cache
+    }
+
+    #[test]
+    fn warm_cache_hit_skips_dense_bootstrap() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        // a dense cached mask covers all of the probe mass: recall 1.0
+        let cache = seeded_cache(seq, BlockMask::dense(nb), 0.75);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
+                                   Some(vec![Some(0), Some(0)]))
+            .with_cache(Some(cache));
+        let mut st = sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
+        assert!(plans.iter().all(|p| p.label == PatternLabel::Shared));
+        assert_eq!(plans[0].cache, CacheDecision::Hit);
+        let s = stats_of(st.as_ref());
+        assert_eq!(s.dense, 0, "warm request must skip the dense bootstrap");
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.shared, 2);
+    }
+
+    #[test]
+    fn validation_failure_falls_back_to_exact_path() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        // diagonal-only mask: its last row covers only the last block,
+        // ~14% of the flat probes' mass — far below the 0.75 threshold
+        let mut mask = BlockMask::empty(nb);
+        mask.ensure_diagonal();
+        let cache = seeded_cache(seq, mask, 0.75);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
+                                   Some(vec![Some(0), Some(0)]))
+            .with_cache(Some(cache));
+        let mut st = sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
+        // both heads reject the stale pattern and run the exact dense
+        // bootstrap — never a silently-wrong mask
+        assert!(plans.iter().all(|p| p.mask.is_none() && p.publish));
+        assert!(plans.iter()
+            .all(|p| p.cache == CacheDecision::Rejected));
+        let s = stats_of(st.as_ref());
+        assert_eq!(s.dense, 2);
+        assert_eq!(s.cache_rejected, 2);
+        assert_eq!(s.cache_hits, 0);
+    }
+
+    #[test]
+    fn mismatched_bucket_entry_never_validates() {
+        let seq = 4 * BLOCK_SIZE;
+        // entry constructed for an 8-block bucket offered at a 4-block
+        // request (cannot happen through lookup's bucketing; defensive)
+        let cache = seeded_cache(seq, BlockMask::dense(8), 0.75);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 1, Some(vec![Some(0)]))
+            .with_cache(Some(cache));
+        let mut st = sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(1, seq);
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 1, &mut probes)
+            .unwrap();
+        assert_eq!(plans[0].cache, CacheDecision::Rejected);
+        assert!(plans[0].publish);
+    }
+
+    #[test]
+    fn patterns_published_at_end_request_warm_the_next_request() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let cache = enabled_cache(0.75);
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, 1, 2,
+                                   Some(vec![Some(0), Some(0)]))
+            .with_cache(Some(cache.clone()));
+        // request 1: cold — bootstraps dense, publishes at completion
+        let mut s1 = sp.begin_request(seq);
+        let mut probes = FakeProbes::flat(2, seq);
+        let plans = sp.plan_layer(s1.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
+        assert_eq!(plans[0].cache, CacheDecision::Miss);
+        assert_eq!(stats_of(s1.as_ref()).cache_misses, 2);
+        for (h, p) in plans.iter().enumerate() {
+            if p.publish {
+                sp.publish_abar(s1.as_mut(), 0, h, nb, &uniform_abar(nb));
+            }
+        }
+        sp.end_request(s1.as_ref(), seq);
+        assert!(!cache.borrow().is_empty(),
+                "end_request must publish into the cache");
+        // request 2: warm — validated reuse, no dense bootstrap at all
+        let mut s2 = sp.begin_request(seq);
+        let mut probes2 = FakeProbes::flat(2, seq);
+        let plans2 = sp.plan_layer(s2.as_mut(), 0, seq, 2, &mut probes2)
+            .unwrap();
+        assert!(plans2.iter().all(|p| p.label == PatternLabel::Shared));
+        let s = stats_of(s2.as_ref());
+        assert_eq!(s.dense, 0);
+        assert_eq!(s.cache_hits, 1);
+    }
+
+    /// A same-layer mixed outcome: head 0 rejects the warm candidate
+    /// (planned dense, publish) while head 1 adopts it.  Head 0's
+    /// `publish_abar` then overwrites the adopted dict entry, so
+    /// `end_request` must publish the *fresh* pattern — not
+    /// freshness-bump the stale candidate head 0 just re-derived past.
+    #[test]
+    fn rejected_dense_publish_overrides_adopted_refresh() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        // structured probes (Rng seed 42): head 0's mass sits on blocks
+        // {0,1} (~0.71/0.25), head 1's on blocks {1,2} (~0.49/0.26).  A
+        // cached mask whose last row is {1,2,3} scores ~0.29 for head 0
+        // (reject at 0.6) and ~0.76 for head 1 (hit).
+        let mask = BlockMask::from_pairs(
+            nb, [(0, 0), (1, 1), (2, 2), (3, 1), (3, 2), (3, 3)]);
+        let stale_last_row = mask.row(nb - 1).len();
+        let cache = seeded_cache(seq, mask, 0.6);
+        // δ > 1 disables the sparsity exclusion so both heads reach the
+        // Dense decision; both share cluster 0
+        let sp = SharePrefill::new(0.2, 1.01, 0.9, 1, 2,
+                                   Some(vec![Some(0), Some(0)]))
+            .with_cache(Some(cache.clone()));
+        let mut st = sp.begin_request(seq);
+        let mut probes = FakeProbes::structured(2, seq);
+        let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
+        assert_eq!(plans[0].cache, CacheDecision::Rejected);
+        assert_eq!(plans[1].cache, CacheDecision::Hit);
+        // engine order: head 0's dense publish lands after the plans
+        sp.publish_abar(st.as_mut(), 0, 0, nb, &uniform_abar(nb));
+        sp.end_request(st.as_ref(), seq);
+        // the cache now holds the fresh pattern (uniform abar at γ=0.9
+        // selects the full causal mask: last row covers all 4 blocks),
+        // not the stale 2-block mask that failed validation
+        let republished = cache.borrow_mut().lookup(seq);
+        let last_row = republished[&0].mask.row(nb - 1).len();
+        assert_ne!(last_row, stale_last_row,
+                   "stale rejected pattern must not be re-refreshed");
+        assert_eq!(last_row, nb, "fresh dense-derived pattern expected");
+    }
+
+    /// The cache-off acceptance property at the strategy level: no
+    /// cache, a disabled cache, and an enabled-but-cold cache all plan
+    /// bit-identically (labels and masks) on the same inputs.
+    #[test]
+    fn disabled_or_cold_cache_is_bit_identical_to_cacheless() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let layers = 2;
+        let clusters = vec![Some(0); 4];
+        let mk = || SharePrefill::new(0.2, 0.3, 0.9, layers, 2,
+                                      Some(clusters.clone()));
+        let base = mk();
+        let disabled = mk().with_cache(Some(Rc::new(RefCell::new(
+            PatternCache::new(PatternCacheConfig::default())))));
+        let cold = mk().with_cache(Some(enabled_cache(0.75)));
+        for probes_of in [FakeProbes::flat
+                              as fn(usize, usize) -> FakeProbes,
+                          FakeProbes::structured] {
+            let mut pa = probes_of(2, seq);
+            let a = plan_request(&base, seq, layers, nb, &mut pa, None);
+            let mut pb = probes_of(2, seq);
+            let b = plan_request(&disabled, seq, layers, nb, &mut pb, None);
+            let mut pc = probes_of(2, seq);
+            let c = plan_request(&cold, seq, layers, nb, &mut pc, None);
+            assert_eq!(a, b, "disabled cache changed the plans");
+            assert_eq!(a, c, "cold enabled cache changed the plans");
+        }
+    }
+
+    /// Golden regression for SharePrefill decisions: the per-layer
+    /// (dense, shared, vslash) counts on the canonical fake-probe
+    /// inputs.  If pattern quality drifts (probe pooling, JS distance,
+    /// thresholds), this fails loudly with the full per-layer picture.
+    #[test]
+    fn decision_stats_golden_snapshot() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let layers = 3;
+        let heads = 2;
+
+        fn per_layer(sp: &SharePrefill, probes: &mut FakeProbes,
+                     layers: usize, seq: usize, nb: usize, heads: usize)
+                     -> Vec<(usize, usize, usize)> {
+            let mut st = sp.begin_request(seq);
+            let mut out = Vec::new();
+            let mut prev = DecisionStats::default();
+            for layer in 0..layers {
+                let plans = sp.plan_layer(st.as_mut(), layer, seq, heads,
+                                          probes).unwrap();
+                for (h, p) in plans.iter().enumerate() {
+                    if p.publish {
+                        sp.publish_abar(st.as_mut(), layer, h, nb,
+                                        &uniform_abar(nb));
+                    }
+                }
+                let s = stats_of(st.as_ref()).clone();
+                out.push((s.dense - prev.dense, s.shared - prev.shared,
+                          s.vslash - prev.vslash));
+                prev = s;
+            }
+            out
+        }
+
+        // consistent probes, both heads in one cluster: the first layer
+        // bootstraps dense on every head (the pivot lands only after
+        // the layer's maps publish), every later layer shares it
+        let sp = SharePrefill::new(0.2, 0.3, 0.9, layers, heads,
+                                   Some(vec![Some(0); layers * heads]));
+        let mut flat = FakeProbes::consistent(heads, seq);
+        assert_eq!(per_layer(&sp, &mut flat, layers, seq, nb, heads),
+                   vec![(2, 0, 0), (0, 2, 0), (0, 2, 0)],
+                   "consistent-probe decision snapshot drifted");
+
+        // structured probes (stripes, Rng seed 42): every head is
+        // highly sparse (d_sparse ≈ 0.50 / 0.36 ≥ δ = 0.3), so the
+        // exclusion rule sends all heads to vertical-slash everywhere
+        let sp2 = SharePrefill::new(0.2, 0.3, 0.9, layers, heads,
+                                    Some(vec![Some(0), Some(1),
+                                              Some(0), Some(1),
+                                              Some(0), Some(1)]));
+        let mut structured = FakeProbes::structured(heads, seq);
+        assert_eq!(per_layer(&sp2, &mut structured, layers, seq, nb, heads),
+                   vec![(0, 0, 2); 3],
+                   "structured-probe decision snapshot drifted");
     }
 }

@@ -31,13 +31,14 @@
 //! [`PatternState`]: crate::methods::PatternState
 
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::attention::pivotal::scatter_abar;
 use crate::attention::BlockMask;
-use crate::config::{MethodConfig, MethodKind};
-use crate::methods::{build_strategy, PatternLabel, PatternState,
-                     PatternStrategy, Probes};
+use crate::config::{MethodConfig, MethodKind, PatternCacheConfig};
+use crate::methods::{build_strategy, CacheDecision, PatternCache,
+                     PatternLabel, PatternState, PatternStrategy, Probes};
 use crate::model::Stages;
 use crate::runtime::{Registry, Tensor};
 use crate::util::timer::{StageProfiler, Timer};
@@ -73,6 +74,12 @@ pub struct PrefillStats {
     pub shared: usize,
     pub vslash: usize,
     pub query_aware: usize,
+    /// Cross-request pattern cache involvement per head (all zero when
+    /// the cache is disabled): validated reuses, cold misses, and
+    /// validation failures that fell back to the exact path.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub cache_rejected: usize,
     pub profiler: StageProfiler,
 }
 
@@ -230,16 +237,26 @@ impl<'a> Probes for LayerProbes<'a> {
     }
 }
 
-/// The engine: one model + one strategy.
+/// The engine: one model + one strategy (+ the optional engine-owned
+/// cross-request pattern cache the strategy shares).
 pub struct Engine {
     pub stages: Stages,
     pub strategy: Box<dyn PatternStrategy>,
+    /// Cross-request pattern cache (None = disabled).  Lives with the
+    /// engine so it spans requests; the SharePrefill strategy holds the
+    /// other `Rc` and does the actual lookup/publish.  Exposed for
+    /// observability (hit/eviction stats in tests and tools).
+    pub pattern_cache: Option<Rc<RefCell<PatternCache>>>,
 }
 
 impl Engine {
     pub fn new(registry: Rc<Registry>, model: &str,
                strategy: Box<dyn PatternStrategy>) -> Result<Engine> {
-        Ok(Engine { stages: Stages::new(registry, model)?, strategy })
+        Ok(Engine {
+            stages: Stages::new(registry, model)?,
+            strategy,
+            pattern_cache: None,
+        })
     }
 
     /// Run one layer of a prefill task (the shared body of chunked and
@@ -291,6 +308,12 @@ impl Engine {
                 PatternLabel::VSlash => t.stats.vslash += 1,
                 PatternLabel::QueryAware => t.stats.query_aware += 1,
             }
+            match plan.cache {
+                CacheDecision::Off => {}
+                CacheDecision::Hit => t.stats.cache_hits += 1,
+                CacheDecision::Miss => t.stats.cache_misses += 1,
+                CacheDecision::Rejected => t.stats.cache_rejected += 1,
+            }
             let (idx, valid) = mask_owned.pack(budget);
             let qh = self.stages.head_q(&qkv.q, head)?;
             let kh = k_rep.index_axis0(head)?;
@@ -331,6 +354,11 @@ impl Engine {
             let rest = t.layers_total - t.layers_done;
             self.prefill_chunk(&mut t, rest)?;
         }
+        // PrefillDone: distill the request's pattern state into the
+        // cross-request cache (exactly once per task — this method
+        // consumes it).  A cancelled task is dropped without reaching
+        // here, so only completed requests ever publish.
+        self.strategy.end_request(&*t.pattern, t.seq);
         let mut stats = t.stats;
         stats.profiler = t.prof;
         Ok(PrefillResult {
@@ -547,6 +575,7 @@ pub struct EngineBuilder {
     registry: Rc<Registry>,
     model: String,
     method: MethodConfig,
+    pattern_cache: PatternCacheConfig,
 }
 
 impl EngineBuilder {
@@ -555,6 +584,7 @@ impl EngineBuilder {
             registry,
             model: model.to_string(),
             method: MethodConfig::default(),
+            pattern_cache: PatternCacheConfig::default(),
         }
     }
 
@@ -567,6 +597,14 @@ impl EngineBuilder {
     /// Override just the method kind.
     pub fn method(mut self, kind: MethodKind) -> EngineBuilder {
         self.method.kind = kind;
+        self
+    }
+
+    /// Cross-request pattern cache knobs (`serve.pattern_cache`);
+    /// disabled by default, consumed only by SharePrefill.
+    pub fn pattern_cache(mut self, cfg: PatternCacheConfig)
+                         -> EngineBuilder {
+        self.pattern_cache = cfg;
         self
     }
 
@@ -585,9 +623,19 @@ impl EngineBuilder {
         } else {
             None
         };
+        let cache = if self.method.kind == MethodKind::SharePrefill
+            && self.pattern_cache.enabled {
+            Some(Rc::new(RefCell::new(
+                PatternCache::new(self.pattern_cache.clone()))))
+        } else {
+            None
+        };
         let strategy = build_strategy(&self.method, spec.num_layers,
-                                      spec.num_heads, clusters);
-        Engine::new(self.registry, &self.model, strategy)
+                                      spec.num_heads, clusters,
+                                      cache.clone());
+        let mut engine = Engine::new(self.registry, &self.model, strategy)?;
+        engine.pattern_cache = cache;
+        Ok(engine)
     }
 }
 

@@ -138,6 +138,72 @@ mod tests {
     }
 
     #[test]
+    fn failed_alloc_is_all_or_nothing() {
+        // an over-ask must not partially drain the free list — the
+        // scheduler's re-queue path relies on the allocator being
+        // unchanged after a refused allocation
+        let mut a = KvAllocator::new(4);
+        let held = a.alloc(3).unwrap();
+        assert!(a.alloc(2).is_err());
+        assert_eq!(a.available(), 1, "failed alloc must not consume");
+        assert_eq!(a.used(), 3);
+        // the refused request succeeds verbatim once blocks free up —
+        // exactly the admission re-queue contract
+        a.release(&held).unwrap();
+        assert!(a.can_alloc(2));
+        let b = a.alloc(2).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(a.used(), 2);
+    }
+
+    #[test]
+    fn exhaustion_probe_matches_alloc() {
+        // can_alloc (the admission probe) must agree with alloc at the
+        // boundary, including the empty allocation
+        let mut a = KvAllocator::new(2);
+        assert!(a.can_alloc(0) && a.can_alloc(2) && !a.can_alloc(3));
+        let b = a.alloc(2).unwrap();
+        assert!(a.can_alloc(0) && !a.can_alloc(1));
+        assert!(a.alloc(1).is_err());
+        let empty = a.alloc(0).unwrap();
+        assert!(empty.is_empty());
+        a.release(&b).unwrap();
+        assert!(a.can_alloc(2));
+    }
+
+    #[test]
+    fn retain_of_free_block_errors() {
+        let mut a = KvAllocator::new(2);
+        let b = a.alloc(1).unwrap();
+        a.release(&b).unwrap();
+        assert!(a.retain(&b).is_err(), "retain of a free block");
+        // allocator must still be usable
+        assert_eq!(a.available(), 2);
+        assert!(a.alloc(2).is_ok());
+    }
+
+    #[test]
+    fn refcounted_release_protects_against_double_free() {
+        // one alloc + one retain = two owners; a third release is a
+        // double free and must be detected, not corrupt the free list
+        let mut a = KvAllocator::new(2);
+        let b = a.alloc(2).unwrap();
+        a.retain(&b).unwrap();
+        a.release(&b).unwrap();
+        assert_eq!(a.available(), 0, "still held by the second owner");
+        a.release(&b).unwrap();
+        assert_eq!(a.available(), 2);
+        assert!(a.release(&b).is_err(), "third release is a double free");
+        // conservation after the failed release: nothing double-freed
+        assert_eq!(a.available(), 2);
+        let c = a.alloc(2).unwrap();
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 2, "free list must hold unique blocks");
+    }
+
+    #[test]
     fn blocks_needed_math() {
         assert_eq!(KvAllocator::blocks_needed(64, 0, 2), 2);
         assert_eq!(KvAllocator::blocks_needed(65, 0, 2), 4);

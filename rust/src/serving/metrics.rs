@@ -23,6 +23,12 @@ pub struct Metrics {
     pub shared_heads: u64,
     pub vslash_heads: u64,
     pub query_aware_heads: u64,
+    /// Cross-request pattern cache outcomes per head (all zero with the
+    /// cache disabled): validated reuses, cold misses, and validation
+    /// failures (invalidations) that fell back to exact computation.
+    pub cache_hit_heads: u64,
+    pub cache_miss_heads: u64,
+    pub cache_rejected_heads: u64,
     /// Scheduling rounds that had (or could have had) work.
     pub rounds: u64,
     /// Round-budget tokens spent on decode steps (1 per token).
@@ -47,6 +53,21 @@ impl Metrics {
         self.shared_heads += stats.shared as u64;
         self.vslash_heads += stats.vslash as u64;
         self.query_aware_heads += stats.query_aware as u64;
+        self.cache_hit_heads += stats.cache_hits as u64;
+        self.cache_miss_heads += stats.cache_misses as u64;
+        self.cache_rejected_heads += stats.cache_rejected as u64;
+    }
+
+    /// Fraction of cache-consulting heads that reused a cached pattern;
+    /// 0.0 before any cache-on prefill completed.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hit_heads + self.cache_miss_heads
+            + self.cache_rejected_heads;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hit_heads as f64 / total as f64
+        }
     }
 
     /// Account one scheduling round's budget spend: `decode` tokens on
@@ -99,6 +120,8 @@ impl Metrics {
              queue:   mean {:.2} ms\n\
              density: mean {:.3} (computed/causal blocks)\n\
              patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
+             pattern cache: {} hits, {} misses, {} invalidated \
+             ({:.0}% hit rate)\n\
              rounds:  {} (budget occupancy: {:.0}% decode, {:.0}% \
              prefill, {:.0}% idle)\n\
              prefill throughput: {:.0} tok/s",
@@ -116,6 +139,8 @@ impl Metrics {
             self.density.mean(),
             self.dense_heads, self.shared_heads, self.vslash_heads,
             self.query_aware_heads,
+            self.cache_hit_heads, self.cache_miss_heads,
+            self.cache_rejected_heads, self.cache_hit_rate() * 100.0,
             self.rounds, occ_d * 100.0, occ_p * 100.0, occ_i * 100.0,
             self.prefill_throughput(),
         )
@@ -145,6 +170,24 @@ mod tests {
         assert!(r.contains("budget occupancy"));
         assert!(m.prefill_throughput() > 0.0);
         assert!((m.density.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_rates_in_report() {
+        let mut m = Metrics::new();
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        let mut s = PrefillStats::default();
+        s.cache_hits = 3;
+        s.cache_misses = 1;
+        m.record_prefill(&s);
+        let mut s2 = PrefillStats::default();
+        s2.cache_rejected = 2;
+        m.record_prefill(&s2);
+        assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("pattern cache: 3 hits, 1 misses, 2 \
+                            invalidated (50% hit rate)"),
+                "cache line missing from report: {r}");
     }
 
     #[test]

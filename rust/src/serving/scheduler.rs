@@ -39,6 +39,16 @@
 //! get a terminal `Rejected` event — clients never hang, and the
 //! [`RejectReason`] tells them whether the condition was transient.
 //!
+//! The cross-request pattern cache needs nothing scheduler-specific to
+//! stay safe under interleaved prefills: warm candidates are
+//! snapshotted per request inside `begin_prefill` and publication
+//! happens inside `start_decode` (the `PrefillDone` moment), both of
+//! which this scheduler already serializes through the single engine.
+//! Cancelled sessions drop their `PrefillTask` without reaching
+//! `start_decode`, so a half-done prefill never publishes.  Per-head
+//! cache outcomes ride `PrefillStats` into [`Metrics`]
+//! (hit/miss/invalidation rates in the report).
+//!
 //! [`PatternState`]: crate::methods::PatternState
 
 use anyhow::Result;
@@ -538,6 +548,30 @@ mod tests {
             .filter(|e| matches!(e, Event::Done { .. }))
             .count();
         assert_eq!(dones, 3);
+    }
+
+    #[test]
+    fn repeat_workload_hits_pattern_cache_in_metrics() {
+        // serial prefills: the second same-length request begins only
+        // after the first published at PrefillDone, so it runs warm and
+        // the hit/miss rates surface in the scheduler's metrics
+        let cfg = ServeConfig {
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(4).with_pattern_cache();
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        sched.submit(Request::new(0, vec![7; 256], 1), EventSink::null());
+        sched.submit(Request::new(1, vec![7; 256], 1), EventSink::null());
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert_eq!(sched.metrics.requests_completed, 2);
+        assert_eq!(sched.metrics.cache_miss_heads, 4, "first request cold");
+        assert_eq!(sched.metrics.cache_hit_heads, 4, "second request warm");
+        assert!(sched.metrics.cache_hit_rate() > 0.0);
+        assert!(sched.metrics.report().contains("pattern cache:"));
+        assert_eq!(sched.kv.used(), 0);
     }
 
     #[test]

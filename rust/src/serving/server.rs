@@ -191,6 +191,13 @@ impl ServerBuilder {
         self
     }
 
+    /// Toggle the cross-request pattern cache (keeps the other
+    /// `serve.pattern_cache` knobs).
+    pub fn pattern_cache(mut self, enabled: bool) -> ServerBuilder {
+        self.config.serve.pattern_cache.enabled = enabled;
+        self
+    }
+
     /// Spawn with the real artifact-backed engine (built on the worker
     /// thread via [`EngineBuilder`]).
     pub fn spawn(self) -> ServerHandle {
@@ -200,6 +207,7 @@ impl ServerBuilder {
             let registry = crate::eval::open_registry(&config)?;
             let engine = EngineBuilder::new(registry, &model)
                 .method_config(config.method.clone())
+                .pattern_cache(config.serve.pattern_cache.clone())
                 .build()?;
             Ok((Scheduler::new(&serve), engine))
         })

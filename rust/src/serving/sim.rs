@@ -9,9 +9,15 @@
 //! artifacts (and the PJRT runtime) are unavailable.
 
 use anyhow::{bail, Result};
+use std::collections::HashSet;
 
 use super::engine::{EngineCore, PrefillStats};
 use crate::BLOCK_SIZE;
+
+/// Fraction (percent) of the cold per-chunk compute a warm-cache
+/// prefill pays in the simulation: reusing cached pivotal patterns
+/// skips the dense bootstrap heads, the dominant prefill cost.
+const SIM_WARM_COST_PCT: u64 = 40;
 
 pub struct SimEngine {
     layers: usize,
@@ -23,12 +29,23 @@ pub struct SimEngine {
     /// coordinator benches measure realistic wall-clock TTFT ordering
     /// (e.g. short prompts overtaking a long prefill) without artifacts.
     ns_per_token_layer: u64,
+    /// Simulated cross-request pattern cache: the seq buckets whose
+    /// patterns a *completed* prefill already published (`None` = cache
+    /// off).  Mirrors the real cache's contract: warmth is snapshotted
+    /// at `begin_prefill`, publication happens only at completion, so
+    /// interleaved prefills never observe half-built state and
+    /// cancelled prefills never publish.
+    warm_buckets: Option<HashSet<usize>>,
 }
 
 pub struct SimPrefill {
     prompt_len: usize,
     layers_done: usize,
     layers_total: usize,
+    /// Snapshotted at `begin_prefill`: this bucket was already served.
+    warm: bool,
+    /// Wall-clock µs actually spent spinning in `prefill_chunk`.
+    spent_us: u64,
 }
 
 pub struct SimDecode {
@@ -45,6 +62,7 @@ impl SimEngine {
             layers: layers.max(1),
             max_prompt: usize::MAX,
             ns_per_token_layer: 0,
+            warm_buckets: None,
         }
     }
 
@@ -57,6 +75,19 @@ impl SimEngine {
     pub fn with_work(mut self, ns_per_token_layer: u64) -> SimEngine {
         self.ns_per_token_layer = ns_per_token_layer;
         self
+    }
+
+    /// Enable the simulated cross-request pattern cache: repeat
+    /// length-bucket traffic runs warm (reduced simulated compute,
+    /// cache-hit stats), first-of-bucket requests run exactly as with
+    /// the cache off.
+    pub fn with_pattern_cache(mut self) -> SimEngine {
+        self.warm_buckets = Some(HashSet::new());
+        self
+    }
+
+    fn bucket_of(prompt_len: usize) -> usize {
+        prompt_len.div_ceil(BLOCK_SIZE).max(1) * BLOCK_SIZE
     }
 }
 
@@ -73,10 +104,14 @@ impl EngineCore for SimEngine {
             bail!("prompt of {} tokens exceeds max bucket {}",
                   tokens.len(), self.max_prompt);
         }
+        let warm = self.warm_buckets.as_ref()
+            .is_some_and(|w| w.contains(&Self::bucket_of(tokens.len())));
         Ok(SimPrefill {
             prompt_len: tokens.len(),
             layers_done: 0,
             layers_total: self.layers,
+            warm,
+            spent_us: 0,
         })
     }
 
@@ -87,12 +122,16 @@ impl EngineCore for SimEngine {
             (t.layers_done + max_layers.max(1)).min(t.layers_total);
         if self.ns_per_token_layer > 0 {
             let advanced = (t.layers_done - before) as u64;
-            let ns = advanced * t.prompt_len as u64
+            let mut ns = advanced * t.prompt_len as u64
                 * self.ns_per_token_layer;
+            if t.warm {
+                ns = ns * SIM_WARM_COST_PCT / 100;
+            }
             let t0 = std::time::Instant::now();
             while (t0.elapsed().as_nanos() as u64) < ns {
                 std::hint::spin_loop();
             }
+            t.spent_us += t0.elapsed().as_micros() as u64;
         }
         Ok(t.layers_done >= t.layers_total)
     }
@@ -105,11 +144,29 @@ impl EngineCore for SimEngine {
                     -> Result<(SimDecode, PrefillStats)> {
         let nb = t.prompt_len.div_ceil(BLOCK_SIZE).max(1);
         let causal = nb * (nb + 1) / 2 * t.layers_total;
+        let cache_on = self.warm_buckets.is_some();
+        // PrefillDone is the publish point, exactly as in the real
+        // engine: a cancelled prefill never warms the bucket.
+        if let Some(w) = self.warm_buckets.as_mut() {
+            w.insert(Self::bucket_of(t.prompt_len));
+        }
         let stats = PrefillStats {
-            latency_us: 1,
-            blocks_computed: causal.div_ceil(2),
+            latency_us: 1 + t.spent_us,
+            // warm prefills skip the pivotal bootstrap heads, so fewer
+            // causal blocks are computed than on the cold path
+            blocks_computed: if t.warm {
+                causal.div_ceil(4)
+            } else {
+                causal.div_ceil(2)
+            },
             blocks_total: causal,
             shared: t.layers_total,
+            cache_hits: if t.warm { t.layers_total } else { 0 },
+            cache_misses: if cache_on && !t.warm {
+                t.layers_total
+            } else {
+                0
+            },
             ..Default::default()
         };
         Ok((SimDecode {
@@ -175,5 +232,64 @@ mod tests {
         // 1 layer × 100 tokens × 1µs = 100µs minimum
         assert!(t0.elapsed().as_micros() >= 100);
         assert!(e.prefill_chunk(&mut t, 1).unwrap());
+    }
+
+    /// One prefill through completion; returns its stats.
+    fn run_one(e: &mut SimEngine, len: usize) -> PrefillStats {
+        let mut t = e.begin_prefill(&vec![1; len]).unwrap();
+        while !e.prefill_chunk(&mut t, 1).unwrap() {}
+        let (_, stats) = e.start_decode(t, 0).unwrap();
+        stats
+    }
+
+    #[test]
+    fn pattern_cache_warms_repeat_buckets_only() {
+        let mut e = SimEngine::new(4).with_pattern_cache();
+        let cold = run_one(&mut e, 256);
+        assert_eq!(cold.cache_hits, 0);
+        assert_eq!(cold.cache_misses, 4, "cold request misses per layer");
+        let warm = run_one(&mut e, 256);
+        assert_eq!(warm.cache_hits, 4, "repeat bucket must run warm");
+        assert_eq!(warm.cache_misses, 0);
+        assert!(warm.blocks_computed < cold.blocks_computed,
+                "warm prefill must compute fewer blocks");
+        // a different length bucket is still cold
+        let other = run_one(&mut e, 512);
+        assert_eq!(other.cache_hits, 0);
+    }
+
+    #[test]
+    fn pattern_cache_off_is_bit_identical() {
+        let mut off = SimEngine::new(4);
+        let mut on = SimEngine::new(4).with_pattern_cache();
+        let a = run_one(&mut off, 256);
+        let b = run_one(&mut on, 256); // first of its bucket: cold
+        assert_eq!(a.blocks_computed, b.blocks_computed);
+        assert_eq!(a.blocks_total, b.blocks_total);
+        assert_eq!(a.latency_us, b.latency_us);
+        assert_eq!((a.dense, a.shared, a.vslash),
+                   (b.dense, b.shared, b.vslash));
+        assert_eq!(b.cache_hits, 0);
+    }
+
+    #[test]
+    fn cancelled_prefill_never_publishes() {
+        let mut e = SimEngine::new(4).with_pattern_cache();
+        // a prefill advanced but dropped before start_decode (cancel)
+        let mut t = e.begin_prefill(&[1; 256]).unwrap();
+        let _ = e.prefill_chunk(&mut t, 2).unwrap();
+        drop(t);
+        let next = run_one(&mut e, 256);
+        assert_eq!(next.cache_hits, 0,
+                   "cancelled prefill must not warm its bucket");
+    }
+
+    #[test]
+    fn warm_prefill_spends_less_simulated_compute() {
+        let mut e = SimEngine::new(2).with_work(2_000).with_pattern_cache();
+        let cold = run_one(&mut e, 128);
+        let warm = run_one(&mut e, 128);
+        assert!(warm.latency_us < cold.latency_us,
+                "warm {} !< cold {}", warm.latency_us, cold.latency_us);
     }
 }

@@ -1,0 +1,286 @@
+//! Randomized serving fuzz: seeded random interleavings of submit /
+//! cancel / scheduling rounds / shutdown-drain over the artifact-free
+//! `SimEngine`, across prefill-concurrency levels and adversarial
+//! configs (tiny KV pools, tiny budgets, full queues, empty and
+//! oversized prompts).
+//!
+//! Invariants checked on every script:
+//!
+//! * every submitted session receives **exactly one terminal event**,
+//!   and it is the last event on its stream;
+//! * no KV blocks leak once the scheduler drains;
+//! * the scheduler's request accounting adds up (done + rejected +
+//!   cancelled = submitted);
+//! * replaying the **identical script with the pattern cache on**
+//!   produces a bit-identical event stream (same order, same tokens,
+//!   same terminals), and the first-completed (cold) prefill reports
+//!   bit-identical block accounting — the cache may only change *warm*
+//!   requests' cost, never any request's output.
+//!
+//! The seed is fixed for reproducibility; override with
+//! `SHAREPREFILL_FUZZ_SEED=<u64>` to explore other schedules (CI pins
+//! it).  Each suite prints its case count and elapsed time.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use shareprefill::config::ServeConfig;
+use shareprefill::serving::scheduler::Scheduler;
+use shareprefill::serving::server;
+use shareprefill::serving::sim::SimEngine;
+use shareprefill::serving::{Event, EventSink, Request};
+use shareprefill::util::rng::Rng;
+
+const LAYERS: usize = 6;
+const MAX_PROMPT: usize = 512;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("SHAREPREFILL_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_2026)
+}
+
+/// One fuzz action.  Scripts are generated up front so the exact same
+/// interleaving can be replayed cache-off and cache-on.
+#[derive(Debug, Clone)]
+enum Op {
+    /// Submit a prompt of `len` tokens asking for `max_new` tokens
+    /// (len 0 → EmptyPrompt reject; len > MAX_PROMPT → EngineRefused).
+    Submit { len: usize, max_new: usize },
+    /// Cancel the `nth % submitted` session (may already be terminal —
+    /// that must be a no-op, never a second terminal event).
+    Cancel { nth: usize },
+    /// Run `n` scheduling rounds.
+    Rounds(usize),
+}
+
+fn gen_script(rng: &mut Rng, ops: usize) -> Vec<Op> {
+    (0..ops)
+        .map(|_| match rng.below(10) {
+            0..=4 => Op::Submit {
+                // bias toward valid prompts, keep the edge cases
+                len: match rng.below(8) {
+                    0 => 0,
+                    1 => MAX_PROMPT + 1 + rng.below(128),
+                    _ => 1 + rng.below(MAX_PROMPT),
+                },
+                max_new: rng.below(4),
+            },
+            5 | 6 => Op::Cancel { nth: rng.below(64) },
+            _ => Op::Rounds(1 + rng.below(3)),
+        })
+        .collect()
+}
+
+fn gen_config(rng: &mut Rng, max_prefills: usize) -> ServeConfig {
+    ServeConfig {
+        max_batch_tokens: *rng.choose(&[1usize, 64, 512, 8192]),
+        max_batch_requests: *rng.choose(&[1usize, 2, 8]),
+        queue_capacity: *rng.choose(&[1usize, 4, 256]),
+        decode_tokens: rng.below(4),
+        kv_blocks: *rng.choose(&[8usize, 64, 1024]),
+        chunk_layers: 1 + rng.below(3),
+        max_concurrent_prefills: max_prefills,
+        admit_retries: rng.below(4),
+        ..Default::default()
+    }
+}
+
+/// Order/content signature of an event, excluding timing and prefill
+/// stats (which legitimately differ warm vs cold).
+fn sig(e: &Event) -> String {
+    match e {
+        Event::PrefillProgress { id, layers_done, layers_total } => {
+            format!("prog:{id}:{layers_done}/{layers_total}")
+        }
+        Event::PrefillDone { id, .. } => format!("prefill-done:{id}"),
+        Event::Token { id, token, index } => {
+            format!("tok:{id}:{index}={token}")
+        }
+        Event::Done { id, response } => {
+            format!("done:{id}:{:?}", response.generated)
+        }
+        Event::Cancelled { id } => format!("cancel:{id}"),
+        Event::Rejected { id, reason } => {
+            format!("reject:{id}:{}", reason.kind())
+        }
+        Event::Error { id, .. } => format!("err:{id}"),
+    }
+}
+
+struct RunOutcome {
+    events: Vec<Event>,
+    submitted: u64,
+}
+
+/// Execute a script against a fresh scheduler + SimEngine, then drain
+/// (the shutdown path).  Checks the per-run invariants and returns the
+/// globally ordered event stream for cross-run comparison.
+fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool)
+              -> RunOutcome {
+    let mut engine = SimEngine::new(LAYERS).with_max_prompt(MAX_PROMPT);
+    if cache_on {
+        engine = engine.with_pattern_cache();
+    }
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(cfg);
+    let (sink, rx) = EventSink::channel();
+    let mut next_id = 0u64;
+    for op in script {
+        match op {
+            Op::Submit { len, max_new } => {
+                let id = next_id;
+                next_id += 1;
+                sched.submit(Request::new(id, vec![1; *len], *max_new),
+                             sink.clone());
+            }
+            Op::Cancel { nth } => {
+                if next_id > 0 {
+                    sched.cancel((*nth as u64) % next_id);
+                }
+            }
+            Op::Rounds(n) => {
+                for _ in 0..*n {
+                    sched.run_round(&mut engine).unwrap();
+                }
+            }
+        }
+    }
+    // shutdown: drain all in-flight work, as the server worker does
+    let mut guard = 0;
+    while sched.has_work() {
+        sched.run_round(&mut engine).unwrap();
+        guard += 1;
+        assert!(guard < 100_000, "scheduler failed to drain");
+    }
+    assert_eq!(sched.kv.used(), 0, "kv blocks leaked after drain");
+    drop(sink);
+    let events: Vec<Event> = rx.iter().collect();
+
+    // exactly one terminal per submitted session, and it ends the stream
+    let mut per_id: HashMap<u64, Vec<&Event>> = HashMap::new();
+    for e in &events {
+        per_id.entry(e.id()).or_default().push(e);
+    }
+    for id in 0..next_id {
+        let evs = per_id.get(&id)
+            .unwrap_or_else(|| panic!("session {id}: no events at all"));
+        let terminals = evs.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1, "session {id}: {terminals} terminals");
+        assert!(evs.last().unwrap().is_terminal(),
+                "session {id}: events after its terminal");
+    }
+    let accounted = sched.metrics.requests_completed
+        + sched.metrics.requests_rejected
+        + sched.metrics.requests_cancelled;
+    assert_eq!(accounted, next_id,
+               "request accounting does not add up");
+    RunOutcome { events, submitted: next_id }
+}
+
+/// Blocks accounting of the chronologically first `PrefillDone` — the
+/// first-completed prefill is necessarily cold (nothing was published
+/// before it), so cache-on and cache-off must agree bit-for-bit.
+fn first_prefill_blocks(events: &[Event])
+                        -> Option<(usize, usize, usize)> {
+    events.iter().find_map(|e| match e {
+        Event::PrefillDone { stats, .. } => Some((
+            stats.blocks_computed, stats.blocks_total, stats.cache_hits,
+        )),
+        _ => None,
+    })
+}
+
+#[test]
+fn fuzz_scheduler_interleavings() {
+    let t0 = Instant::now();
+    let base = fuzz_seed();
+    let mut cases = 0usize;
+    let mut sessions = 0u64;
+    for &concurrency in &[1usize, 2, 4] {
+        for case in 0..6u64 {
+            let mut rng =
+                Rng::new(base ^ ((concurrency as u64) << 32) ^ case);
+            let cfg = gen_config(&mut rng, concurrency);
+            let script = gen_script(&mut rng, 40);
+            let off = run_script(&script, &cfg, false);
+            let on = run_script(&script, &cfg, true);
+            // the cache must not change any session's observable output
+            let off_sigs: Vec<String> =
+                off.events.iter().map(sig).collect();
+            let on_sigs: Vec<String> = on.events.iter().map(sig).collect();
+            assert_eq!(off_sigs, on_sigs,
+                       "cache-on changed the event stream \
+                        (concurrency {concurrency}, case {case})");
+            // ... and the first (cold) prefill is bit-identical
+            let a = first_prefill_blocks(&off.events);
+            let b = first_prefill_blocks(&on.events);
+            assert_eq!(a, b, "first-request prefill accounting diverged");
+            if let Some((_, _, hits)) = b {
+                assert_eq!(hits, 0, "first-completed prefill ran warm?");
+            }
+            sessions += off.submitted;
+            cases += 1;
+        }
+    }
+    eprintln!("[fuzz] scheduler interleavings: {cases} cases, \
+               {sessions} sessions in {:?}", t0.elapsed());
+}
+
+/// Thread-level fuzz over the server front-end: random submit / cancel
+/// traffic, then `shutdown` — every session stream must end in exactly
+/// one terminal event and the report must come back.
+#[test]
+fn fuzz_server_submit_cancel_shutdown() {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(fuzz_seed() ^ 0xA5A5_A5A5);
+    let cases = 8usize;
+    for case in 0..cases {
+        let cfg = ServeConfig {
+            max_batch_tokens: *rng.choose(&[32usize, 256]),
+            decode_tokens: 1 + rng.below(4),
+            chunk_layers: 1,
+            max_concurrent_prefills: 1 + rng.below(3),
+            ..Default::default()
+        };
+        let cache_on = case % 2 == 0;
+        let handle = server::spawn(move || {
+            // deep layer stack: prefills span many rounds, so cancels
+            // land mid-flight
+            let engine = SimEngine::new(32);
+            let engine = if cache_on {
+                engine.with_pattern_cache()
+            } else {
+                engine
+            };
+            Ok((Scheduler::new(&cfg), engine))
+        });
+        let n = 3 + rng.below(6);
+        let sessions: Vec<_> = (0..n)
+            .map(|_| {
+                handle.submit(vec![1; 32 + rng.below(256)],
+                              1 + rng.below(4))
+            })
+            .collect();
+        for s in &sessions {
+            if rng.below(4) == 0 {
+                handle.cancel(s.id);
+            }
+        }
+        let report = handle.shutdown();
+        assert!(report.contains("requests:"),
+                "case {case}: bad report: {report}");
+        for s in sessions {
+            let id = s.id;
+            let events = s.collect();
+            let last = events.last()
+                .unwrap_or_else(|| panic!("session {id}: empty stream"));
+            assert!(last.is_terminal(),
+                    "session {id}: stream ended without a terminal");
+            assert_eq!(events.iter().filter(|e| e.is_terminal()).count(),
+                       1, "session {id}: exactly one terminal event");
+        }
+    }
+    eprintln!("[fuzz] server lifecycle: {cases} cases in {:?}",
+              t0.elapsed());
+}
