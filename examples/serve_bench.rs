@@ -3,12 +3,14 @@
 //! chunked prefill (interleaved with decode and with *other prefills*
 //! via continuous batching) -> per-token events — reporting per-request
 //! TTFT and throughput per method.  Results are recorded in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md; CI's `bench-smoke` job runs the deterministic
+//! SimEngine scenarios and archives the machine-readable trajectory.
 //!
-//! Three scenarios:
+//! Four scenarios:
 //!
 //! 1. **Per-method uniform stream** (needs `make artifacts`): the real
-//!    engine under concurrent equal-length prompts.
+//!    engine under concurrent equal-length prompts.  Skipped with
+//!    `--sim-only`.
 //! 2. **Mixed-length fairness** (artifact-free, `SimEngine` with
 //!    simulated per-token compute): one very long prompt plus a stream
 //!    of short prompts, run at `max_concurrent_prefills` 1 vs 4 — the
@@ -19,21 +21,89 @@
 //!    warm requests skip the pivotal bootstrap, so per-request prefill
 //!    cost drops after the first (cold) request and the metrics report
 //!    shows the cache hit rate.
+//! 4. **Worker scaling** (artifact-free): the same prompt stream at
+//!    `serve.workers` 1 / 2 / 4 — simulated prefill time must strictly
+//!    decrease (asserted; CI fails on a scaling regression) while the
+//!    outputs stay identical.
 //!
-//!   cargo run --release --example serve_bench [requests] [ctx]
+//!   cargo run --release --example serve_bench -- \
+//!       [requests] [ctx] [--sim-only] [--json BENCH_5.json]
+//!
+//! `--json` writes one row per SimEngine scenario (name, tokens/s,
+//! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
 
 use shareprefill::config::{MethodKind, ServeConfig};
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::sim::SimEngine;
-use shareprefill::serving::{server, ServerBuilder};
+use shareprefill::serving::{server, Event, ServerBuilder};
 use shareprefill::util::stats::Summary;
 use shareprefill::workloads::tasks::latency_prompt;
+
+/// One machine-readable result row (the `--json` schema).
+struct ScenarioRow {
+    name: String,
+    tokens_per_s: f64,
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    prefill_ms_mean: f64,
+    cache_hit_rate: f64,
+}
+
+/// Outcome of one drained session, pulled off its event stream.
+struct SessionOutcome {
+    ttft_ms: f64,
+    prefill_ms: f64,
+    cache_hits: usize,
+    cache_misses: usize,
+    cache_rejected: usize,
+}
+
+/// Drain a session's events into the numbers the scenarios report
+/// (`None` if it ended in anything but `Done`).
+fn drain_session(s: shareprefill::serving::SessionHandle)
+                 -> Option<SessionOutcome> {
+    let id = s.id;
+    let mut out = SessionOutcome {
+        ttft_ms: 0.0,
+        prefill_ms: 0.0,
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_rejected: 0,
+    };
+    let mut done = false;
+    for e in s.collect() {
+        match e {
+            Event::PrefillDone { stats, .. } => {
+                out.cache_hits += stats.cache_hits;
+                out.cache_misses += stats.cache_misses;
+                out.cache_rejected += stats.cache_rejected;
+            }
+            Event::Done { response, .. } => {
+                out.ttft_ms = response.ttft_us as f64 / 1e3;
+                out.prefill_ms = response.prefill_us as f64 / 1e3;
+                done = true;
+            }
+            Event::Rejected { reason, .. } => {
+                println!("req {id:3}: rejected ({})", reason.kind());
+            }
+            Event::Error { message, .. } => {
+                println!("req {id:3}: {message}");
+            }
+            _ => {}
+        }
+    }
+    done.then_some(out)
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
 
 /// Mixed-length fairness: 1 × `LONG_TOKENS` prompt submitted first, then
 /// `SHORTS` × `SHORT_TOKENS` prompts.  Coordinator-only (SimEngine), so
 /// it runs without artifacts; simulated compute makes TTFT ordering
 /// effects real wall-clock time.
-fn mixed_length_scenario(max_prefills: usize) {
+fn mixed_length_scenario(max_prefills: usize) -> ScenarioRow {
     const LONG_TOKENS: usize = 8192;
     const SHORT_TOKENS: usize = 128;
     const SHORTS: usize = 16;
@@ -48,6 +118,7 @@ fn mixed_length_scenario(max_prefills: usize) {
         max_concurrent_prefills: max_prefills,
         ..Default::default()
     };
+    let t0 = std::time::Instant::now();
     let handle = server::spawn(move || {
         Ok((Scheduler::new(&cfg),
             SimEngine::new(LAYERS).with_work(NS_PER_TOKEN_LAYER)))
@@ -58,20 +129,17 @@ fn mixed_length_scenario(max_prefills: usize) {
         .collect();
 
     let mut short_ttft = Summary::new();
+    let mut short_prefill = Vec::new();
     for s in shorts {
-        match s.wait() {
-            Ok(r) => short_ttft.add(r.ttft_us as f64 / 1e3),
-            Err(e) => println!("short request failed: {e:#}"),
+        if let Some(o) = drain_session(s) {
+            short_ttft.add(o.ttft_ms);
+            short_prefill.push(o.prefill_ms);
         }
     }
-    let long_ttft = match long.wait() {
-        Ok(r) => r.ttft_us as f64 / 1e3,
-        Err(e) => {
-            println!("long request failed: {e:#}");
-            f64::NAN
-        }
-    };
+    let long_ttft = drain_session(long)
+        .map_or(f64::NAN, |o| o.ttft_ms);
     let report = handle.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
     println!("== mixed-length fairness, max_concurrent_prefills = \
               {max_prefills} ==");
     println!("short ({SHORT_TOKENS} tok x{SHORTS}): ttft p50 {:8.2} ms, \
@@ -79,12 +147,20 @@ fn mixed_length_scenario(max_prefills: usize) {
              short_ttft.p50(), short_ttft.percentile(95.0));
     println!("long  ({LONG_TOKENS} tok x1):  ttft     {long_ttft:8.2} ms");
     println!("{report}\n");
+    ScenarioRow {
+        name: format!("mixed_length_c{max_prefills}"),
+        tokens_per_s: (LONG_TOKENS + SHORTS * SHORT_TOKENS) as f64 / wall,
+        ttft_p50_ms: short_ttft.p50(),
+        ttft_p95_ms: short_ttft.percentile(95.0),
+        prefill_ms_mean: mean(&short_prefill),
+        cache_hit_rate: 0.0,
+    }
 }
 
 /// Repeated-workload cache scenario: one prompt length served
 /// `REPEATS` times, cache off vs on (SimEngine, simulated compute,
 /// serial prefills so every repeat after the first runs warm).
-fn pattern_cache_scenario() {
+fn pattern_cache_scenario() -> Vec<ScenarioRow> {
     const TOKENS: usize = 2048;
     const REPEATS: usize = 8;
     const LAYERS: usize = 8;
@@ -99,6 +175,7 @@ fn pattern_cache_scenario() {
             max_concurrent_prefills: 1,
             ..Default::default()
         };
+        let t0 = std::time::Instant::now();
         let handle = server::spawn(move || {
             let engine = SimEngine::new(LAYERS)
                 .with_work(NS_PER_TOKEN_LAYER);
@@ -109,36 +186,128 @@ fn pattern_cache_scenario() {
             };
             Ok((Scheduler::new(&cfg), engine))
         });
-        let mut prefill_ms = Vec::new();
+        let mut outcomes = Vec::new();
         for _ in 0..REPEATS {
             // serial submits: each waits, so repeats always run warm
-            match handle.submit(vec![7; TOKENS], 2).wait() {
-                Ok(r) => prefill_ms.push(r.prefill_us as f64 / 1e3),
-                Err(e) => println!("request failed: {e:#}"),
+            if let Some(o) =
+                drain_session(handle.submit(vec![7; TOKENS], 2))
+            {
+                outcomes.push(o);
             }
         }
-        (prefill_ms, handle.shutdown())
+        let report = handle.shutdown();
+        (outcomes, report, t0.elapsed().as_secs_f64())
     };
 
     println!("== cross-request pattern cache, repeated workload \
               ({TOKENS} tok x{REPEATS}) ==");
-    let (off, _) = run(false);
-    let (on, report) = run(true);
-    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
-    println!("cache off: prefill mean {:8.2} ms", mean(&off));
-    if on.len() > 1 {
-        let (cold, warm) = (on[0], mean(&on[1..]));
+    let (off, _, wall_off) = run(false);
+    let (on, report, wall_on) = run(true);
+    let prefill_off: Vec<f64> = off.iter().map(|o| o.prefill_ms).collect();
+    let prefill_on: Vec<f64> = on.iter().map(|o| o.prefill_ms).collect();
+    println!("cache off: prefill mean {:8.2} ms", mean(&prefill_off));
+    if prefill_on.len() > 1 {
+        let (cold, warm) = (prefill_on[0], mean(&prefill_on[1..]));
         println!("cache on:  cold {cold:8.2} ms, warm mean {warm:8.2} ms \
                   ({:.2}x faster warm)", cold / warm);
     }
     println!("{report}\n");
+    let row = |name: &str, outcomes: &[SessionOutcome], wall: f64| {
+        let mut ttft = Summary::new();
+        let (mut hits, mut total) = (0usize, 0usize);
+        for o in outcomes {
+            ttft.add(o.ttft_ms);
+            hits += o.cache_hits;
+            total += o.cache_hits + o.cache_misses + o.cache_rejected;
+        }
+        ScenarioRow {
+            name: name.to_string(),
+            tokens_per_s: (outcomes.len() * TOKENS) as f64 / wall,
+            ttft_p50_ms: ttft.p50(),
+            ttft_p95_ms: ttft.percentile(95.0),
+            prefill_ms_mean: mean(&outcomes.iter()
+                .map(|o| o.prefill_ms)
+                .collect::<Vec<_>>()),
+            cache_hit_rate: if total == 0 {
+                0.0
+            } else {
+                hits as f64 / total as f64
+            },
+        }
+    };
+    vec![row("pattern_cache_off", &off, wall_off),
+         row("pattern_cache_on", &on, wall_on)]
 }
 
-fn main() -> anyhow::Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(6);
-    let ctx: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1024);
+/// Worker scaling: the identical prompt stream at `serve.workers`
+/// 1 / 2 / 4 — mean simulated prefill time must strictly decrease
+/// (more hardware, same work), which this function asserts so CI's
+/// bench-smoke job fails on a scaling regression.
+fn worker_scaling_scenario() -> Vec<ScenarioRow> {
+    const TOKENS: usize = 4096;
+    const REQUESTS: usize = 4;
+    const LAYERS: usize = 8;
+    // heavier simulated compute than the other scenarios: the strict
+    // w1 > w2 > w4 assert needs mean gaps (~6 ms+) that shared-runner
+    // scheduling noise cannot flip
+    const NS_PER_TOKEN_LAYER: u64 = 1_000;
 
+    println!("== worker scaling ({TOKENS} tok x{REQUESTS}, workers \
+              1/2/4) ==");
+    let mut rows = Vec::new();
+    let mut prev_mean = f64::INFINITY;
+    for workers in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            max_batch_tokens: 4096,
+            chunk_layers: 1,
+            decode_tokens: 2,
+            kv_blocks: 4096,
+            max_concurrent_prefills: 2,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let handle = server::spawn(move || {
+            Ok((Scheduler::new(&cfg),
+                SimEngine::new(LAYERS)
+                    .with_work(NS_PER_TOKEN_LAYER)
+                    .with_workers(workers)))
+        });
+        let sessions: Vec<_> = (0..REQUESTS)
+            .map(|_| handle.submit(vec![7; TOKENS], 2))
+            .collect();
+        let mut ttft = Summary::new();
+        let mut prefill = Vec::new();
+        for s in sessions {
+            if let Some(o) = drain_session(s) {
+                ttft.add(o.ttft_ms);
+                prefill.push(o.prefill_ms);
+            }
+        }
+        let _ = handle.shutdown();
+        let wall = t0.elapsed().as_secs_f64();
+        let prefill_mean = mean(&prefill);
+        println!("workers {workers}: prefill mean {prefill_mean:8.2} ms, \
+                  ttft p50 {:8.2} ms", ttft.p50());
+        assert!(prefill_mean < prev_mean,
+                "prefill time must strictly decrease with more workers \
+                 (workers {workers}: {prefill_mean:.2} ms !< \
+                 {prev_mean:.2} ms)");
+        prev_mean = prefill_mean;
+        rows.push(ScenarioRow {
+            name: format!("worker_scaling_w{workers}"),
+            tokens_per_s: (REQUESTS * TOKENS) as f64 / wall,
+            ttft_p50_ms: ttft.p50(),
+            ttft_p95_ms: ttft.percentile(95.0),
+            prefill_ms_mean: prefill_mean,
+            cache_hit_rate: 0.0,
+        });
+    }
+    println!();
+    rows
+}
+
+/// Per-method uniform stream over the real artifact-backed engine.
+fn real_engine_scenario(n: usize, ctx: usize) {
     for kind in [MethodKind::Flash, MethodKind::SharePrefill] {
         let handle = ServerBuilder::new().method(kind).spawn();
         let t0 = std::time::Instant::now();
@@ -173,14 +342,71 @@ fn main() -> anyhow::Result<()> {
         println!("wall {:.1}s for {ok} requests -> {:.0} prompt tok/s e2e\n",
                  wall, (ok * ctx) as f64 / wall);
     }
+}
 
+/// Render the rows as the `BENCH_5.json` artifact (no JSON serializer
+/// in the offline vendor set; the schema is flat enough to emit by
+/// hand).  Non-finite values are clamped to 0 so the output always
+/// parses.
+fn render_json(rows: &[ScenarioRow]) -> String {
+    let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
+    let mut s = String::from("{\n  \"pr\": 5,\n  \"scenarios\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \
+             \"ttft_p50_ms\": {:.3}, \"ttft_p95_ms\": {:.3}, \
+             \"prefill_ms_mean\": {:.3}, \"cache_hit_rate\": {:.4}}}{}\n",
+            r.name, fin(r.tokens_per_s), fin(r.ttft_p50_ms),
+            fin(r.ttft_p95_ms), fin(r.prefill_ms_mean),
+            fin(r.cache_hit_rate),
+            if i + 1 < rows.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut sim_only = false;
+    let mut json_path: Option<String> = None;
+    let mut positional: Vec<usize> = Vec::new();
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--sim-only" => sim_only = true,
+            "--json" => {
+                json_path = Some(it.next().ok_or_else(
+                    || anyhow::anyhow!("--json expects a path"))?);
+            }
+            other => {
+                if let Ok(v) = other.parse() {
+                    positional.push(v);
+                }
+            }
+        }
+    }
+    let n = positional.first().copied().unwrap_or(6);
+    let ctx = positional.get(1).copied().unwrap_or(1024);
+
+    if !sim_only {
+        real_engine_scenario(n, ctx);
+    }
+
+    let mut rows = Vec::new();
     // the fairness headline: short-prompt TTFT with prefill concurrency
     // off (serial, PR-2 behavior) vs on
-    mixed_length_scenario(1);
-    mixed_length_scenario(4);
-
+    rows.push(mixed_length_scenario(1));
+    rows.push(mixed_length_scenario(4));
     // the amortization headline: warm-cache prefill cost on a repeated
     // workload vs the cold/cache-off baseline
-    pattern_cache_scenario();
+    rows.extend(pattern_cache_scenario());
+    // the scaling headline: same work, more hardware -> strictly less
+    // simulated prefill time (asserted inside)
+    rows.extend(worker_scaling_scenario());
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, render_json(&rows))?;
+        println!("wrote {} scenario rows to {path}", rows.len());
+    }
     Ok(())
 }

@@ -3,6 +3,7 @@
 //! plus the packing that turns it into the L1 kernel's `(idx, valid)`
 //! budget tensors.
 
+use crate::exec::WorkerPool;
 use crate::runtime::Tensor;
 
 /// Block-sparse causal mask over an `nb × nb` grid.
@@ -166,6 +167,17 @@ impl BlockMask {
         }
         g
     }
+}
+
+/// Head-sliced entry point: one [`BlockMask::pack`] per `(mask, budget)`
+/// job, fanned out across the pool with head-indexed result slots —
+/// the per-head packing that precedes every budgeted L1 kernel call.
+pub fn pack_heads(pool: &WorkerPool, jobs: &[(&BlockMask, usize)])
+                  -> Vec<(Tensor, Tensor)> {
+    pool.fan_out(jobs.len(), |k| {
+        let (mask, budget) = jobs[k];
+        mask.pack(budget)
+    })
 }
 
 #[cfg(test)]

@@ -7,7 +7,8 @@ pub mod decide;
 pub mod pivotal;
 pub mod vslash;
 
-pub use blockmask::BlockMask;
+pub use blockmask::{pack_heads, BlockMask};
 pub use decide::{decide_pattern, Decision};
-pub use pivotal::{construct_pivotal, PivotalDict, PivotalEntry};
-pub use vslash::search_vslash;
+pub use pivotal::{construct_pivotal, scatter_abar_heads, PivotalDict,
+                  PivotalEntry};
+pub use vslash::{search_vslash, search_vslash_heads};

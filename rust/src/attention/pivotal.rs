@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 
+use crate::exec::WorkerPool;
 use crate::util::math::{cumulative_select, softmax_inplace, NEG_INF};
 
 use super::BlockMask;
@@ -75,6 +76,19 @@ pub fn scatter_abar(abar_slots: &[f32], idx: &[i32], valid: &[f32],
         }
     }
     full
+}
+
+/// Head-sliced entry point: one [`scatter_abar`] per publishing head,
+/// fanned out with head-indexed result slots.  Each job is the head's
+/// `(abar_slots, idx, valid, budget)` straight off the budgeted kernel
+/// output; result `k` is always job `k`'s full `[nb, nb]` map.
+pub fn scatter_abar_heads(pool: &WorkerPool, nb: usize,
+                          jobs: &[(&[f32], &[i32], &[f32], usize)])
+                          -> Vec<Vec<f32>> {
+    pool.fan_out(jobs.len(), |k| {
+        let (slots, idx, valid, budget) = jobs[k];
+        scatter_abar(slots, idx, valid, nb, budget)
+    })
 }
 
 #[cfg(test)]

@@ -8,6 +8,7 @@
 //! chosen vertical columns and slash diagonals, mapped to block
 //! granularity, forms the mask.
 
+use crate::exec::WorkerPool;
 use crate::util::math::cumulative_select;
 use crate::BLOCK_SIZE;
 
@@ -68,6 +69,24 @@ pub fn search_vslash(amap: &[f32], bs: usize, seq: usize, gamma: f32)
     }
     mask.ensure_diagonal();
     mask
+}
+
+/// Head-sliced entry point: one [`search_vslash`] per `(head, γ)` job,
+/// fanned out across the pool with head-indexed result slots (result
+/// `k` is always job `k`'s mask, so the worker count cannot reorder or
+/// change anything).
+///
+/// * `amap` — the full `[H, bs, seq]` vslash probe, flattened.
+/// * `jobs` — `(head index, gamma)` per head that needs a search.
+pub fn search_vslash_heads(pool: &WorkerPool, amap: &[f32],
+                           jobs: &[(usize, f32)], bs: usize, seq: usize)
+                           -> Vec<BlockMask> {
+    let per_head = bs * seq;
+    pool.fan_out(jobs.len(), |k| {
+        let (h, gamma) = jobs[k];
+        let head_map = &amap[h * per_head..(h + 1) * per_head];
+        search_vslash(head_map, bs, seq, gamma)
+    })
 }
 
 #[cfg(test)]
@@ -152,6 +171,36 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn head_fanout_matches_serial_per_head_searches() {
+        use crate::util::proptest::Gen;
+        let (bs, seq, heads) = (BLOCK_SIZE, 4 * BLOCK_SIZE, 5);
+        let q0 = seq - bs;
+        let mut g = Gen::from_seed(13);
+        let mut amap = vec![0f32; heads * bs * seq];
+        for h in 0..heads {
+            for r in 0..bs {
+                for k in 0..=q0 + r {
+                    amap[h * bs * seq + r * seq + k] = g.f32_in(0.0, 1.0);
+                }
+            }
+        }
+        let jobs: Vec<(usize, f32)> =
+            (0..heads).map(|h| (h, 0.5 + 0.1 * h as f32)).collect();
+        let serial: Vec<BlockMask> = jobs.iter()
+            .map(|&(h, gamma)| {
+                search_vslash(&amap[h * bs * seq..(h + 1) * bs * seq],
+                              bs, seq, gamma)
+            })
+            .collect();
+        for workers in [1usize, 2, 4] {
+            let pool = crate::exec::WorkerPool::new(workers);
+            let got = search_vslash_heads(&pool, &amap, &jobs, bs, seq);
+            assert_eq!(got, serial,
+                       "fan-out at {workers} workers changed a mask");
+        }
     }
 
     #[test]

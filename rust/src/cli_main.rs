@@ -26,7 +26,7 @@ SUBCOMMANDS
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
             [--chunk-layers N] [--max-concurrent-prefills N]
-            [--admit-retries N] [--pattern-cache]
+            [--workers N] [--admit-retries N] [--pattern-cache]
             [--pattern-cache-capacity N] [--pattern-cache-validation T]
             [--pattern-cache-max-age N]
   eval      Table 1: InfiniteBench-sim suite
@@ -93,9 +93,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         .spawn();
     println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
               ({} layer(s)/prefill chunk, {} concurrent prefill(s), \
-              pattern cache {})",
+              {} worker(s), pattern cache {})",
              cfg.method.kind.name(), cfg.serve.chunk_layers,
-             cfg.serve.max_concurrent_prefills,
+             cfg.serve.max_concurrent_prefills, cfg.serve.workers,
              if cfg.serve.pattern_cache.enabled { "on" } else { "off" });
     let sessions: Vec<_> = (0..n)
         .map(|_| handle.submit(tasks::latency_prompt(ctx),

@@ -138,6 +138,12 @@ pub struct ServeConfig {
     /// Rounds a KV-starved request waits at the head of the queue before
     /// it is rejected (bounded re-queueing; clients never hang).
     pub admit_retries: usize,
+    /// Head-parallel prefill workers: per-head host work inside each
+    /// layer (vslash searches, mask packing, abar scatter, cache
+    /// validation probes) fans out across this many threads with
+    /// head-indexed result slots.  1 (the default) is the serial path;
+    /// any `N` is bit-identical to it — only faster.
+    pub workers: usize,
     /// Cross-request pivotal-pattern cache (SharePrefill only).
     pub pattern_cache: PatternCacheConfig,
 }
@@ -153,6 +159,7 @@ impl Default for ServeConfig {
             chunk_layers: 1,
             max_concurrent_prefills: 2,
             admit_retries: 4,
+            workers: 1,
             pattern_cache: PatternCacheConfig::default(),
         }
     }
@@ -220,6 +227,8 @@ impl Config {
                        self.serve.max_concurrent_prefills);
         self.serve.admit_retries =
             t.usize_or("serve.admit_retries", self.serve.admit_retries);
+        self.serve.workers =
+            t.usize_or("serve.workers", self.serve.workers).max(1);
         let pc = &mut self.serve.pattern_cache;
         pc.enabled = t.bool_or("serve.pattern_cache.enabled", pc.enabled);
         pc.capacity =
@@ -260,6 +269,8 @@ impl Config {
                           self.serve.max_concurrent_prefills)?;
         self.serve.admit_retries =
             args.usize_or("admit-retries", self.serve.admit_retries)?;
+        self.serve.workers =
+            args.usize_or("workers", self.serve.workers)?.max(1);
         if args.flag("pattern-cache") {
             self.serve.pattern_cache.enabled = true;
         }
@@ -288,6 +299,24 @@ mod tests {
         assert_eq!(c.serve.chunk_layers, 1);
         assert_eq!(c.serve.max_concurrent_prefills, 2);
         assert_eq!(c.serve.admit_retries, 4);
+        assert_eq!(c.serve.workers, 1, "serial prefill is the default");
+    }
+
+    #[test]
+    fn workers_knob_toml_and_cli() {
+        let t = tomlmini::parse("[serve]\nworkers = 4\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&t).unwrap();
+        assert_eq!(c.serve.workers, 4);
+        let args = Args::parse(
+            ["x", "--workers", "2"].map(String::from), &[]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.workers, 2);
+        // 0 clamps to the serial path instead of misconfiguring the pool
+        let zero = Args::parse(
+            ["x", "--workers", "0"].map(String::from), &[]).unwrap();
+        c.apply_args(&zero).unwrap();
+        assert_eq!(c.serve.workers, 1);
     }
 
     #[test]

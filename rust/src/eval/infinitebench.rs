@@ -41,7 +41,7 @@ impl Table1 {
         // only the tasks actually evaluated
         let names: Vec<&'static str> = TASK_NAMES.iter()
             .filter(|(_, n)| self.scores.values()
-                .next().map_or(false, |s| s.contains_key(n)))
+                .next().is_some_and(|s| s.contains_key(n)))
             .map(|(_, n)| *n)
             .collect();
         let mut rows = Vec::new();

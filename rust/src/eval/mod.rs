@@ -27,6 +27,7 @@ pub fn build_engine(registry: &Rc<Registry>, cfg: &Config, model: &str,
     EngineBuilder::new(registry.clone(), model)
         .method_config(cfg.method.clone())
         .method(kind)
+        .workers(cfg.serve.workers)
         .build()
 }
 pub mod golden;

@@ -1,0 +1,20 @@
+//! Execution substrate: the head-parallel worker pool.
+//!
+//! The paper's economy leaves per-head work inside one layer
+//! embarrassingly parallel: once a layer's plans are decided, each
+//! head's vertical-slash search, mask packing, abar scatter and
+//! cache-validation probe touches only that head's slice of the probe
+//! tensors.  [`WorkerPool`] shards exactly that work across OS threads
+//! with *deterministic head-indexed result slots*, so `workers = N` is
+//! bit-identical to `workers = 1` — the contract the strategy-, engine-
+//! and fuzz-level tests assert (see DESIGN.md "Execution model").
+//!
+//! What stays on the engine thread: everything touching the PJRT
+//! runtime (`Rc<Registry>` handles are deliberately not `Send`), the
+//! strategy's pivotal dictionary (its insertion order is part of the
+//! determinism contract), and the scheduler.  The pool only ever runs
+//! pure per-item closures over borrowed host slices.
+
+pub mod pool;
+
+pub use pool::{env_workers, PoolStats, WorkerPool};

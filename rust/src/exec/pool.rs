@@ -1,0 +1,243 @@
+//! The worker pool: per-layer scoped fan-out over `std::thread`.
+//!
+//! No queues, no long-lived workers, no new dependencies: each
+//! [`WorkerPool::fan_out`] call spawns at most `workers` scoped threads
+//! (`std::thread::scope`), hands each a contiguous shard of the item
+//! range, and merges the per-shard results back in index order.  The
+//! closure receives the *item index* and must be pure per item — under
+//! that contract the returned `Vec` is byte-identical for every worker
+//! count, which is what makes the parallel prefill path safe to enable
+//! in production without revalidating outputs.
+//!
+//! Scoped threads (rather than a persistent pool) keep the borrow
+//! story simple — closures borrow the caller's probe slices directly,
+//! with no `'static` bound, no `Arc`, and no channel plumbing — at the
+//! cost of one thread spawn per shard per layer, which is noise next
+//! to the per-head attention work being sharded.
+
+use std::cell::RefCell;
+
+/// Cumulative fan-out accounting (observability; never part of the
+/// determinism contract).  `span_items` sums the busiest shard's item
+/// count per round — the round's critical path in items — so
+/// `items / (span_items * workers)` is the count-based worker
+/// occupancy, and its shortfall from 1.0 is the shard imbalance (idle
+/// worker slots while the busiest shard finishes).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Fan-out rounds executed (serial rounds included).
+    pub rounds: u64,
+    /// Items processed across all rounds.
+    pub items: u64,
+    /// Sum over rounds of the busiest shard's item count.
+    pub span_items: u64,
+}
+
+impl PoolStats {
+    /// Count-based worker occupancy in `[0, 1]` for a pool of `workers`
+    /// threads; 1.0 when every round filled every worker slot evenly.
+    pub fn occupancy(&self, workers: usize) -> f64 {
+        let denom = self.span_items.saturating_mul(workers.max(1) as u64);
+        if denom == 0 {
+            return 1.0;
+        }
+        self.items as f64 / denom as f64
+    }
+}
+
+/// Worker count override consumed by the test harness (and the CI
+/// matrix): `SHAREPREFILL_WORKERS=<n>`.  Serving defaults stay at the
+/// config value — this is for exercising the parallel path on every
+/// test run, not for configuring servers.
+pub fn env_workers() -> Option<usize> {
+    std::env::var("SHAREPREFILL_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// A fixed-width pool of scoped fan-out workers.  `workers = 1` is the
+/// serial path (no threads are ever spawned); any `workers = N` is
+/// bit-identical to it by construction.
+#[derive(Debug)]
+pub struct WorkerPool {
+    workers: usize,
+    stats: RefCell<PoolStats>,
+}
+
+impl WorkerPool {
+    /// A pool of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        WorkerPool {
+            workers: workers.max(1),
+            stats: RefCell::new(PoolStats::default()),
+        }
+    }
+
+    /// The always-serial pool (the default everywhere a pool is
+    /// optional).
+    pub fn serial() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Snapshot of the cumulative fan-out accounting.
+    pub fn stats(&self) -> PoolStats {
+        *self.stats.borrow()
+    }
+
+    /// Compute `f(0), f(1), …, f(items - 1)` and return the results in
+    /// index order.  Shards the index range contiguously across up to
+    /// `workers` scoped threads; result slot `i` always holds `f(i)`,
+    /// so for pure `f` the output is independent of the worker count.
+    pub fn fan_out<T, F>(&self, items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if items == 0 {
+            return Vec::new();
+        }
+        let shards = self.workers.min(items);
+        let base = items / shards;
+        let extra = items % shards;
+        let busiest = base + usize::from(extra > 0);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.rounds += 1;
+            s.items += items as u64;
+            s.span_items += busiest as u64;
+        }
+        if shards <= 1 {
+            return (0..items).map(f).collect();
+        }
+        let mut shard_results: Vec<Vec<T>> = Vec::with_capacity(shards);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut handles = Vec::with_capacity(shards);
+            let mut start = 0usize;
+            for s in 0..shards {
+                let len = base + usize::from(s < extra);
+                let range = start..start + len;
+                start += len;
+                handles.push(scope.spawn(move || {
+                    range.map(f).collect::<Vec<T>>()
+                }));
+            }
+            debug_assert_eq!(start, items);
+            for h in handles {
+                // a worker panic is a caller bug (the closure must be
+                // pure); surface it on the calling thread unchanged
+                match h.join() {
+                    Ok(r) => shard_results.push(r),
+                    Err(e) => std::panic::resume_unwind(e),
+                }
+            }
+        });
+        shard_results.into_iter().flatten().collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_land_in_index_order() {
+        for workers in [1usize, 2, 3, 4, 9] {
+            let pool = WorkerPool::new(workers);
+            for items in [0usize, 1, 2, 5, 16, 33] {
+                let got = pool.fan_out(items, |i| i * i);
+                let want: Vec<usize> = (0..items).map(|i| i * i).collect();
+                assert_eq!(got, want,
+                           "workers {workers}, items {items}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // f32 work: the exact bytes must match, not just the values
+        let serial = WorkerPool::serial();
+        let par = WorkerPool::new(4);
+        let f = |i: usize| {
+            let mut acc = 0f32;
+            for k in 1..=(i + 7) {
+                acc += 1.0 / k as f32;
+            }
+            acc
+        };
+        let a = serial.fan_out(40, f);
+        let b = par.fan_out(40, f);
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb, "parallel fan-out changed f32 bits");
+    }
+
+    #[test]
+    fn workers_clamp_to_at_least_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        assert_eq!(pool.fan_out(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        let pool = WorkerPool::new(16);
+        assert_eq!(pool.fan_out(2, |i| i + 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn fallible_fan_out_selects_lowest_indexed_error() {
+        // fallible callers fan out Results and collect: the first
+        // error *in index order* wins, deterministic regardless of
+        // which shard hit one first
+        let pool = WorkerPool::new(4);
+        let r: Result<Vec<usize>, String> = pool
+            .fan_out(16, |i| {
+                if i == 11 || i == 3 {
+                    Err(format!("item {i} failed"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .into_iter()
+            .collect();
+        assert_eq!(r.unwrap_err(), "item 3 failed",
+                   "error selection must be deterministic");
+    }
+
+    #[test]
+    fn stats_track_rounds_items_and_span() {
+        let pool = WorkerPool::new(4);
+        // 6 items over 4 workers: shards (2, 2, 1, 1), busiest 2
+        pool.fan_out(6, |i| i);
+        let s = pool.stats();
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.items, 6);
+        assert_eq!(s.span_items, 2);
+        assert!((s.occupancy(4) - 0.75).abs() < 1e-12);
+        // serial pool: occupancy is always 1.0
+        let serial = WorkerPool::serial();
+        serial.fan_out(6, |i| i);
+        assert!((serial.stats().occupancy(1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_fan_out_records_nothing() {
+        let pool = WorkerPool::new(4);
+        let got: Vec<usize> = pool.fan_out(0, |i| i);
+        assert!(got.is_empty());
+        assert_eq!(pool.stats().rounds, 0);
+        assert!((pool.stats().occupancy(4) - 1.0).abs() < 1e-12);
+    }
+}

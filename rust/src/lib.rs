@@ -21,11 +21,18 @@
 //! See `DESIGN.md` for the system inventory and the experiment index
 //! mapping every table/figure of the paper to a module + bench target.
 
+// The clippy style baseline for the hand-written tree lives in the
+// root Cargo.toml `[lints.clippy]` table (so it also covers the
+// integration tests, benches and examples, which compile as separate
+// crates); CI runs `clippy --all-targets -- -D warnings` as a
+// blocking gate on top of it.
+
 pub mod attention;
 pub mod bench;
 pub mod clustering;
 pub mod config;
 pub mod eval;
+pub mod exec;
 pub mod linalg;
 pub mod methods;
 pub mod model;

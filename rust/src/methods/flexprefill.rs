@@ -13,9 +13,11 @@
 //! *confidently wrong* — it passes the test yet mis-ranks blocks.
 
 use anyhow::Result;
+use std::rc::Rc;
 
 use crate::attention::{search_vslash, BlockMask};
 use crate::config::MethodKind;
+use crate::exec::WorkerPool;
 use crate::util::math::{cumulative_select, js_distance};
 use crate::BLOCK_SIZE;
 
@@ -25,20 +27,37 @@ use super::{HeadPlan, NoState, PatternLabel, PatternState,
 pub struct FlexPrefill {
     gamma: f32,
     flex_tau: f64,
+    /// Engine-owned worker pool: each head's estimate/decision/search
+    /// is independent, so the whole per-head loop fans out (serial by
+    /// default; any width is bit-identical).
+    pool: Rc<WorkerPool>,
 }
 
 impl FlexPrefill {
     pub fn new(gamma: f32, flex_tau: f64) -> FlexPrefill {
-        FlexPrefill { gamma, flex_tau }
+        FlexPrefill {
+            gamma,
+            flex_tau,
+            pool: Rc::new(WorkerPool::serial()),
+        }
+    }
+
+    /// Attach the engine-owned worker pool.
+    pub fn with_pool(mut self, pool: Rc<WorkerPool>) -> FlexPrefill {
+        self.pool = pool;
+        self
     }
 
     /// Query-aware mask: per row-block, minimal cumulative-γ selection
-    /// over the pooled row distribution.
-    fn query_aware_mask(&self, pooled: &[f32], nb: usize) -> BlockMask {
+    /// over the pooled row distribution.  (Associated fn, not a method:
+    /// it runs inside the head-parallel fan-out, which must not borrow
+    /// the strategy — the strategy holds the non-`Sync` pool handle.)
+    fn query_aware_mask(gamma: f32, pooled: &[f32], nb: usize)
+                        -> BlockMask {
         let mut mask = BlockMask::empty(nb);
         for i in 0..nb {
             let row = &pooled[i * nb..(i + 1) * nb];
-            for j in cumulative_select(&row[..=i], self.gamma) {
+            for j in cumulative_select(&row[..=i], gamma) {
                 mask.insert(i, j);
             }
         }
@@ -82,14 +101,20 @@ impl PatternStrategy for FlexPrefill {
                   seq: usize, num_heads: usize, probes: &mut dyn Probes)
                   -> Result<Vec<HeadPlan>> {
         let nb = seq / BLOCK_SIZE;
-        let flex = probes.flex_map()?.clone();
-        let amap = probes.vslash_map()?;
-        let mut plans = Vec::with_capacity(num_heads);
-        for h in 0..num_heads {
-            let pooled = flex.index_axis0(h)?;
-            let pooled = pooled.as_f32()?;
-            let head_map = amap.index_axis0(h)?;
-            let head_map = head_map.as_f32()?;
+        let flex_t = probes.flex_map()?.clone();
+        let amap_t = probes.vslash_map()?.clone();
+        let flex = flex_t.as_f32()?;
+        let amap = amap_t.as_f32()?;
+        // each head's estimate check + mask construction is independent
+        // of every other head's: the whole loop fans out with
+        // head-indexed plan slots (scalars are copied out so the
+        // closure never borrows the strategy itself)
+        let gamma = self.gamma;
+        let flex_tau = self.flex_tau;
+        let plans = self.pool.fan_out(num_heads, |h| {
+            let pooled = &flex[h * nb * nb..(h + 1) * nb * nb];
+            let head_map =
+                &amap[h * BLOCK_SIZE * seq..(h + 1) * BLOCK_SIZE * seq];
             // estimated vs. true last-row distributions
             let est_last = {
                 let mut v = pooled[(nb - 1) * nb..].to_vec();
@@ -101,16 +126,16 @@ impl PatternStrategy for FlexPrefill {
             };
             let true_last = pool_last_row(head_map, BLOCK_SIZE, seq);
             let d = js_distance(&est_last, &true_last);
-            if d < self.flex_tau {
-                plans.push(HeadPlan::sparse(
-                    self.query_aware_mask(pooled, nb),
-                    PatternLabel::QueryAware));
+            if d < flex_tau {
+                HeadPlan::sparse(
+                    FlexPrefill::query_aware_mask(gamma, pooled, nb),
+                    PatternLabel::QueryAware)
             } else {
-                plans.push(HeadPlan::sparse(
-                    search_vslash(head_map, BLOCK_SIZE, seq, self.gamma),
-                    PatternLabel::VSlash));
+                HeadPlan::sparse(
+                    search_vslash(head_map, BLOCK_SIZE, seq, gamma),
+                    PatternLabel::VSlash)
             }
-        }
+        });
         Ok(plans)
     }
 }
@@ -158,6 +183,29 @@ mod tests {
         let plans = f.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
             .unwrap();
         assert!(plans.iter().all(|p| p.label == PatternLabel::VSlash));
+    }
+
+    #[test]
+    fn worker_pool_matches_serial_bitwise() {
+        let seq = 4 * BLOCK_SIZE;
+        let run = |workers: usize,
+                   probes_of: fn(usize, usize) -> FakeProbes| {
+            let mut probes = probes_of(3, seq);
+            let f = FlexPrefill::new(0.9, 0.1)
+                .with_pool(Rc::new(WorkerPool::new(workers)));
+            let mut st = f.begin_request(seq);
+            f.plan_layer(st.as_mut(), 0, seq, 3, &mut probes)
+                .unwrap()
+                .into_iter()
+                .map(|p| (p.label, p.mask))
+                .collect::<Vec<_>>()
+        };
+        for probes_of in [FakeProbes::consistent
+                              as fn(usize, usize) -> FakeProbes,
+                          FakeProbes::inconsistent] {
+            assert_eq!(run(1, probes_of), run(4, probes_of),
+                       "pool width changed a query-aware/vslash plan");
+        }
     }
 
     #[test]

@@ -5,9 +5,11 @@
 //! the pattern family never adapts (the limitation Section 3 discusses).
 
 use anyhow::Result;
+use std::rc::Rc;
 
-use crate::attention::search_vslash;
+use crate::attention::search_vslash_heads;
 use crate::config::MethodKind;
+use crate::exec::WorkerPool;
 use crate::BLOCK_SIZE;
 
 use super::{HeadPlan, NoState, PatternLabel, PatternState,
@@ -19,11 +21,24 @@ pub struct MInference {
     /// (`shareprefill calibrate-minference`), mirroring MInference's
     /// offline per-head config search.
     pub per_head_gamma: Option<Vec<f32>>,
+    /// Engine-owned worker pool for the per-head vslash searches
+    /// (serial by default; any width is bit-identical).
+    pool: Rc<WorkerPool>,
 }
 
 impl MInference {
     pub fn new(gamma: f32) -> MInference {
-        MInference { gamma, per_head_gamma: None }
+        MInference {
+            gamma,
+            per_head_gamma: None,
+            pool: Rc::new(WorkerPool::serial()),
+        }
+    }
+
+    /// Attach the engine-owned worker pool.
+    pub fn with_pool(mut self, pool: Rc<WorkerPool>) -> MInference {
+        self.pool = pool;
+        self
     }
 
     fn head_gamma(&self, layer: usize, head: usize, num_heads: usize)
@@ -52,16 +67,17 @@ impl PatternStrategy for MInference {
     fn plan_layer(&self, _state: &mut dyn PatternState, layer: usize,
                   seq: usize, num_heads: usize, probes: &mut dyn Probes)
                   -> Result<Vec<HeadPlan>> {
-        let amap = probes.vslash_map()?;
-        let bs = BLOCK_SIZE;
-        let mut plans = Vec::with_capacity(num_heads);
-        for h in 0..num_heads {
-            let head_map = amap.index_axis0(h)?;
-            let mask = search_vslash(head_map.as_f32()?, bs, seq,
-                                     self.head_gamma(layer, h, num_heads));
-            plans.push(HeadPlan::sparse(mask, PatternLabel::VSlash));
-        }
-        Ok(plans)
+        let amap_t = probes.vslash_map()?.clone();
+        let amap = amap_t.as_f32()?;
+        // every head searches; fan out with head-indexed slots
+        let jobs: Vec<(usize, f32)> = (0..num_heads)
+            .map(|h| (h, self.head_gamma(layer, h, num_heads)))
+            .collect();
+        let masks = search_vslash_heads(&self.pool, amap, &jobs,
+                                        BLOCK_SIZE, seq);
+        Ok(masks.into_iter()
+            .map(|m| HeadPlan::sparse(m, PatternLabel::VSlash))
+            .collect())
     }
 }
 
@@ -85,6 +101,24 @@ mod tests {
             assert!(mask.count() > 0);
             assert!(mask.density() <= 1.0);
         }
+    }
+
+    #[test]
+    fn worker_pool_matches_serial_bitwise() {
+        let seq = 4 * BLOCK_SIZE;
+        let run = |workers: usize| {
+            let mut probes = FakeProbes::structured(3, seq);
+            let mut m = MInference::new(0.9)
+                .with_pool(Rc::new(WorkerPool::new(workers)));
+            m.per_head_gamma = Some(vec![0.5, 0.9, 0.99]);
+            let mut st = m.begin_request(seq);
+            m.plan_layer(st.as_mut(), 0, seq, 3, &mut probes)
+                .unwrap()
+                .into_iter()
+                .map(|p| p.mask.unwrap())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4), "pool width changed a vslash mask");
     }
 
     #[test]

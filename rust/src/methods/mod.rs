@@ -27,6 +27,7 @@ use std::rc::Rc;
 
 use crate::attention::BlockMask;
 use crate::config::{MethodConfig, MethodKind};
+use crate::exec::WorkerPool;
 use crate::runtime::Tensor;
 
 pub use flash::Flash;
@@ -202,22 +203,30 @@ pub trait PatternStrategy {
 
 /// Instantiate the strategy for a method config.  `cache` is the
 /// engine-owned cross-request pattern cache; only SharePrefill consumes
-/// it (and only when the cache is enabled).
+/// it (and only when the cache is enabled).  `pool` is the engine-owned
+/// worker pool every per-head planning fan-out runs on (pass a serial
+/// pool — `WorkerPool::serial()` — for the single-threaded path; any
+/// width plans bit-identically).
 pub fn build_strategy(cfg: &MethodConfig, num_layers: usize,
                       num_heads: usize,
                       clusters: Option<Vec<Option<usize>>>,
-                      cache: Option<Rc<RefCell<PatternCache>>>)
+                      cache: Option<Rc<RefCell<PatternCache>>>,
+                      pool: Rc<WorkerPool>)
                       -> Box<dyn PatternStrategy> {
     match cfg.kind {
         MethodKind::Flash => Box::new(Flash::new()),
-        MethodKind::MInference => Box::new(MInference::new(cfg.gamma)),
+        MethodKind::MInference => {
+            Box::new(MInference::new(cfg.gamma).with_pool(pool))
+        }
         MethodKind::FlexPrefill => {
-            Box::new(FlexPrefill::new(cfg.gamma, cfg.flex_tau))
+            Box::new(FlexPrefill::new(cfg.gamma, cfg.flex_tau)
+                .with_pool(pool))
         }
         MethodKind::SharePrefill => Box::new(
             SharePrefill::new(cfg.tau, cfg.delta, cfg.gamma, num_layers,
                               num_heads, clusters)
-                .with_cache(cache)),
+                .with_cache(cache)
+                .with_pool(pool)),
     }
 }
 

@@ -28,9 +28,11 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::attention::{construct_pivotal, decide_pattern, search_vslash,
-                       Decision, PivotalDict, PivotalEntry};
+use crate::attention::{construct_pivotal, decide_pattern,
+                       search_vslash_heads, BlockMask, Decision,
+                       PivotalDict, PivotalEntry};
 use crate::config::MethodKind;
+use crate::exec::WorkerPool;
 use crate::BLOCK_SIZE;
 
 use super::pattern_cache::{probe_recall, PatternCache};
@@ -47,6 +49,11 @@ pub struct SharePrefill {
     /// Engine-owned cross-request pattern cache: consulted at
     /// `begin_request` (warm candidates), refreshed at `end_request`.
     cache: Option<Rc<RefCell<PatternCache>>>,
+    /// Engine-owned worker pool: per-head planning work (vslash
+    /// searches, cache-validation probes) fans out on it with
+    /// head-indexed slots, so any pool width plans bit-identically to
+    /// the serial default.
+    pool: Rc<WorkerPool>,
 }
 
 /// Per-request pattern state: the evolving pivotal dictionary plus the
@@ -111,7 +118,15 @@ impl SharePrefill {
         });
         assert_eq!(clusters.len(), num_layers * num_heads,
                    "cluster table must cover every (layer, head)");
-        SharePrefill { tau, delta, gamma, num_heads, clusters, cache: None }
+        SharePrefill {
+            tau,
+            delta,
+            gamma,
+            num_heads,
+            clusters,
+            cache: None,
+            pool: Rc::new(WorkerPool::serial()),
+        }
     }
 
     /// Attach the engine-owned cross-request pattern cache (`None` or a
@@ -120,6 +135,13 @@ impl SharePrefill {
     pub fn with_cache(mut self, cache: Option<Rc<RefCell<PatternCache>>>)
                       -> SharePrefill {
         self.cache = cache;
+        self
+    }
+
+    /// Attach the engine-owned worker pool (defaults to the serial
+    /// pool; any width is bit-identical — asserted in the tests below).
+    pub fn with_pool(mut self, pool: Rc<WorkerPool>) -> SharePrefill {
+        self.pool = pool;
         self
     }
 
@@ -163,12 +185,48 @@ impl PatternStrategy for SharePrefill {
         debug_assert_eq!(num_heads, self.num_heads);
         let st = state_mut::<SharePrefillState>(state);
         let ahat_t = probes.ahat()?.clone();
+        let ahat_all = ahat_t.as_f32()?;
         let nb = seq / BLOCK_SIZE;
+        // Cache-validation probes: a head's probe_recall against its
+        // warm candidate is a pure function of this layer's â probe.
+        // On a parallel pool all heads score speculatively up front
+        // (head-indexed slots; the serial decision pass below consumes
+        // a score only when the head actually reaches the Dense
+        // decision); on the default serial pool the score is computed
+        // lazily inside the Dense arm exactly as before — identical
+        // outcomes either way, no wasted work at workers = 1.  A
+        // bucket-mismatched candidate scores -inf (can never validate).
+        let score = |cand: &PivotalEntry, h: usize| -> f64 {
+            if cand.ahat_last.len() != nb || cand.mask.nb != nb {
+                return f64::NEG_INFINITY;
+            }
+            probe_recall(&ahat_all[h * nb..(h + 1) * nb], &cand.mask)
+        };
+        let speculative = st.cache_on && !st.warm.is_empty()
+            && self.pool.workers() > 1;
+        let recalls: Vec<Option<f64>> = if speculative {
+            let warm = &st.warm;
+            let cands: Vec<Option<&PivotalEntry>> = (0..num_heads)
+                .map(|h| {
+                    let cluster = if self.tau <= 0.0 {
+                        None
+                    } else {
+                        self.cluster_of(layer, h)
+                    };
+                    cluster.and_then(|c| warm.get(&c)).map(|rc| &**rc)
+                })
+                .collect();
+            self.pool
+                .fan_out(num_heads, |h| cands[h].map(|cand| score(cand, h)))
+        } else {
+            Vec::new()
+        };
         let mut plans = Vec::with_capacity(num_heads);
-        // vslash probe is fetched lazily only if some head needs it
+        // vslash probe is fetched lazily only if some head needs it;
+        // the searches themselves run in the head-parallel pass below
+        let mut vslash_heads: Vec<usize> = Vec::new();
         for h in 0..num_heads {
-            let ahat_h = ahat_t.index_axis0(h)?;
-            let ahat = ahat_h.as_f32()?;
+            let ahat = &ahat_all[h * nb..(h + 1) * nb];
             let cluster = if self.tau <= 0.0 {
                 // "w/o sharing" ablation: no cluster machinery at all.
                 None
@@ -182,16 +240,23 @@ impl PatternStrategy for SharePrefill {
                     // Before paying for the pivotal bootstrap, try the
                     // cross-request cache: a warm candidate is adopted
                     // only if its mask covers >= `validation` of this
-                    // head's observed probe mass — a stale pattern can
-                    // cost a rejection, never a silently-wrong mask.
+                    // head's observed probe mass (the pre-computed
+                    // recall score) — a stale pattern can cost a
+                    // rejection, never a silently-wrong mask.
                     let cache = if !st.cache_on {
                         CacheDecision::Off
                     } else {
-                        match info.cluster.and_then(|c| st.warm.get(&c)) {
-                            Some(cand) if cand.ahat_last.len() == nb
-                                && cand.mask.nb == nb
-                                && probe_recall(ahat, &cand.mask)
-                                    >= st.validation => CacheDecision::Hit,
+                        let recall = if speculative {
+                            recalls[h]
+                        } else {
+                            info.cluster
+                                .and_then(|c| st.warm.get(&c))
+                                .map(|rc| score(&**rc, h))
+                        };
+                        match recall {
+                            Some(r) if r >= st.validation => {
+                                CacheDecision::Hit
+                            }
                             Some(_) => CacheDecision::Rejected,
                             None => CacheDecision::Miss,
                         }
@@ -244,14 +309,30 @@ impl PatternStrategy for SharePrefill {
                 }
                 Decision::VSlash => {
                     st.stats.vslash += 1;
-                    let amap_t = probes.vslash_map()?.index_axis0(h)?;
-                    let mask = search_vslash(amap_t.as_f32()?, BLOCK_SIZE,
-                                             seq, self.gamma);
-                    plans.push(HeadPlan::sparse(mask, PatternLabel::VSlash));
+                    vslash_heads.push(h);
+                    // placeholder mask; the head-parallel search pass
+                    // below fills the real one into this slot
+                    plans.push(HeadPlan::sparse(BlockMask::empty(nb),
+                                                PatternLabel::VSlash));
                 }
             }
-            debug_assert!(plans.last().unwrap().mask.as_ref()
-                .map_or(true, |m| m.nb == nb));
+        }
+        // Vertical-slash searches — the expensive per-head planning
+        // work — fan out with head-indexed slots, so the pool width
+        // cannot reorder or change any mask.
+        if !vslash_heads.is_empty() {
+            let amap_t = probes.vslash_map()?.clone();
+            let amap = amap_t.as_f32()?;
+            let jobs: Vec<(usize, f32)> =
+                vslash_heads.iter().map(|&h| (h, self.gamma)).collect();
+            let masks = search_vslash_heads(&self.pool, amap, &jobs,
+                                            BLOCK_SIZE, seq);
+            for (&h, mask) in vslash_heads.iter().zip(masks) {
+                plans[h].mask = Some(mask);
+            }
+        }
+        for p in &plans {
+            debug_assert!(p.mask.as_ref().is_none_or(|m| m.nb == nb));
         }
         Ok(plans)
     }
@@ -639,6 +720,66 @@ mod tests {
             assert_eq!(a, b, "disabled cache changed the plans");
             assert_eq!(a, c, "cold enabled cache changed the plans");
         }
+    }
+
+    /// The tentpole property at the strategy level: any worker-pool
+    /// width plans bit-identically to the serial default — layers,
+    /// labels and masks — on both probe shapes.
+    #[test]
+    fn worker_pool_widths_plan_bit_identically() {
+        use crate::exec::{env_workers, WorkerPool};
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let layers = 2;
+        // .max(2): the parallel arm stays distinct even when the CI
+        // matrix pins SHAREPREFILL_WORKERS=1
+        let par = env_workers().unwrap_or(4).max(2);
+        let mk = |workers: usize| {
+            SharePrefill::new(0.2, 0.3, 0.9, layers, 2,
+                              Some(vec![Some(0); 4]))
+                .with_pool(Rc::new(WorkerPool::new(workers)))
+        };
+        for probes_of in [FakeProbes::flat
+                              as fn(usize, usize) -> FakeProbes,
+                          FakeProbes::structured] {
+            let mut pa = probes_of(2, seq);
+            let a = plan_request(&mk(1), seq, layers, nb, &mut pa, None);
+            let mut pb = probes_of(2, seq);
+            let b = plan_request(&mk(par), seq, layers, nb, &mut pb,
+                                 None);
+            assert_eq!(a, b, "pool width {par} changed the plans");
+        }
+    }
+
+    /// Cache-validation probes fan out too: the mixed hit/reject
+    /// outcome (head 0 rejects the warm candidate, head 1 adopts it)
+    /// and the DecisionStats are identical at any pool width.
+    #[test]
+    fn worker_pool_preserves_cache_decisions() {
+        use crate::exec::WorkerPool;
+        let seq = 4 * BLOCK_SIZE;
+        let nb = 4;
+        let run = |workers: usize| {
+            let mask = BlockMask::from_pairs(
+                nb, [(0, 0), (1, 1), (2, 2), (3, 1), (3, 2), (3, 3)]);
+            let cache = seeded_cache(seq, mask, 0.6);
+            let sp = SharePrefill::new(0.2, 1.01, 0.9, 1, 2,
+                                       Some(vec![Some(0), Some(0)]))
+                .with_cache(Some(cache))
+                .with_pool(Rc::new(WorkerPool::new(workers)));
+            let mut st = sp.begin_request(seq);
+            let mut probes = FakeProbes::structured(2, seq);
+            let plans = sp.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+                .unwrap();
+            let sig: Vec<_> = plans.iter()
+                .map(|p| (p.label, p.cache, p.publish, p.mask.clone()))
+                .collect();
+            (sig, stats_of(st.as_ref()).clone())
+        };
+        let serial = run(1);
+        assert_eq!(serial.0[0].1, CacheDecision::Rejected);
+        assert_eq!(serial.0[1].1, CacheDecision::Hit);
+        assert_eq!(serial, run(4), "pool width changed cache decisions");
     }
 
     /// Golden regression for SharePrefill decisions: the per-layer

@@ -34,9 +34,9 @@ use anyhow::{bail, Result};
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::attention::pivotal::scatter_abar;
-use crate::attention::BlockMask;
+use crate::attention::{pack_heads, scatter_abar_heads, BlockMask};
 use crate::config::{MethodConfig, MethodKind, PatternCacheConfig};
+use crate::exec::WorkerPool;
 use crate::methods::{build_strategy, CacheDecision, PatternCache,
                      PatternLabel, PatternState, PatternStrategy, Probes};
 use crate::model::Stages;
@@ -80,6 +80,17 @@ pub struct PrefillStats {
     pub cache_hits: usize,
     pub cache_misses: usize,
     pub cache_rejected: usize,
+    /// Worker-pool usage during this prefill: fan-out rounds, items
+    /// sharded across workers, and the summed busiest-shard item count
+    /// per round (the critical path — `pool_items / (pool_span_items ×
+    /// pool_workers)` is the count-based worker occupancy).  The
+    /// counts are deterministic for a given worker count; only the
+    /// span shrinks as workers grow — outputs never change.
+    pub pool_rounds: usize,
+    pub pool_items: usize,
+    pub pool_span_items: usize,
+    /// Pool width the prefill ran at (0 until the first layer runs).
+    pub pool_workers: usize,
     pub profiler: StageProfiler,
 }
 
@@ -238,7 +249,8 @@ impl<'a> Probes for LayerProbes<'a> {
 }
 
 /// The engine: one model + one strategy (+ the optional engine-owned
-/// cross-request pattern cache the strategy shares).
+/// cross-request pattern cache the strategy shares, + the worker pool
+/// per-head host work fans out on).
 pub struct Engine {
     pub stages: Stages,
     pub strategy: Box<dyn PatternStrategy>,
@@ -247,6 +259,13 @@ pub struct Engine {
     /// other `Rc` and does the actual lookup/publish.  Exposed for
     /// observability (hit/eviction stats in tests and tools).
     pub pattern_cache: Option<Rc<RefCell<PatternCache>>>,
+    /// Head-parallel worker pool (`serve.workers`; serial by default).
+    /// The strategy holds the other `Rc` for its planning fan-outs;
+    /// kernel dispatch itself stays on the engine thread (PJRT handles
+    /// are not `Send`), so the pool shards only pure host-side
+    /// per-head work — packing, scatter, searches, validation probes —
+    /// with head-indexed slots: any width is bit-identical to serial.
+    pub pool: Rc<WorkerPool>,
 }
 
 impl Engine {
@@ -256,6 +275,7 @@ impl Engine {
             stages: Stages::new(registry, model)?,
             strategy,
             pattern_cache: None,
+            pool: Rc::new(WorkerPool::serial()),
         })
     }
 
@@ -267,6 +287,10 @@ impl Engine {
         let spec = self.stages.spec.clone();
         let nb = seq / BLOCK_SIZE;
         let h = spec.num_heads;
+        // snapshot before planning: the strategy's fan-outs (vslash
+        // searches, cache-validation probes) run on the same shared
+        // pool and must land in this layer's accounting too
+        let pool_before = self.pool.stats();
 
         let qkv = self.stages.qkv(layer, &t.x, seq, &mut t.prof)?;
         let k_rep = self.stages.repeat_kv(&qkv.k)?;
@@ -288,21 +312,21 @@ impl Engine {
         };
         debug_assert_eq!(plans.len(), h);
 
-        // Per-head budgeted attention.
-        let mut attn_out = vec![0f32; h * seq * spec.head_dim];
-        for (head, plan) in plans.iter().enumerate() {
-            let (mask_owned, budget, label) = match &plan.mask {
-                None => (BlockMask::dense(nb), nb, plan.label),
+        // Resolve each head's (mask, budget) and account the plan
+        // stats (serial — cheap integer work whose order is part of
+        // the stats contract), then pack every head's (idx, valid)
+        // kernel tensors head-parallel with head-indexed slots.
+        let mut resolved: Vec<(BlockMask, usize)> = Vec::with_capacity(h);
+        for plan in &plans {
+            let (mask, budget) = match &plan.mask {
+                None => (BlockMask::dense(nb), nb),
                 Some(m) => {
-                    let b = spec.budget_bucket_for(seq, m.max_row());
-                    (m.clone(), b, plan.label)
+                    (m.clone(), spec.budget_bucket_for(seq, m.max_row()))
                 }
             };
-            t.stats.blocks_computed += mask_owned
-                .count()
-                .min(nb * (nb + 1) / 2);
+            t.stats.blocks_computed += mask.count().min(nb * (nb + 1) / 2);
             t.stats.blocks_total += nb * (nb + 1) / 2;
-            match label {
+            match plan.label {
                 PatternLabel::Dense => t.stats.dense += 1,
                 PatternLabel::Shared => t.stats.shared += 1,
                 PatternLabel::VSlash => t.stats.vslash += 1,
@@ -314,7 +338,21 @@ impl Engine {
                 CacheDecision::Miss => t.stats.cache_misses += 1,
                 CacheDecision::Rejected => t.stats.cache_rejected += 1,
             }
-            let (idx, valid) = mask_owned.pack(budget);
+            resolved.push((mask, budget));
+        }
+        let pack_jobs: Vec<(&BlockMask, usize)> =
+            resolved.iter().map(|(m, b)| (m, *b)).collect();
+        let packed = pack_heads(&self.pool, &pack_jobs);
+
+        // Budgeted per-head attention through the compiled kernel.
+        // Dispatch stays on this thread — the PJRT handles are not
+        // `Send` — while the host-side work around each call (packing
+        // above, abar scatter below) is head-parallel.
+        let mut attn_out = vec![0f32; h * seq * spec.head_dim];
+        let mut publishes: Vec<(usize, Tensor, usize)> = Vec::new();
+        for (head, plan) in plans.iter().enumerate() {
+            let budget = resolved[head].1;
+            let (idx, valid) = &packed[head];
             let qh = self.stages.head_q(&qkv.q, head)?;
             let kh = k_rep.index_axis0(head)?;
             let vh = v_rep.index_axis0(head)?;
@@ -325,17 +363,42 @@ impl Engine {
                      ..(head + 1) * seq * spec.head_dim]
                 .copy_from_slice(o.as_f32()?);
             if plan.publish {
-                let full = scatter_abar(
-                    abar.as_f32()?, idx.as_i32()?, valid.as_f32()?, nb,
-                    budget);
-                self.strategy.publish_abar(&mut *t.pattern, layer, head,
-                                           nb, &full);
+                publishes.push((head, abar, budget));
             }
         }
+
+        // Scatter the publishing (dense pivotal bootstrap) heads' abar
+        // maps head-parallel, then hand them to the strategy serially
+        // in head order — the pivotal dictionary's insertion order is
+        // part of the determinism contract, so only the pure scatter
+        // is sharded.
+        if !publishes.is_empty() {
+            let mut jobs: Vec<(&[f32], &[i32], &[f32], usize)> =
+                Vec::with_capacity(publishes.len());
+            for (head, abar, budget) in &publishes {
+                let (idx, valid) = &packed[*head];
+                jobs.push((abar.as_f32()?, idx.as_i32()?, valid.as_f32()?,
+                           *budget));
+            }
+            let fulls = scatter_abar_heads(&self.pool, nb, &jobs);
+            for ((head, _, _), full) in publishes.iter().zip(&fulls) {
+                self.strategy.publish_abar(&mut *t.pattern, layer, *head,
+                                           nb, full);
+            }
+        }
+
         let attn_t = Tensor::f32(vec![h, seq, spec.head_dim], attn_out);
         t.x = self.stages.post_attn(layer, attn_t, &t.x, seq, &mut t.prof)?;
         t.kv.push((qkv.k, qkv.v));
         t.layers_done += 1;
+        let pool_after = self.pool.stats();
+        t.stats.pool_rounds +=
+            (pool_after.rounds - pool_before.rounds) as usize;
+        t.stats.pool_items +=
+            (pool_after.items - pool_before.items) as usize;
+        t.stats.pool_span_items +=
+            (pool_after.span_items - pool_before.span_items) as usize;
+        t.stats.pool_workers = self.pool.workers();
         Ok(())
     }
 
@@ -576,6 +639,7 @@ pub struct EngineBuilder {
     model: String,
     method: MethodConfig,
     pattern_cache: PatternCacheConfig,
+    workers: usize,
 }
 
 impl EngineBuilder {
@@ -585,6 +649,7 @@ impl EngineBuilder {
             model: model.to_string(),
             method: MethodConfig::default(),
             pattern_cache: PatternCacheConfig::default(),
+            workers: 1,
         }
     }
 
@@ -605,6 +670,13 @@ impl EngineBuilder {
     pub fn pattern_cache(mut self, cfg: PatternCacheConfig)
                          -> EngineBuilder {
         self.pattern_cache = cfg;
+        self
+    }
+
+    /// Head-parallel worker count (`serve.workers`); 1 (the default)
+    /// is the serial path, and any `N` is bit-identical to it.
+    pub fn workers(mut self, n: usize) -> EngineBuilder {
+        self.workers = n.max(1);
         self
     }
 
@@ -630,11 +702,13 @@ impl EngineBuilder {
         } else {
             None
         };
+        let pool = Rc::new(WorkerPool::new(self.workers));
         let strategy = build_strategy(&self.method, spec.num_layers,
                                       spec.num_heads, clusters,
-                                      cache.clone());
+                                      cache.clone(), pool.clone());
         let mut engine = Engine::new(self.registry, &self.model, strategy)?;
         engine.pattern_cache = cache;
+        engine.pool = pool;
         Ok(engine)
     }
 }

@@ -39,6 +39,16 @@ pub struct Metrics {
     /// Round-budget tokens left unspent by budgeted work (exempt-chunk
     /// overshoot never masks unused budget).
     pub idle_budget_tokens: u64,
+    /// Head-parallel worker pool usage aggregated across prefills
+    /// (all zero until a prefill with pool accounting completes):
+    /// fan-out rounds, items sharded, and the summed busiest-shard
+    /// item count per round (the critical path in items).
+    pub pool_rounds: u64,
+    pub pool_items: u64,
+    pub pool_span_items: u64,
+    /// Pool width the engine runs at (max observed; 0 = unknown/serial
+    /// engines that report no pool usage).
+    pub pool_workers: u64,
 }
 
 impl Metrics {
@@ -56,6 +66,24 @@ impl Metrics {
         self.cache_hit_heads += stats.cache_hits as u64;
         self.cache_miss_heads += stats.cache_misses as u64;
         self.cache_rejected_heads += stats.cache_rejected as u64;
+        self.pool_rounds += stats.pool_rounds as u64;
+        self.pool_items += stats.pool_items as u64;
+        self.pool_span_items += stats.pool_span_items as u64;
+        self.pool_workers = self.pool_workers.max(stats.pool_workers as u64);
+    }
+
+    /// Count-based worker occupancy in `[0, 1]` across all recorded
+    /// prefills: items sharded / (critical-path items × pool width).
+    /// 1.0 with no recorded fan-outs (a serial engine is fully
+    /// occupied by definition); the shortfall from 1.0 is the per-round
+    /// shard imbalance — idle worker slots while the busiest shard
+    /// finishes.
+    pub fn worker_occupancy(&self) -> f64 {
+        let denom = self.pool_span_items * self.pool_workers.max(1);
+        if denom == 0 {
+            return 1.0;
+        }
+        self.pool_items as f64 / denom as f64
     }
 
     /// Fraction of cache-consulting heads that reused a cached pattern;
@@ -122,6 +150,8 @@ impl Metrics {
              patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
              pattern cache: {} hits, {} misses, {} invalidated \
              ({:.0}% hit rate)\n\
+             workers: {} ({} fan-out rounds, {} items, occupancy \
+             {:.0}%, imbalance {:.0}%)\n\
              rounds:  {} (budget occupancy: {:.0}% decode, {:.0}% \
              prefill, {:.0}% idle)\n\
              prefill throughput: {:.0} tok/s",
@@ -141,6 +171,9 @@ impl Metrics {
             self.query_aware_heads,
             self.cache_hit_heads, self.cache_miss_heads,
             self.cache_rejected_heads, self.cache_hit_rate() * 100.0,
+            self.pool_workers.max(1), self.pool_rounds, self.pool_items,
+            self.worker_occupancy() * 100.0,
+            (1.0 - self.worker_occupancy()) * 100.0,
             self.rounds, occ_d * 100.0, occ_p * 100.0, occ_i * 100.0,
             self.prefill_throughput(),
         )
@@ -155,11 +188,13 @@ mod tests {
     #[test]
     fn record_and_report() {
         let mut m = Metrics::new();
-        let mut s = PrefillStats::default();
-        s.latency_us = 5_000;
-        s.blocks_total = 10;
-        s.blocks_computed = 5;
-        s.shared = 3;
+        let s = PrefillStats {
+            latency_us: 5_000,
+            blocks_total: 10,
+            blocks_computed: 5,
+            shared: 3,
+            ..Default::default()
+        };
         m.record_prefill(&s);
         m.requests_completed = 1;
         m.prompt_tokens = 1024;
@@ -176,18 +211,43 @@ mod tests {
     fn cache_rates_in_report() {
         let mut m = Metrics::new();
         assert_eq!(m.cache_hit_rate(), 0.0);
-        let mut s = PrefillStats::default();
-        s.cache_hits = 3;
-        s.cache_misses = 1;
+        let s = PrefillStats {
+            cache_hits: 3,
+            cache_misses: 1,
+            ..Default::default()
+        };
         m.record_prefill(&s);
-        let mut s2 = PrefillStats::default();
-        s2.cache_rejected = 2;
+        let s2 = PrefillStats {
+            cache_rejected: 2,
+            ..Default::default()
+        };
         m.record_prefill(&s2);
         assert!((m.cache_hit_rate() - 0.5).abs() < 1e-12);
         let r = m.report();
         assert!(r.contains("pattern cache: 3 hits, 1 misses, 2 \
                             invalidated (50% hit rate)"),
                 "cache line missing from report: {r}");
+    }
+
+    #[test]
+    fn worker_occupancy_aggregates_pool_usage() {
+        let mut m = Metrics::new();
+        // no pool usage recorded: serial engines read as fully occupied
+        assert_eq!(m.worker_occupancy(), 1.0);
+        // 2 rounds of 6 items over 4 workers: span 2 per round
+        let s = PrefillStats {
+            pool_rounds: 2,
+            pool_items: 12,
+            pool_span_items: 4,
+            pool_workers: 4,
+            ..Default::default()
+        };
+        m.record_prefill(&s);
+        assert!((m.worker_occupancy() - 12.0 / 16.0).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("workers: 4 (2 fan-out rounds, 12 items"),
+                "worker line missing from report: {r}");
+        assert!(r.contains("occupancy 75%"), "occupancy wrong: {r}");
     }
 
     #[test]

@@ -191,6 +191,13 @@ impl ServerBuilder {
         self
     }
 
+    /// Head-parallel prefill workers (`serve.workers`; 1 = serial,
+    /// any `N` is bit-identical to it).
+    pub fn workers(mut self, n: usize) -> ServerBuilder {
+        self.config.serve.workers = n.max(1);
+        self
+    }
+
     /// Toggle the cross-request pattern cache (keeps the other
     /// `serve.pattern_cache` knobs).
     pub fn pattern_cache(mut self, enabled: bool) -> ServerBuilder {
@@ -208,6 +215,7 @@ impl ServerBuilder {
             let engine = EngineBuilder::new(registry, &model)
                 .method_config(config.method.clone())
                 .pattern_cache(config.serve.pattern_cache.clone())
+                .workers(config.serve.workers)
                 .build()?;
             Ok((Scheduler::new(&serve), engine))
         })

@@ -19,6 +19,17 @@ use crate::BLOCK_SIZE;
 /// skips the dense bootstrap heads, the dominant prefill cost.
 const SIM_WARM_COST_PCT: u64 = 40;
 
+/// Serial fraction (percent) of a simulated prefill chunk — the
+/// qkv/post-attn stages and kernel dispatch that stay on the engine
+/// thread in the real engine.  The remaining fraction is per-head work
+/// that scales with `workers` (Amdahl), so simulated prefill time
+/// strictly decreases as workers grow while outputs stay identical.
+const SIM_SERIAL_PCT: u64 = 20;
+
+/// Heads the simulated engine "shards" per layer (pool accounting
+/// only; SimEngine has no real heads).
+const SIM_HEADS: usize = 8;
+
 pub struct SimEngine {
     layers: usize,
     /// Prompts longer than this fail `begin_prefill`, mimicking the real
@@ -36,6 +47,11 @@ pub struct SimEngine {
     /// interleaved prefills never observe half-built state and
     /// cancelled prefills never publish.
     warm_buckets: Option<HashSet<usize>>,
+    /// Simulated head-parallel worker pool width.  Mirrors the real
+    /// pool's contract: tokens, events and block accounting are
+    /// bit-identical at every width — only the simulated per-chunk
+    /// compute shrinks (Amdahl over the per-head fraction).
+    workers: u64,
 }
 
 pub struct SimPrefill {
@@ -63,7 +79,16 @@ impl SimEngine {
             max_prompt: usize::MAX,
             ns_per_token_layer: 0,
             warm_buckets: None,
+            workers: 1,
         }
+    }
+
+    /// Simulate a head-parallel worker pool of width `n`: per-chunk
+    /// compute drops to `serial + parallel/n` of the serial cost, and
+    /// prefill stats report the pool usage — outputs are untouched.
+    pub fn with_workers(mut self, n: usize) -> SimEngine {
+        self.workers = n.max(1) as u64;
+        self
     }
 
     pub fn with_max_prompt(mut self, max_prompt: usize) -> SimEngine {
@@ -127,6 +152,11 @@ impl EngineCore for SimEngine {
             if t.warm {
                 ns = ns * SIM_WARM_COST_PCT / 100;
             }
+            // Amdahl over the per-head fraction: workers shard the
+            // parallel share, the serial share is untouched
+            ns = ns
+                * (SIM_SERIAL_PCT + (100 - SIM_SERIAL_PCT) / self.workers)
+                / 100;
             let t0 = std::time::Instant::now();
             while (t0.elapsed().as_nanos() as u64) < ns {
                 std::hint::spin_loop();
@@ -150,6 +180,7 @@ impl EngineCore for SimEngine {
         if let Some(w) = self.warm_buckets.as_mut() {
             w.insert(Self::bucket_of(t.prompt_len));
         }
+        let workers = self.workers as usize;
         let stats = PrefillStats {
             latency_us: 1 + t.spent_us,
             // warm prefills skip the pivotal bootstrap heads, so fewer
@@ -167,6 +198,12 @@ impl EngineCore for SimEngine {
             } else {
                 0
             },
+            // one simulated fan-out of SIM_HEADS per layer; span is
+            // the busiest shard — accounting only, outputs untouched
+            pool_rounds: t.layers_total,
+            pool_items: t.layers_total * SIM_HEADS,
+            pool_span_items: t.layers_total * SIM_HEADS.div_ceil(workers),
+            pool_workers: workers,
             ..Default::default()
         };
         Ok((SimDecode {
@@ -282,6 +319,43 @@ mod tests {
         let next = run_one(&mut e, 256);
         assert_eq!(next.cache_hits, 0,
                    "cancelled prefill must not warm its bucket");
+    }
+
+    #[test]
+    fn workers_change_no_output_only_accounting() {
+        let mut w1 = SimEngine::new(4);
+        let mut w4 = SimEngine::new(4).with_workers(4);
+        // identical tokens at both widths
+        let mut t1 = w1.begin_prefill(&[1; 256]).unwrap();
+        while !w1.prefill_chunk(&mut t1, 1).unwrap() {}
+        let (mut d1, a) = w1.start_decode(t1, 3).unwrap();
+        while w1.decode_step(&mut d1).unwrap().is_some() {}
+        let mut t4 = w4.begin_prefill(&[1; 256]).unwrap();
+        while !w4.prefill_chunk(&mut t4, 1).unwrap() {}
+        let (mut d4, b) = w4.start_decode(t4, 3).unwrap();
+        while w4.decode_step(&mut d4).unwrap().is_some() {}
+        assert_eq!(w1.generated(&d1), w4.generated(&d4),
+                   "worker count changed decoded tokens");
+        assert_eq!(a.blocks_computed, b.blocks_computed);
+        assert_eq!(a.blocks_total, b.blocks_total);
+        assert_eq!(a.latency_us, b.latency_us, "no simulated work: equal");
+        // only the pool accounting differs
+        assert_eq!(b.pool_workers, 4);
+        assert_eq!(a.pool_items, b.pool_items);
+        assert!(b.pool_span_items < a.pool_span_items,
+                "more workers must shorten the critical path");
+    }
+
+    #[test]
+    fn more_workers_spend_less_simulated_compute() {
+        let mut prev = u64::MAX;
+        for w in [1usize, 2, 4] {
+            let mut e = SimEngine::new(4).with_work(2_000).with_workers(w);
+            let s = run_one(&mut e, 256);
+            assert!(s.latency_us < prev,
+                    "workers {w}: {} not < {prev}", s.latency_us);
+            prev = s.latency_us;
+        }
     }
 
     #[test]

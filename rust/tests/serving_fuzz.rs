@@ -15,7 +15,11 @@
 //!   produces a bit-identical event stream (same order, same tokens,
 //!   same terminals), and the first-completed (cold) prefill reports
 //!   bit-identical block accounting — the cache may only change *warm*
-//!   requests' cost, never any request's output.
+//!   requests' cost, never any request's output;
+//! * replaying the identical script at a **different worker-pool
+//!   width** (1 vs `SHAREPREFILL_WORKERS`, default 4) also produces a
+//!   bit-identical event stream — the head-parallel pool may only
+//!   change wall-clock, never any request's output.
 //!
 //! The seed is fixed for reproducibility; override with
 //! `SHAREPREFILL_FUZZ_SEED=<u64>` to explore other schedules (CI pins
@@ -25,6 +29,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use shareprefill::config::ServeConfig;
+use shareprefill::exec::env_workers;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::server;
 use shareprefill::serving::sim::SimEngine;
@@ -33,6 +38,13 @@ use shareprefill::util::rng::Rng;
 
 const LAYERS: usize = 6;
 const MAX_PROMPT: usize = 512;
+
+/// The parallel arm of the worker-count dimension (the serial arm is
+/// always 1).  The CI matrix sets `SHAREPREFILL_WORKERS` to exercise
+/// both pool widths on every push.
+fn parallel_workers() -> usize {
+    env_workers().unwrap_or(4).max(2)
+}
 
 fn fuzz_seed() -> u64 {
     std::env::var("SHAREPREFILL_FUZZ_SEED")
@@ -117,9 +129,11 @@ struct RunOutcome {
 /// Execute a script against a fresh scheduler + SimEngine, then drain
 /// (the shutdown path).  Checks the per-run invariants and returns the
 /// globally ordered event stream for cross-run comparison.
-fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool)
-              -> RunOutcome {
-    let mut engine = SimEngine::new(LAYERS).with_max_prompt(MAX_PROMPT);
+fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool,
+              workers: usize) -> RunOutcome {
+    let mut engine = SimEngine::new(LAYERS)
+        .with_max_prompt(MAX_PROMPT)
+        .with_workers(workers);
     if cache_on {
         engine = engine.with_pattern_cache();
     }
@@ -197,14 +211,15 @@ fn fuzz_scheduler_interleavings() {
     let base = fuzz_seed();
     let mut cases = 0usize;
     let mut sessions = 0u64;
+    let par = parallel_workers();
     for &concurrency in &[1usize, 2, 4] {
         for case in 0..6u64 {
             let mut rng =
                 Rng::new(base ^ ((concurrency as u64) << 32) ^ case);
             let cfg = gen_config(&mut rng, concurrency);
             let script = gen_script(&mut rng, 40);
-            let off = run_script(&script, &cfg, false);
-            let on = run_script(&script, &cfg, true);
+            let off = run_script(&script, &cfg, false, 1);
+            let on = run_script(&script, &cfg, true, 1);
             // the cache must not change any session's observable output
             let off_sigs: Vec<String> =
                 off.events.iter().map(sig).collect();
@@ -219,7 +234,19 @@ fn fuzz_scheduler_interleavings() {
             if let Some((_, _, hits)) = b {
                 assert_eq!(hits, 0, "first-completed prefill ran warm?");
             }
-            sessions += off.submitted;
+            // the worker-count dimension: the same script at pool
+            // width `par` must produce a bit-identical event stream
+            // and bit-identical prefill block accounting — workers
+            // may only change wall-clock, never outputs
+            let wide = run_script(&script, &cfg, false, par);
+            let wide_sigs: Vec<String> =
+                wide.events.iter().map(sig).collect();
+            assert_eq!(off_sigs, wide_sigs,
+                       "workers={par} changed the event stream \
+                        (concurrency {concurrency}, case {case})");
+            assert_eq!(first_prefill_blocks(&wide.events), a,
+                       "workers={par} changed prefill block accounting");
+            sessions += off.submitted + wide.submitted;
             cases += 1;
         }
     }
@@ -244,10 +271,13 @@ fn fuzz_server_submit_cancel_shutdown() {
             ..Default::default()
         };
         let cache_on = case % 2 == 0;
+        // alternate pool widths so the thread-level fuzz exercises the
+        // parallel engine path too
+        let workers = if case % 2 == 0 { 1 } else { parallel_workers() };
         let handle = server::spawn(move || {
             // deep layer stack: prefills span many rounds, so cancels
             // land mid-flight
-            let engine = SimEngine::new(32);
+            let engine = SimEngine::new(32).with_workers(workers);
             let engine = if cache_on {
                 engine.with_pattern_cache()
             } else {

@@ -9,6 +9,7 @@
 //! always exactly one terminal event per session.
 
 use shareprefill::config::ServeConfig;
+use shareprefill::exec::env_workers;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::server;
 use shareprefill::serving::sim::SimEngine;
@@ -237,6 +238,68 @@ fn short_prompts_progress_when_long_chunk_exceeds_budget() {
             "long prompt must not starve");
     assert_eq!(sched.metrics.requests_completed, 2);
     assert_eq!(sched.kv.used(), 0);
+}
+
+/// The engine-level determinism contract of the head-parallel worker
+/// pool: the same mixed-length request stream scheduled at pool width
+/// 1 and at `SHAREPREFILL_WORKERS` (default 4) produces the same
+/// events in the same order — tokens, progress, terminals — and
+/// bit-identical per-request block accounting and decode output.
+#[test]
+fn worker_pool_widths_produce_identical_event_streams() {
+    let run = |workers: usize| {
+        let cfg = ServeConfig {
+            max_batch_tokens: 96,
+            chunk_layers: 1,
+            decode_tokens: 3,
+            max_concurrent_prefills: 2,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(6).with_workers(workers);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        for (id, len) in [(0u64, 640usize), (1, 64), (2, 320)] {
+            assert!(sched.submit(Request::new(id, vec![1; len], 3),
+                                 sink.clone()));
+        }
+        drain(&mut sched, &mut engine);
+        drop(sink);
+        rx.iter().collect::<Vec<Event>>()
+    };
+    let serial = run(1);
+    // .max(2): the parallel arm stays distinct even when the CI matrix
+    // pins SHAREPREFILL_WORKERS=1
+    let wide = run(env_workers().unwrap_or(4).max(2));
+    assert_eq!(serial.len(), wide.len(),
+               "worker width changed the number of events");
+    for (a, b) in serial.iter().zip(&wide) {
+        match (a, b) {
+            (Event::PrefillDone { id: ia, stats: sa },
+             Event::PrefillDone { id: ib, stats: sb }) => {
+                assert_eq!(ia, ib);
+                assert_eq!(
+                    (sa.blocks_computed, sa.blocks_total, sa.dense,
+                     sa.shared, sa.vslash),
+                    (sb.blocks_computed, sb.blocks_total, sb.dense,
+                     sb.shared, sb.vslash),
+                    "request {ia}: block accounting diverged");
+            }
+            (Event::Token { id: ia, token: ta, index: xa },
+             Event::Token { id: ib, token: tb, index: xb }) => {
+                assert_eq!((ia, ta, xa), (ib, tb, xb),
+                           "decode token diverged");
+            }
+            (Event::Done { id: ia, response: ra },
+             Event::Done { id: ib, response: rb }) => {
+                assert_eq!(ia, ib);
+                assert_eq!(ra.generated, rb.generated,
+                           "request {ia}: generated tokens diverged");
+            }
+            _ => assert_eq!(
+                std::mem::discriminant(a), std::mem::discriminant(b),
+                "event kind diverged: {a:?} vs {b:?}"),
+        }
+    }
 }
 
 /// Cancel one of two concurrent prefills mid-flight: its KV frees, the
