@@ -27,7 +27,7 @@
 //!    outputs stay identical.
 //!
 //!   cargo run --release --example serve_bench -- \
-//!       [requests] [ctx] [--sim-only] [--json BENCH_5.json]
+//!       [requests] [ctx] [--sim-only] [--json BENCH_6.json]
 //!
 //! `--json` writes one row per SimEngine scenario (name, tokens/s,
 //! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
@@ -344,13 +344,13 @@ fn real_engine_scenario(n: usize, ctx: usize) {
     }
 }
 
-/// Render the rows as the `BENCH_5.json` artifact (no JSON serializer
+/// Render the rows as the `BENCH_6.json` artifact (no JSON serializer
 /// in the offline vendor set; the schema is flat enough to emit by
 /// hand).  Non-finite values are clamped to 0 so the output always
 /// parses.
 fn render_json(rows: &[ScenarioRow]) -> String {
     let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
-    let mut s = String::from("{\n  \"pr\": 5,\n  \"scenarios\": [\n");
+    let mut s = String::from("{\n  \"pr\": 6,\n  \"scenarios\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \

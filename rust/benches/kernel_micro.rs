@@ -1,24 +1,128 @@
 //! L1 kernel micro-bench: budgeted attention artifact cost vs. budget —
 //! verifies executed cost tracks the block budget (the §6.1 speedup
 //! mechanism) and measures probe overhead.
+//!
+//! Two modes:
+//!   * default — registry-backed artifacts (needs `make artifacts` and
+//!     a PJRT runtime, so it cannot run in plain CI)
+//!   * `--host-only [--json PATH]` — the host-side kernels the
+//!     coordinator runs on every prefill (vslash search, pivotal
+//!     construction, mask packing, abar scatter), artifact-free.  The
+//!     JSON (per-kernel mean_ms + ns_per_token) is merged into the
+//!     bench-smoke trajectory artifact (`BENCH_6.json`) by CI, which
+//!     schema-checks it.
 
-use shareprefill::attention::BlockMask;
+use shareprefill::attention::{construct_pivotal, scatter_abar,
+                              search_vslash, BlockMask};
 use shareprefill::bench::Bench;
 use shareprefill::config::Config;
 use shareprefill::eval::open_registry;
 use shareprefill::runtime::Tensor;
+use shareprefill::util::math::NEG_INF;
 use shareprefill::util::rng::Rng;
+use shareprefill::BLOCK_SIZE;
 
-fn main() -> anyhow::Result<()> {
+fn rand(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Bench the pure host kernels and (optionally) dump per-kernel JSON.
+fn host_only(json_path: Option<&str>) -> anyhow::Result<()> {
+    let seq = if std::env::var("BENCH_FAST").is_ok() { 1024 } else { 2048 };
+    let nb = seq / BLOCK_SIZE;
+    let bs = BLOCK_SIZE;
+    let gamma = 0.9f32;
+    let budget = nb / 4;
+    let mut rng = Rng::new(7);
+
+    // row-normalized probe map [bs, seq] (what the probe artifact
+    // hands the coordinator)
+    let mut amap = rand(&mut rng, bs * seq);
+    for r in 0..bs {
+        let row = &mut amap[r * seq..(r + 1) * seq];
+        row.iter_mut().for_each(|x| *x = x.abs() + 1e-3);
+        let sum: f32 = row.iter().sum();
+        row.iter_mut().for_each(|x| *x /= sum);
+    }
+    // full block-averaged QK map, -inf above the diagonal
+    let mut abar = vec![NEG_INF; nb * nb];
+    for i in 0..nb {
+        for j in 0..=i {
+            abar[i * nb + j] = rng.normal() as f32;
+        }
+    }
+    // a budgeted kernel output: slot values + causal band idx/valid
+    let mut slots = vec![0f32; nb * budget];
+    let mut idx = vec![0i32; nb * budget];
+    let mut valid = vec![0f32; nb * budget];
+    for i in 0..nb {
+        let lo = i.saturating_sub(budget - 1);
+        for s in 0..budget {
+            let off = i * budget + s;
+            let j = lo + s;
+            if j <= i {
+                idx[off] = j as i32;
+                valid[off] = 1.0;
+                slots[off] = rng.normal() as f32;
+            }
+        }
+    }
+    // diagonal-band mask filling the budget (pack input)
+    let mut mask = BlockMask::empty(nb);
+    for i in 0..nb {
+        for j in i.saturating_sub(budget - 1)..=i {
+            mask.insert(i, j);
+        }
+    }
+
+    let mut b = Bench::new(&format!("kernel micro (host) @ seq {seq}"));
+    b.case("search_vslash", || {
+        std::hint::black_box(search_vslash(&amap, bs, seq, gamma));
+        seq
+    });
+    b.case("construct_pivotal", || {
+        std::hint::black_box(construct_pivotal(&abar, nb, gamma, (0, 0)));
+        seq
+    });
+    b.case("blockmask_pack", || {
+        std::hint::black_box(mask.pack(budget));
+        seq
+    });
+    b.case("scatter_abar", || {
+        std::hint::black_box(scatter_abar(&slots, &idx, &valid, nb,
+                                          budget));
+        seq
+    });
+    println!("\n{}", b.report());
+
+    if let Some(path) = json_path {
+        // no JSON serializer in the offline vendor set; the schema is
+        // flat enough to emit by hand (mirrors serve_bench)
+        let mut s = format!(
+            "{{\n  \"group\": \"kernel_micro_host\",\n  \
+             \"seq\": {seq},\n  \"kernels\": [\n");
+        for (i, r) in b.results.iter().enumerate() {
+            let ns_per_token = r.mean_ms * 1e6 / seq as f64;
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ms\": {:.4}, \
+                 \"ns_per_token\": {:.4}}}{}\n",
+                r.name, r.mean_ms, ns_per_token,
+                if i + 1 < b.results.len() { "," } else { "" }));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn artifact_bench() -> anyhow::Result<()> {
     let registry = open_registry(&Config::default())?;
     let spec = registry.model("sim-llama")?.clone();
     let seq = if std::env::var("BENCH_FAST").is_ok() { 1024 } else { 2048 };
     let nb = seq / shareprefill::BLOCK_SIZE;
     let d = spec.head_dim;
     let mut rng = Rng::new(5);
-    let rand = |rng: &mut Rng, n: usize| -> Vec<f32> {
-        (0..n).map(|_| rng.normal() as f32).collect()
-    };
     let q = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
     let k = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
     let v = Tensor::f32(vec![seq, d], rand(&mut rng, seq * d));
@@ -60,4 +164,25 @@ fn main() -> anyhow::Result<()> {
     });
     println!("\n{}", b.report());
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut host = false;
+    let mut json_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--host-only" => host = true,
+            "--json" => {
+                json_path = Some(args.next().ok_or_else(
+                    || anyhow::anyhow!("--json expects a path"))?);
+            }
+            _ => {} // `cargo bench` may pass harness flags; ignore
+        }
+    }
+    if host {
+        host_only(json_path.as_deref())
+    } else {
+        artifact_bench()
+    }
 }

@@ -1,0 +1,139 @@
+//! `pallas-lint` — architecture & invariant checker for this tree.
+//!
+//! CI runs it as a blocking job:
+//!
+//!     cargo run --release --bin pallas-lint -- --check rust/src
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.  Diagnostics
+//! are `file:line: [rule] message` on stdout.  See the `lint` module
+//! and DESIGN.md "Invariants & enforcement" for the rules.
+
+use anyhow::{anyhow, bail, Result};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use shareprefill::lint::{self, baseline};
+
+const USAGE: &str = "\
+pallas-lint — architecture & invariant checker
+
+USAGE: pallas-lint --check <src-root> [options]
+
+OPTIONS
+  --baseline FILE     panic-hygiene ratchet file
+                      (default: ./lint_baseline.toml if present)
+  --design FILE       DESIGN.md for the knob-doc half of knob-hygiene
+                      (default: ./DESIGN.md if present)
+  --write-baseline    freeze the observed hot-path panic counts into
+                      the baseline file instead of comparing
+
+RULES   layering, determinism, panic-hygiene, knob-hygiene
+EXIT    0 clean · 1 findings · 2 usage/IO error";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("pallas-lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn next_arg(args: &mut impl Iterator<Item = String>, flag: &str)
+            -> Result<String> {
+    args.next().ok_or_else(|| anyhow!("{flag} needs a value\n{USAGE}"))
+}
+
+fn run() -> Result<bool> {
+    let mut root: Option<PathBuf> = None;
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut design_path: Option<PathBuf> = None;
+    let mut write = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => {
+                root = Some(PathBuf::from(next_arg(&mut args, "--check")?));
+            }
+            "--baseline" => {
+                baseline_path =
+                    Some(PathBuf::from(next_arg(&mut args, "--baseline")?));
+            }
+            "--design" => {
+                design_path =
+                    Some(PathBuf::from(next_arg(&mut args, "--design")?));
+            }
+            "--write-baseline" => write = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(true);
+            }
+            other if !other.starts_with('-') && root.is_none() => {
+                root = Some(PathBuf::from(other));
+            }
+            other => bail!("unknown argument '{other}'\n{USAGE}"),
+        }
+    }
+    let Some(root) = root else {
+        bail!("no source root given\n{USAGE}");
+    };
+    if !root.is_dir() {
+        bail!("source root {} is not a directory", root.display());
+    }
+
+    // Defaults resolve against the working directory (CI runs from the
+    // repo root) and are skipped quietly when absent, so the binary
+    // also works on bare fixture trees.
+    let baseline_path = baseline_path.or_else(|| {
+        let p = PathBuf::from("lint_baseline.toml");
+        p.is_file().then_some(p)
+    });
+    let design_path = design_path.or_else(|| {
+        let p = PathBuf::from("DESIGN.md");
+        p.is_file().then_some(p)
+    });
+    let design_text = match &design_path {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => {
+            eprintln!("pallas-lint: note: no DESIGN.md — knob \
+                       documentation check skipped");
+            None
+        }
+    };
+
+    if write {
+        let report = lint::check_tree(&root, None, design_text.as_deref())?;
+        let path = baseline_path
+            .unwrap_or_else(|| PathBuf::from("lint_baseline.toml"));
+        std::fs::write(&path, baseline::render(&report.panic_counts))?;
+        println!("pallas-lint: wrote {} ({} file(s) with frozen sites)",
+                 path.display(), report.panic_counts.len());
+        for d in &report.diagnostics {
+            println!("{d}");
+        }
+        return Ok(report.diagnostics.is_empty());
+    }
+
+    let base = match &baseline_path {
+        Some(p) => baseline::load(p)?,
+        None => {
+            eprintln!("pallas-lint: note: no baseline file — the hot \
+                       path must be panic-free");
+            baseline::Baseline::default()
+        }
+    };
+    let report = lint::check_tree(&root, Some(&base),
+                                  design_text.as_deref())?;
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    if report.diagnostics.is_empty() {
+        println!("pallas-lint: clean ({} file(s) checked)", report.files);
+        Ok(true)
+    } else {
+        eprintln!("pallas-lint: {} finding(s)", report.diagnostics.len());
+        Ok(false)
+    }
+}

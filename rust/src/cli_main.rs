@@ -26,7 +26,9 @@ SUBCOMMANDS
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
             [--chunk-layers N] [--max-concurrent-prefills N]
-            [--workers N] [--admit-retries N] [--pattern-cache]
+            [--workers N] [--admit-retries N] [--kv-blocks N]
+            [--max-batch-tokens N] [--max-batch-requests N]
+            [--queue-capacity N] [--pattern-cache]
             [--pattern-cache-capacity N] [--pattern-cache-validation T]
             [--pattern-cache-max-age N]
   eval      Table 1: InfiniteBench-sim suite

@@ -262,6 +262,13 @@ impl Config {
             args.usize_or("decode-tokens", self.serve.decode_tokens)?;
         self.serve.max_batch_tokens =
             args.usize_or("max-batch-tokens", self.serve.max_batch_tokens)?;
+        self.serve.max_batch_requests =
+            args.usize_or("max-batch-requests",
+                          self.serve.max_batch_requests)?;
+        self.serve.queue_capacity =
+            args.usize_or("queue-capacity", self.serve.queue_capacity)?;
+        self.serve.kv_blocks =
+            args.usize_or("kv-blocks", self.serve.kv_blocks)?;
         self.serve.chunk_layers =
             args.usize_or("chunk-layers", self.serve.chunk_layers)?;
         self.serve.max_concurrent_prefills =
@@ -377,6 +384,65 @@ mod tests {
         let mut c = Config::default();
         c.apply_args(&args).unwrap();
         assert_eq!(c.serve.max_concurrent_prefills, 1);
+    }
+
+    #[test]
+    fn cli_capacity_knobs() {
+        let args = Args::parse(
+            ["x", "--kv-blocks", "64", "--queue-capacity", "9",
+             "--max-batch-requests", "2", "--max-batch-tokens", "512"]
+                .map(String::from), &[]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.kv_blocks, 64);
+        assert_eq!(c.serve.queue_capacity, 9);
+        assert_eq!(c.serve.max_batch_requests, 2);
+        assert_eq!(c.serve.max_batch_tokens, 512);
+    }
+
+    // Every serve.* knob must survive tomlmini parse -> emit -> parse
+    // (the knob-hygiene rule's sibling guarantee: what the config
+    // layer reads, a tool can re-emit without loss).
+    #[test]
+    fn serve_knobs_survive_toml_roundtrip() {
+        let doc = "\
+[serve]
+max_batch_tokens = 4096
+max_batch_requests = 5
+queue_capacity = 99
+decode_tokens = 7
+kv_blocks = 333
+chunk_layers = 2
+max_concurrent_prefills = 3
+admit_retries = 6
+workers = 4
+
+[serve.pattern_cache]
+enabled = true
+capacity = 17
+validation = 0.6
+max_age = 9
+";
+        let t1 = tomlmini::parse(doc).unwrap();
+        let t2 = tomlmini::parse(&tomlmini::emit(&t1)).unwrap();
+        assert_eq!(t1.entries, t2.entries);
+        let mut c = Config::default();
+        c.apply_toml(&t2).unwrap();
+        // every value deliberately differs from the default, so a
+        // knob silently dropped by emit would fail its assert
+        assert_eq!(c.serve.max_batch_tokens, 4096);
+        assert_eq!(c.serve.max_batch_requests, 5);
+        assert_eq!(c.serve.queue_capacity, 99);
+        assert_eq!(c.serve.decode_tokens, 7);
+        assert_eq!(c.serve.kv_blocks, 333);
+        assert_eq!(c.serve.chunk_layers, 2);
+        assert_eq!(c.serve.max_concurrent_prefills, 3);
+        assert_eq!(c.serve.admit_retries, 6);
+        assert_eq!(c.serve.workers, 4);
+        assert!(c.serve.pattern_cache.enabled);
+        assert_eq!(c.serve.pattern_cache.capacity, 17);
+        assert!((c.serve.pattern_cache.validation - 0.6).abs() < 1e-12);
+        assert_eq!(c.serve.pattern_cache.max_age, 9);
     }
 
     #[test]

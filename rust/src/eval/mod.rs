@@ -10,14 +10,14 @@ use anyhow::Result;
 use std::rc::Rc;
 
 use crate::config::{Config, MethodKind};
-use crate::runtime::{Registry, Runtime};
+use crate::runtime::Registry;
 use crate::serving::{Engine, EngineBuilder};
 
-/// Shared setup: runtime + registry.
-pub fn open_registry(cfg: &Config) -> Result<Rc<Registry>> {
-    let rt = Rc::new(Runtime::cpu()?);
-    Ok(Rc::new(Registry::load(cfg.paths.artifacts.clone(), rt)?))
-}
+/// Shared setup: runtime + registry.  Implemented in [`crate::runtime`]
+/// (so `serving` can use it without importing `eval` — the layering
+/// rule pallas-lint enforces); re-exported here for the existing
+/// eval/bench/example call sites.
+pub use crate::runtime::open_registry;
 
 /// Build an engine for (model, method) — a thin shim over
 /// [`EngineBuilder`], which owns the cluster-table lookup (SharePrefill

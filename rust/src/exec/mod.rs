@@ -18,3 +18,22 @@
 pub mod pool;
 
 pub use pool::{env_workers, PoolStats, WorkerPool};
+
+/// Spawn a named long-lived OS thread.
+///
+/// The one sanctioned thread-spawn entry point outside the pool:
+/// pallas-lint's layering rule keeps `std::thread` out of every
+/// module but `exec`, so actors that need a thread of their own (the
+/// serving engine thread in `serving::server`) take it here, where
+/// the determinism audit can see every spawn site and the thread gets
+/// a name that shows up in panics and sanitizer reports.
+pub fn spawn_worker<F>(name: &str, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .expect("invariant: OS thread spawn fails only on resource \
+                 exhaustion")
+}

@@ -34,6 +34,7 @@ pub mod config;
 pub mod eval;
 pub mod exec;
 pub mod linalg;
+pub mod lint;
 pub mod methods;
 pub mod model;
 pub mod runtime;

@@ -1,0 +1,107 @@
+//! The panic-hygiene ratchet file (`lint_baseline.toml`): frozen
+//! per-file counts of `unwrap()`/`expect()`/panic-family sites in the
+//! serving hot path.  The file may only shrink — `pallas-lint` fails
+//! when a file exceeds its recorded count (a new panic site) *and*
+//! when it falls below it (a stale baseline: the burn-down must be
+//! recorded in the same change).
+//!
+//! The format is a self-contained `"path" = count` line list (parsed
+//! here rather than by `substrate::tomlmini`, whose section
+//! flattening would mangle quoted path keys).  `render` reproduces
+//! `tools/lint_baseline_gen.py`'s output byte for byte so either tool
+//! can regenerate the file.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Frozen per-file panic-site counts; files absent are at zero.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    pub fn allowed(&self, rel: &str) -> usize {
+        self.counts.get(rel).copied().unwrap_or(0)
+    }
+}
+
+pub fn load(path: &Path) -> Result<Baseline> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading baseline {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(text: &str) -> Result<Baseline> {
+    let mut counts = BTreeMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected '\"path\" = count'", lineno + 1);
+        };
+        let key = line[..eq].trim().trim_matches('"');
+        if key.is_empty() {
+            bail!("line {}: empty path", lineno + 1);
+        }
+        let n: usize = line[eq + 1..].trim().parse().with_context(
+            || format!("line {}: bad count", lineno + 1))?;
+        counts.insert(key.to_string(), n);
+    }
+    Ok(Baseline { counts })
+}
+
+/// Serialize counts in the committed baseline format.  Must stay byte-
+/// identical to `tools/lint_baseline_gen.py`'s output.
+pub fn render(counts: &BTreeMap<String, usize>) -> String {
+    let mut out = String::from(
+        "# pallas-lint panic-hygiene baseline — frozen counts of\n\
+         # unwrap()/expect()/panic-family sites in the serving hot path\n\
+         # (serving/, exec/, methods/pattern_cache.rs; test modules\n\
+         # excluded).  This file may only shrink: pallas-lint fails if a\n\
+         # file exceeds its count here (new panic site) OR falls below it\n\
+         # (stale baseline — regenerate with `pallas-lint --check\n\
+         # rust/src --write-baseline` or tools/lint_baseline_gen.py so\n\
+         # the burn-down is recorded).  Files absent from this list are\n\
+         # at zero.\n");
+    for (k, v) in counts {
+        let _ = writeln!(out, "\"{k}\" = {v}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let b = parse("# header\n\n\"serving/a.rs\" = 3\n\"exec/b.rs\" = 1\n")
+            .unwrap();
+        assert_eq!(b.allowed("serving/a.rs"), 3);
+        assert_eq!(b.allowed("exec/b.rs"), 1);
+        assert_eq!(b.allowed("serving/unlisted.rs"), 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse("serving/a.rs").is_err());
+        assert!(parse("\"a.rs\" = many").is_err());
+        assert!(parse("\"\" = 1").is_err());
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("serving/batcher.rs".to_string(), 1);
+        counts.insert("serving/kvcache.rs".to_string(), 1);
+        let text = render(&counts);
+        let back = parse(&text).unwrap();
+        assert_eq!(back.counts, counts);
+        assert!(text.starts_with('#'), "header comment present");
+    }
+}

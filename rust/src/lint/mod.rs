@@ -1,0 +1,192 @@
+//! `pallas-lint`: the tree's architecture & invariant checker.
+//!
+//! The compiler cannot see the contracts the serving stack rests on —
+//! PR 5's determinism contract (order-bearing state never crosses a
+//! thread), the layering discipline (only `exec` spawns threads, the
+//! pattern engine never reaches into `serving`), the panic policy on
+//! the hot path, and the rule that every `serve.*` knob is reachable
+//! from the CLI and documented.  This module enforces them as a
+//! blocking CI gate (see DESIGN.md "Invariants & enforcement").
+//!
+//! Zero dependencies beyond the vendored `anyhow`: a space-blanking
+//! scrubber ([`scan`]), a sorted source walker ([`walker`]), the four
+//! rules ([`rules`]), and the panic-hygiene ratchet file
+//! ([`baseline`]).  The binary front-end is
+//! `rust/src/bin/pallas_lint.rs` (`cargo run --bin pallas-lint`).
+
+pub mod baseline;
+pub mod rules;
+pub mod scan;
+pub mod walker;
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use baseline::Baseline;
+
+/// One finding, rendered as `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}",
+               self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Result of a full tree check.
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Files scanned.
+    pub files: usize,
+    /// Observed panic-site counts in the hot path (what
+    /// `--write-baseline` freezes), including zero-site files omitted.
+    pub panic_counts: BTreeMap<String, usize>,
+}
+
+/// Check every `.rs` file under `root`.
+///
+/// * `base` — the panic-hygiene ratchet; `None` skips the comparison
+///   (used by `--write-baseline`, which freezes `Report::panic_counts`
+///   instead).
+/// * `design` — DESIGN.md contents for the knob-documentation half of
+///   rule 4; `None` skips that half (the flag half still runs when
+///   the tree has a `cli_main.rs`).
+pub fn check_tree(root: &Path, base: Option<&Baseline>,
+                  design: Option<&str>) -> Result<Report> {
+    let files = walker::rust_sources(root)?;
+    let mut diagnostics = Vec::new();
+    let mut panic_counts = BTreeMap::new();
+    let mut panic_found: BTreeMap<String, Vec<(usize, &'static str)>> =
+        BTreeMap::new();
+    // key -> (file, offset) of its first appearance in config/
+    let mut knob_keys: BTreeMap<String, (String, usize)> = BTreeMap::new();
+    let mut cli_text: Option<&String> = None;
+
+    for (rel, src) in &files {
+        let sc = scan::scrub(src);
+        let bytes = src.as_bytes();
+        for (off, message) in rules::layering(rel, &sc) {
+            diagnostics.push(Diagnostic {
+                file: rel.clone(),
+                line: scan::line_of(bytes, off),
+                rule: rules::RULE_LAYERING,
+                message,
+            });
+        }
+        for (off, message) in rules::determinism(&sc) {
+            diagnostics.push(Diagnostic {
+                file: rel.clone(),
+                line: scan::line_of(bytes, off),
+                rule: rules::RULE_DETERMINISM,
+                message,
+            });
+        }
+        if rules::panic_scope(rel) {
+            let sites = rules::panic_sites(&sc);
+            if !sites.is_empty() {
+                panic_counts.insert(rel.clone(), sites.len());
+                panic_found.insert(rel.clone(), sites);
+            }
+        }
+        if rel.starts_with("config/") {
+            for (off, key) in rules::serve_keys(&sc) {
+                knob_keys.entry(key).or_insert((rel.clone(), off));
+            }
+        }
+        if rel == "cli_main.rs" {
+            cli_text = Some(src);
+        }
+    }
+
+    // Rule 3, cross-file half: the ratchet.  Over baseline -> every
+    // site in the file is listed (the author knows which are new);
+    // under baseline -> the shrink must be recorded.
+    if let Some(base) = base {
+        for (rel, sites) in &panic_found {
+            let allowed = base.allowed(rel);
+            let n = sites.len();
+            if n > allowed {
+                for (off, kind) in sites {
+                    let src = files.iter()
+                        .find(|(r, _)| r == rel)
+                        .map(|(_, s)| s.as_bytes())
+                        .unwrap_or_default();
+                    diagnostics.push(Diagnostic {
+                        file: rel.clone(),
+                        line: scan::line_of(src, *off),
+                        rule: rules::RULE_PANIC,
+                        message: format!(
+                            "`{kind}` in the serving hot path ({n} \
+                             site(s), baseline allows {allowed}) — \
+                             return a typed error or use \
+                             expect(\"invariant: ...\")"),
+                    });
+                }
+            } else if n < allowed {
+                diagnostics.push(stale_baseline(rel, allowed, n));
+            }
+        }
+        for (rel, &allowed) in &base.counts {
+            if allowed > 0 && !panic_found.contains_key(rel) {
+                diagnostics.push(stale_baseline(rel, allowed, 0));
+            }
+        }
+    }
+
+    // Rule 4, cross-file half: flag + doc lookup per collected key.
+    for (key, (file, off)) in &knob_keys {
+        let line = files.iter()
+            .find(|(r, _)| r == file)
+            .map(|(_, s)| scan::line_of(s.as_bytes(), *off))
+            .unwrap_or(1);
+        let flag = rules::flag_for(key);
+        if let Some(cli) = cli_text {
+            if !cli.contains(&format!("--{flag}")) {
+                diagnostics.push(Diagnostic {
+                    file: file.clone(),
+                    line,
+                    rule: rules::RULE_KNOBS,
+                    message: format!(
+                        "`{key}` is parsed here but `cli_main.rs` has \
+                         no `--{flag}` flag — every serve knob must be \
+                         reachable from the CLI"),
+                });
+            }
+        }
+        if let Some(doc) = design {
+            if !doc.contains(key.as_str()) {
+                diagnostics.push(Diagnostic {
+                    file: file.clone(),
+                    line,
+                    rule: rules::RULE_KNOBS,
+                    message: format!(
+                        "`{key}` is not mentioned in DESIGN.md — \
+                         document the knob in the serve-knob table"),
+                });
+            }
+        }
+    }
+
+    Ok(Report { diagnostics, files: files.len(), panic_counts })
+}
+
+fn stale_baseline(rel: &str, allowed: usize, found: usize) -> Diagnostic {
+    Diagnostic {
+        file: rel.to_string(),
+        line: 1,
+        rule: rules::RULE_PANIC,
+        message: format!(
+            "stale baseline: {allowed} site(s) recorded, {found} found \
+             — shrink lint_baseline.toml (regenerate with \
+             `pallas-lint --check rust/src --write-baseline` or \
+             tools/lint_baseline_gen.py) so the burn-down is recorded"),
+    }
+}

@@ -1,0 +1,332 @@
+//! The four pallas-lint rules.  Each returns raw (offset, message)
+//! findings over one scrubbed file; `lint::check_tree` attaches file
+//! names and line numbers and applies the cross-file parts (the
+//! panic-hygiene baseline ratchet, the knob-hygiene flag/doc lookup).
+//!
+//! Rule ids (stable — they appear in diagnostics and CI logs):
+//!   layering        module-dependency allowlist
+//!   determinism     no order-bearing state inside fan_out closures
+//!   panic-hygiene   no unwrap/expect/panic! in the serving hot path
+//!   knob-hygiene    every serve.* key has a CLI flag + DESIGN.md doc
+
+use super::scan::{self, Scrubbed};
+
+pub const RULE_LAYERING: &str = "layering";
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_PANIC: &str = "panic-hygiene";
+pub const RULE_KNOBS: &str = "knob-hygiene";
+
+/// Modules that may never name `std::thread` — everyone but `exec`
+/// (the worker pool and the sanctioned `spawn_worker` entry point).
+const THREAD_OWNER: &str = "exec";
+
+/// Pattern-engine modules that must stay below the serving layer.
+const BELOW_SERVING: [&str; 4] =
+    ["attention", "clustering", "linalg", "methods"];
+
+/// Paths the serving layer may not reach up into.
+const ABOVE_SERVING: [&str; 2] = ["crate::eval", "crate::bench"];
+
+/// Tokens that carry or mutate order-bearing state and therefore must
+/// never appear inside a `fan_out(..)` closure: the strategy's
+/// pattern-decision entry points (their call order is part of the
+/// determinism contract), PJRT dispatch (`execute`/`run_buffers` —
+/// engine-thread only), and single-thread shared-state machinery.
+const FAN_OUT_FORBIDDEN: [&str; 7] = [
+    "decide_pattern", "publish_abar", "execute", "run_buffers",
+    "Rc", "RefCell", "borrow_mut",
+];
+
+/// The serving hot path governed by the panic-hygiene baseline.
+pub fn panic_scope(rel: &str) -> bool {
+    rel.starts_with("serving/") || rel.starts_with("exec/")
+        || rel == "methods/pattern_cache.rs"
+}
+
+/// Top-level module of a file path relative to the source root.
+pub fn module_of(rel: &str) -> &str {
+    match rel.find('/') {
+        Some(i) => &rel[..i],
+        None => rel.strip_suffix(".rs").unwrap_or(rel),
+    }
+}
+
+/// Rule 1: layering.  `use`/path tokens only — scrubbed text, so
+/// comments and strings never trip it; `#[cfg(test)]` mod blocks are
+/// exempt (tests may sleep on threads and reach across layers).
+pub fn layering(rel: &str, sc: &Scrubbed) -> Vec<(usize, String)> {
+    let s = &sc.text[..];
+    let spans = scan::test_spans(s);
+    let module = module_of(rel);
+    let mut out = Vec::new();
+    if module != THREAD_OWNER {
+        for off in scan::word_hits(s, b"std::thread", 0, s.len()) {
+            if !scan::in_spans(&spans, off) {
+                out.push((off, format!(
+                    "`std::thread` outside `exec` (module `{module}`) — \
+                     spawn through exec::spawn_worker / exec::WorkerPool \
+                     so threads stay visible to the determinism audit")));
+            }
+        }
+    }
+    if BELOW_SERVING.contains(&module) {
+        for off in scan::word_hits(s, b"crate::serving", 0, s.len()) {
+            if !scan::in_spans(&spans, off) {
+                out.push((off, format!(
+                    "`{module}` may not import `serving` — the pattern \
+                     engine sits below the serving layer")));
+            }
+        }
+    }
+    if module == "serving" {
+        for target in ABOVE_SERVING {
+            for off in scan::word_hits(s, target.as_bytes(), 0, s.len()) {
+                if !scan::in_spans(&spans, off) {
+                    out.push((off, format!(
+                        "`serving` may not import `{}` — harnesses \
+                         depend on the server, never the reverse",
+                        &target["crate::".len()..])));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Rule 2: determinism.  Brace/paren-matched span scanning: every
+/// `.fan_out(` call's argument span (which contains the per-head
+/// closure) is searched for order-bearing tokens.
+pub fn determinism(sc: &Scrubbed) -> Vec<(usize, String)> {
+    let s = &sc.text[..];
+    let spans = scan::test_spans(s);
+    let mut out = Vec::new();
+    let pat: &[u8] = b".fan_out";
+    let mut pos = 0usize;
+    while let Some(i) = scan::find(s, pat, pos) {
+        pos = i + 1;
+        let after = i + pat.len();
+        if after < s.len() && scan::is_ident(s[after]) {
+            continue;
+        }
+        if scan::in_spans(&spans, i) {
+            continue;
+        }
+        let open = scan::skip_ws(s, after);
+        if open >= s.len() || s[open] != b'(' {
+            continue;
+        }
+        let end = scan::match_paren(s, open);
+        for tok in FAN_OUT_FORBIDDEN {
+            for off in scan::word_hits(s, tok.as_bytes(), open, end) {
+                out.push((off, format!(
+                    "`{tok}` inside a fan_out(..) closure — fan-out \
+                     closures must be pure per-head; order-bearing \
+                     state stays on the engine thread (PR 5 \
+                     determinism contract)")));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Rule 3 (per-file half): panic sites in scrubbed source — `.unwrap()`,
+/// `.expect(..)` without an `"invariant: …"` literal message, and the
+/// panic-family macros, outside `#[cfg(test)]` mod blocks.  The
+/// cross-file baseline comparison lives in `lint::check_tree`.
+pub fn panic_sites(sc: &Scrubbed) -> Vec<(usize, &'static str)> {
+    let s = &sc.text[..];
+    let spans = scan::test_spans(s);
+    let mut sites: Vec<(usize, &'static str)> = Vec::new();
+
+    let pat: &[u8] = b".unwrap";
+    let mut pos = 0usize;
+    while let Some(i) = scan::find(s, pat, pos) {
+        pos = i + 1;
+        let after = i + pat.len();
+        let j = scan::skip_ws(s, after);
+        if j < s.len() && s[j] == b'(' {
+            let k = scan::skip_ws(s, j + 1);
+            if k < s.len() && s[k] == b')'
+                && (after >= s.len() || !scan::is_ident(s[after]))
+                && !scan::in_spans(&spans, i)
+            {
+                sites.push((i, "unwrap()"));
+            }
+        }
+    }
+
+    let pat: &[u8] = b".expect";
+    let mut pos = 0usize;
+    while let Some(i) = scan::find(s, pat, pos) {
+        pos = i + 1;
+        let after = i + pat.len();
+        if after < s.len() && scan::is_ident(s[after]) {
+            continue; // .expect_err and friends
+        }
+        let j = scan::skip_ws(s, after);
+        if j < s.len() && s[j] == b'(' {
+            // a string-literal argument is blanked to spaces in the
+            // scrubbed text, so skip_ws runs past it: the literal (if
+            // any) is the first one recorded in (j, k]
+            let k = scan::skip_ws(s, j + 1);
+            let ok = sc.literals.range(j + 1..=k).next()
+                .is_some_and(|(_, l)| l.starts_with("invariant:"));
+            if !ok && !scan::in_spans(&spans, i) {
+                sites.push((i, "expect(..)"));
+            }
+        }
+    }
+
+    for mac in ["panic!", "unreachable!", "todo!", "unimplemented!"] {
+        let mut pos = 0usize;
+        while let Some(i) = scan::find(s, mac.as_bytes(), pos) {
+            pos = i + 1;
+            let before_ok = i == 0 || !scan::is_ident(s[i - 1]);
+            if before_ok && !scan::in_spans(&spans, i) {
+                sites.push((i, match mac {
+                    "panic!" => "panic!",
+                    "unreachable!" => "unreachable!",
+                    "todo!" => "todo!",
+                    _ => "unimplemented!",
+                }));
+            }
+        }
+    }
+    sites.sort();
+    sites
+}
+
+/// Rule 4 (collection half): `serve.*` keys named in string literals
+/// of a `config/` source file, outside test mod blocks.  The flag and
+/// DESIGN.md lookups live in `lint::check_tree`.
+pub fn serve_keys(sc: &Scrubbed) -> Vec<(usize, String)> {
+    let spans = scan::test_spans(&sc.text);
+    sc.literals.iter()
+        .filter(|(off, body)| {
+            body.starts_with("serve.") && !scan::in_spans(&spans, **off)
+        })
+        .map(|(off, body)| (*off, body.clone()))
+        .collect()
+}
+
+/// CLI flag a `serve.*` key must be reachable through: strip the
+/// `serve.` prefix and map separators to `-`.  One irregular mapping:
+/// the cache master switch is the boolean `--pattern-cache`.
+pub fn flag_for(key: &str) -> String {
+    if key == "serve.pattern_cache.enabled" {
+        return "pattern-cache".to_string();
+    }
+    key.trim_start_matches("serve.").replace(['.', '_'], "-")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scrub;
+
+    #[test]
+    fn layering_flags_thread_outside_exec() {
+        let sc = scrub("fn f() { std::thread::spawn(|| {}); }");
+        let hits = layering("serving/server.rs", &sc);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].1.contains("std::thread"));
+        assert!(layering("exec/pool.rs", &sc).is_empty());
+    }
+
+    #[test]
+    fn layering_ignores_comments_and_tests() {
+        let sc = scrub(
+            "// std::thread is discussed here only\n\
+             #[cfg(test)]\nmod tests { fn t() { \
+             std::thread::sleep(d); } }");
+        assert!(layering("util/timer.rs", &sc).is_empty());
+    }
+
+    #[test]
+    fn layering_flags_upward_imports() {
+        let sc = scrub("use crate::serving::Engine;\n");
+        assert_eq!(layering("attention/vslash.rs", &sc).len(), 1);
+        assert!(layering("eval/latency.rs", &sc).is_empty());
+        let sc = scrub("use crate::eval::open_registry;\n");
+        assert_eq!(layering("serving/server.rs", &sc).len(), 1);
+        assert!(layering("cli_main.rs", &sc).is_empty());
+    }
+
+    #[test]
+    fn determinism_flags_order_bearing_tokens() {
+        let sc = scrub(
+            "let r = pool.fan_out(n, |h| {\n\
+                 cache.borrow_mut().push(h);\n\
+                 strategy.decide_pattern(h)\n\
+             });");
+        let hits = determinism(&sc);
+        assert_eq!(hits.len(), 2);
+        assert!(hits[0].1.contains("borrow_mut"));
+        assert!(hits[1].1.contains("decide_pattern"));
+    }
+
+    #[test]
+    fn determinism_allows_pure_closures() {
+        let sc = scrub(
+            "let r = pool.fan_out(jobs.len(), |k| {\n\
+                 search_vslash(maps, bs, seq, gamma)\n\
+             });\n\
+             cache.borrow_mut().insert(k, r);");
+        assert!(determinism(&sc).is_empty(),
+                "tokens outside the call span must not fire");
+    }
+
+    #[test]
+    fn panic_sites_counting() {
+        let sc = scrub(
+            "fn f() {\n\
+                 a.unwrap();\n\
+                 b.unwrap_or(0);\n\
+                 c.expect(\"queue non-empty\");\n\
+                 d.expect(\"invariant: handed out by us\");\n\
+                 panic!(\"boom\");\n\
+             }\n\
+             #[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }");
+        let kinds: Vec<&str> =
+            panic_sites(&sc).iter().map(|s| s.1).collect();
+        assert_eq!(kinds, vec!["unwrap()", "expect(..)", "panic!"]);
+    }
+
+    #[test]
+    fn panic_scope_is_the_hot_path() {
+        assert!(panic_scope("serving/scheduler.rs"));
+        assert!(panic_scope("exec/pool.rs"));
+        assert!(panic_scope("methods/pattern_cache.rs"));
+        assert!(!panic_scope("methods/shareprefill.rs"));
+        assert!(!panic_scope("eval/latency.rs"));
+    }
+
+    #[test]
+    fn serve_keys_and_flags() {
+        let sc = scrub(
+            "t.usize_or(\"serve.kv_blocks\", d);\n\
+             t.bool_or(\"serve.pattern_cache.enabled\", e);\n\
+             s.push(\"other.key\");\n\
+             #[cfg(test)]\nmod tests { fn t() { \
+             p(\"serve.fake_test_key\"); } }");
+        let keys: Vec<String> =
+            serve_keys(&sc).iter().map(|k| k.1.clone()).collect();
+        assert_eq!(keys,
+                   vec!["serve.kv_blocks".to_string(),
+                        "serve.pattern_cache.enabled".to_string()]);
+        assert_eq!(flag_for("serve.kv_blocks"), "kv-blocks");
+        assert_eq!(flag_for("serve.pattern_cache.enabled"),
+                   "pattern-cache");
+        assert_eq!(flag_for("serve.pattern_cache.max_age"),
+                   "pattern-cache-max-age");
+    }
+
+    #[test]
+    fn module_of_paths() {
+        assert_eq!(module_of("serving/engine.rs"), "serving");
+        assert_eq!(module_of("cli_main.rs"), "cli_main");
+        assert_eq!(module_of("bin/pallas_lint.rs"), "bin");
+    }
+}

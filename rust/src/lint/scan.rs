@@ -1,0 +1,359 @@
+//! Lightweight Rust source scanner for `pallas-lint`: comment/literal
+//! scrubbing, `#[cfg(test)]` span detection, and the byte-level
+//! matching helpers the rules build on.
+//!
+//! Deliberately *not* a real lexer — the rules only need token-shaped
+//! substring matching on comment-free text with stable line numbers.
+//! The scrubber blanks comments and literal bodies with spaces
+//! (newlines preserved, so every offset keeps its original line
+//! number) and records ordinary string-literal bodies by the offset of
+//! their opening quote, for the one rule that inspects literal
+//! content (panic hygiene's `expect("invariant: …")` allowance).
+//!
+//! `tools/lint_baseline_gen.py` is a line-for-line replica of these
+//! semantics so the panic-hygiene baseline can be regenerated without
+//! a Rust toolchain; any change here must be mirrored there.
+
+use std::collections::BTreeMap;
+
+/// Scrubbed source: comments and literal bodies blanked to spaces,
+/// plus the bodies of ordinary (non-raw) string literals keyed by the
+/// offset of their opening quote.
+pub struct Scrubbed {
+    pub text: Vec<u8>,
+    pub literals: BTreeMap<usize, String>,
+}
+
+/// Is `b` a Rust identifier byte?  (ASCII only: the tree's identifiers
+/// are ASCII, and every token the rules search for is too.)
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len())
+        .find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+/// 1-based line number of byte offset `off` in `src`.
+pub fn line_of(src: &[u8], off: usize) -> usize {
+    src[..off.min(src.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Skip ASCII whitespace starting at `i`.
+pub fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && matches!(s[i], b' ' | b'\t' | b'\r' | b'\n') {
+        i += 1;
+    }
+    i
+}
+
+/// Offset one past the `)` matching the `(` at `open` (or `s.len()`
+/// when unbalanced).  Call on scrubbed text only — literal parens are
+/// already blanked, so plain depth counting is exact.
+pub fn match_paren(s: &[u8], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < s.len() {
+        match s[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    s.len()
+}
+
+/// Offsets of `needle` in `s[from..to]` with non-identifier bytes on
+/// both sides (word-boundary occurrences).
+pub fn word_hits(s: &[u8], needle: &[u8], from: usize, to: usize)
+                 -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut pos = from;
+    let to = to.min(s.len());
+    while let Some(i) = find(&s[..to], needle, pos) {
+        let left_ok = i == 0 || !is_ident(s[i - 1]);
+        let after = i + needle.len();
+        let right_ok = after >= s.len() || !is_ident(s[after]);
+        if left_ok && right_ok {
+            hits.push(i);
+        }
+        pos = i + 1;
+    }
+    hits
+}
+
+/// Blank comments and string/char literal contents with spaces
+/// (newlines preserved), recording string-literal bodies by offset.
+///
+/// Handles: line comments, nested block comments, raw strings
+/// (`r"…"` / `r#"…"#` with any number of hashes), ordinary strings
+/// with escapes, and char literals (including `'\x'` escapes),
+/// distinguishing the latter from lifetimes (`'a`) by the position of
+/// the closing quote.
+pub fn scrub(src: &str) -> Scrubbed {
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut out = s.to_vec();
+    let mut literals = BTreeMap::new();
+    let mut i = 0usize;
+    while i < n {
+        let c = s[i];
+        let nxt = if i + 1 < n { s[i + 1] } else { 0 };
+        if c == b'/' && nxt == b'/' {
+            while i < n && s[i] != b'\n' {
+                out[i] = b' ';
+                i += 1;
+            }
+        } else if c == b'/' && nxt == b'*' {
+            let mut depth = 0i64;
+            while i < n {
+                if s[i] == b'/' && i + 1 < n && s[i + 1] == b'*' {
+                    depth += 1;
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                } else if s[i] == b'*' && i + 1 < n && s[i + 1] == b'/' {
+                    depth -= 1;
+                    out[i] = b' ';
+                    out[i + 1] = b' ';
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if s[i] != b'\n' {
+                        out[i] = b' ';
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'r' && (nxt == b'"' || nxt == b'#') {
+            // raw string r"…" / r#"…"# (possibly more hashes)
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && s[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && s[j] == b'"' {
+                let mut close = vec![b'#'; hashes];
+                close.insert(0, b'"');
+                let end = match find(s, &close, j + 1) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                for p in i..end {
+                    if s[p] != b'\n' {
+                        out[p] = b' ';
+                    }
+                }
+                i = end;
+            } else {
+                i += 1;
+            }
+        } else if c == b'"' {
+            let start = i;
+            let mut j = i + 1;
+            let mut body = Vec::new();
+            while j < n {
+                if s[j] == b'\\' && j + 1 < n {
+                    body.push(s[j]);
+                    body.push(s[j + 1]);
+                    j += 2;
+                } else if s[j] == b'"' {
+                    break;
+                } else {
+                    body.push(s[j]);
+                    j += 1;
+                }
+            }
+            let end = if j < n { j + 1 } else { n };
+            for p in i..end {
+                if s[p] != b'\n' {
+                    out[p] = b' ';
+                }
+            }
+            literals.insert(start,
+                            String::from_utf8_lossy(&body).into_owned());
+            i = end;
+        } else if c == b'\'' {
+            // char literal vs lifetime: 'x' / '\x' is a literal;
+            // 'ident (no closing quote right after) is a lifetime
+            if nxt == b'\\' {
+                let mut j = i + 2;
+                while j < n && s[j] != b'\'' {
+                    j += 1;
+                }
+                let end = if j < n { j + 1 } else { n };
+                for p in i..end {
+                    if s[p] != b'\n' {
+                        out[p] = b' ';
+                    }
+                }
+                i = end;
+            } else if i + 2 < n && s[i + 2] == b'\'' {
+                out[i] = b' ';
+                out[i + 1] = b' ';
+                out[i + 2] = b' ';
+                i += 3;
+            } else {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Scrubbed { text: out, literals }
+}
+
+/// Byte spans of `#[cfg(test)] mod … { … }` blocks in scrubbed text.
+/// Rules skip matches inside these spans: test code may unwrap, sleep
+/// on threads, and parse ad-hoc TOML without tripping the audit.
+pub fn test_spans(scrubbed: &[u8]) -> Vec<(usize, usize)> {
+    let attr: &[u8] = b"#[cfg(test)]";
+    let mut spans = Vec::new();
+    let mut pos = 0usize;
+    while let Some(a) = find(scrubbed, attr, pos) {
+        let Some(open) = find(scrubbed, b"{", a + attr.len()) else {
+            break;
+        };
+        if find(&scrubbed[..open], b"mod", a + attr.len()).is_none() {
+            pos = a + attr.len();
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut j = open;
+        let mut end = scrubbed.len();
+        while j < scrubbed.len() {
+            match scrubbed[j] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = j + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        spans.push((a, end));
+        pos = end;
+    }
+    spans
+}
+
+/// Is `off` inside any of `spans`?
+pub fn in_spans(spans: &[(usize, usize)], off: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= off && off < b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrubbed_str(src: &str) -> String {
+        String::from_utf8(scrub(src).text).unwrap()
+    }
+
+    #[test]
+    fn scrub_line_and_block_comments() {
+        let s = scrubbed_str("a // unwrap()\nb /* panic! */ c");
+        assert!(!s.contains("unwrap"));
+        assert!(!s.contains("panic"));
+        assert!(s.contains('a') && s.contains('b') && s.contains('c'));
+        assert_eq!(s.matches('\n').count(), 1);
+    }
+
+    #[test]
+    fn scrub_nested_block_comment() {
+        let s = scrubbed_str("x /* outer /* inner */ still */ y");
+        assert!(!s.contains("inner") && !s.contains("still"));
+        assert!(s.contains('x') && s.contains('y'));
+    }
+
+    #[test]
+    fn scrub_string_literals_recorded() {
+        let sc = scrub("call(\"invariant: queue non-empty\")");
+        assert!(!String::from_utf8(sc.text.clone()).unwrap()
+            .contains("invariant"));
+        assert_eq!(sc.literals.get(&5).map(String::as_str),
+                   Some("invariant: queue non-empty"));
+    }
+
+    #[test]
+    fn scrub_escaped_quote_in_string() {
+        let sc = scrub(r#"f("a\"b") + g"#);
+        let s = String::from_utf8(sc.text).unwrap();
+        assert!(s.contains("+ g"), "scan must resume after the literal");
+    }
+
+    #[test]
+    fn scrub_raw_string() {
+        let s = scrubbed_str("let x = r#\"panic! \"quoted\" here\"#; y");
+        assert!(!s.contains("panic"));
+        assert!(s.contains("; y"));
+    }
+
+    #[test]
+    fn scrub_char_literal_vs_lifetime() {
+        let s = scrubbed_str("let c = '\"'; fn f<'a>(x: &'a str) {}");
+        assert!(!s.contains('"'), "char literal quote must be blanked");
+        assert!(s.contains("'a"), "lifetimes survive scrubbing");
+    }
+
+    #[test]
+    fn newlines_and_offsets_preserved() {
+        let src = "a\n\"two\nline\"\nb.unwrap()";
+        let sc = scrub(src);
+        assert_eq!(sc.text.iter().filter(|&&b| b == b'\n').count(), 3);
+        let i = find(&sc.text, b".unwrap", 0).unwrap();
+        assert_eq!(line_of(src.as_bytes(), i), 4);
+    }
+
+    #[test]
+    fn test_spans_cover_mod_tests() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n fn b() { x.unwrap() } }\nfn c() {}";
+        let sc = scrub(src);
+        let spans = test_spans(&sc.text);
+        assert_eq!(spans.len(), 1);
+        let u = find(&sc.text, b".unwrap", 0).unwrap();
+        assert!(in_spans(&spans, u));
+        let c = find(&sc.text, b"fn c", 0).unwrap();
+        assert!(!in_spans(&spans, c));
+    }
+
+    #[test]
+    fn cfg_test_without_mod_is_not_a_span() {
+        let src = "#[cfg(test)]\nfn helper() { x.unwrap() }";
+        let sc = scrub(src);
+        // attribute on a bare fn: the brace-matched "mod" heuristic
+        // must not claim the whole rest of the file
+        assert!(test_spans(&sc.text).is_empty());
+    }
+
+    #[test]
+    fn word_hits_respect_boundaries() {
+        let s = b"Rc::new(x); Rcx; my_Rc; a.borrow_mut()";
+        assert_eq!(word_hits(s, b"Rc", 0, s.len()), vec![0]);
+        assert_eq!(word_hits(s, b"borrow_mut", 0, s.len()).len(), 1);
+    }
+
+    #[test]
+    fn match_paren_nested() {
+        let s = b"f(a(b), c(d(e))) tail";
+        assert_eq!(match_paren(s, 1), 16);
+    }
+}

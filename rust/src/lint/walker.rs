@@ -1,0 +1,37 @@
+//! Source discovery for `pallas-lint`: every `.rs` file under a root,
+//! as (relative path, contents) pairs in sorted order — sorted so
+//! diagnostics, the baseline file and `--write-baseline` output are
+//! deterministic across filesystems.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// All `.rs` files under `root`, as (relative path with `/`
+/// separators, contents), sorted by relative path.
+pub fn rust_sources(root: &Path) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, String)>)
+        -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}

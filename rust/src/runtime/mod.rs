@@ -14,6 +14,16 @@ pub use tensor::Tensor;
 
 use anyhow::{Context, Result};
 use std::path::Path;
+use std::rc::Rc;
+
+/// Shared setup: PJRT runtime + artifact registry.  Lives here rather
+/// than in `eval` (which re-exports it) so the serving layer can open
+/// a registry without crossing the layering boundary pallas-lint
+/// enforces — `serving` must never import `eval`.
+pub fn open_registry(cfg: &crate::config::Config) -> Result<Rc<Registry>> {
+    let rt = Rc::new(Runtime::cpu()?);
+    Ok(Rc::new(Registry::load(cfg.paths.artifacts.clone(), rt)?))
+}
 
 /// Wrapper around the PJRT CPU client.
 pub struct Runtime {

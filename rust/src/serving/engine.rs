@@ -227,7 +227,7 @@ impl<'a> Probes for LayerProbes<'a> {
             self.ahat = Some(self.stages.pattern_probe(
                 qh, self.k_rep.clone(), self.seq, self.prof)?);
         }
-        Ok(self.ahat.as_ref().unwrap())
+        Ok(self.ahat.as_ref().expect("invariant: probe computed above"))
     }
 
     fn vslash_map(&mut self) -> Result<&Tensor> {
@@ -236,7 +236,7 @@ impl<'a> Probes for LayerProbes<'a> {
             self.vslash = Some(self.stages.vslash_probe(
                 qh, self.k_rep.clone(), self.seq, self.prof)?);
         }
-        Ok(self.vslash.as_ref().unwrap())
+        Ok(self.vslash.as_ref().expect("invariant: probe computed above"))
     }
 
     fn flex_map(&mut self) -> Result<&Tensor> {
@@ -244,7 +244,7 @@ impl<'a> Probes for LayerProbes<'a> {
             self.flex = Some(self.stages.flex_probe(
                 self.q.clone(), self.k_rep.clone(), self.seq, self.prof)?);
         }
-        Ok(self.flex.as_ref().unwrap())
+        Ok(self.flex.as_ref().expect("invariant: probe computed above"))
     }
 }
 

@@ -206,9 +206,9 @@ impl<E: EngineCore> Scheduler<E> {
 
     fn release_blocks(&mut self, s: &mut Session<E>) {
         if !s.blocks.is_empty() {
-            // blocks are only ever handed out by this scheduler, so a
-            // release can only fail on an internal invariant violation
-            self.kv.release(&s.blocks).expect("kv release");
+            self.kv.release(&s.blocks).expect(
+                "invariant: released blocks were handed out by this \
+                 scheduler");
             s.blocks.clear();
         }
     }
@@ -248,21 +248,31 @@ impl<E: EngineCore> Scheduler<E> {
             if self.active() >= self.max_active {
                 return Ok(());
             }
+            // Peek the queue head; the `let else` arms below that pop
+            // it again can only see the same non-empty queue, so their
+            // `return Ok(())` fallbacks are unreachable no-ops — they
+            // exist so this path is panic-free (lint: panic-hygiene).
             let Some(front) = self.queue.front() else { return Ok(()) };
-            if front.req.prompt_len() == 0 {
-                let s = self.queue.pop_front().unwrap();
+            let prompt_len = front.req.prompt_len();
+            let need = KvAllocator::blocks_needed(
+                prompt_len, self.decode_tokens, engine.layers_total());
+            if prompt_len == 0 {
+                let Some(s) = self.queue.pop_front() else {
+                    return Ok(());
+                };
                 self.reject(s, RejectReason::EmptyPrompt);
                 continue;
             }
-            let need = KvAllocator::blocks_needed(
-                front.req.prompt_len(), self.decode_tokens,
-                engine.layers_total());
             if !self.kv.can_alloc(need) {
                 if count_retry {
-                    let f = self.queue.front_mut().unwrap();
+                    let Some(f) = self.queue.front_mut() else {
+                        return Ok(());
+                    };
                     f.admit_attempts += 1;
                     if f.admit_attempts > self.admit_retries {
-                        let s = self.queue.pop_front().unwrap();
+                        let Some(s) = self.queue.pop_front() else {
+                            return Ok(());
+                        };
                         self.reject(s, RejectReason::KvExhausted {
                             blocks_needed: need,
                             retries: self.admit_retries,
@@ -272,7 +282,9 @@ impl<E: EngineCore> Scheduler<E> {
                 }
                 return Ok(()); // head of line waits; FIFO preserved
             }
-            let mut s = self.queue.pop_front().unwrap();
+            let Some(mut s) = self.queue.pop_front() else {
+                return Ok(());
+            };
             match engine.begin_prefill(&s.req.tokens) {
                 Ok(task) => {
                     s.blocks = self.kv.alloc(need)?;
@@ -305,7 +317,9 @@ impl<E: EngineCore> Scheduler<E> {
     /// work sort key: chunks left × per-chunk cost.
     fn remaining_cost(&self, engine: &E, s: &Session<E>) -> usize {
         let (done, total) = engine.prefill_progress(
-            s.prefill.as_ref().expect("prefilling session has a task"));
+            s.prefill.as_ref().expect(
+                "invariant: sessions in `prefilling` hold a prefill \
+                 task"));
         let chunks_left =
             total.saturating_sub(done).div_ceil(self.chunk_layers);
         chunks_left * self.chunk_cost(engine, s)
@@ -321,7 +335,9 @@ impl<E: EngineCore> Scheduler<E> {
     fn advance_prefill(&mut self, engine: &mut E, i: usize) -> Result<()> {
         let id = self.prefilling[i].req.id;
         let step = engine.prefill_chunk(
-            self.prefilling[i].prefill.as_mut().unwrap(),
+            self.prefilling[i].prefill.as_mut().expect(
+                "invariant: sessions in `prefilling` hold a prefill \
+                 task"),
             self.chunk_layers);
         let done = match step {
             Ok(d) => d,
@@ -332,7 +348,8 @@ impl<E: EngineCore> Scheduler<E> {
             }
         };
         let s = &mut self.prefilling[i];
-        let (ld, lt) = engine.prefill_progress(s.prefill.as_ref().unwrap());
+        let (ld, lt) = engine.prefill_progress(s.prefill.as_ref().expect(
+            "invariant: sessions in `prefilling` hold a prefill task"));
         s.sink.send(Event::PrefillProgress {
             id,
             layers_done: ld,
@@ -340,7 +357,9 @@ impl<E: EngineCore> Scheduler<E> {
         });
         if done {
             let mut s = self.prefilling.swap_remove(i);
-            let task = s.prefill.take().unwrap();
+            let task = s.prefill.take().expect(
+                "invariant: sessions in `prefilling` hold a prefill \
+                 task");
             let max_new = s.req.max_new_tokens
                 .min(self.decode_tokens.max(1));
             let (dec, stats) = match engine.start_decode(task, max_new) {
@@ -381,7 +400,9 @@ impl<E: EngineCore> Scheduler<E> {
                     break;
                 }
                 let s = &mut self.decoding[i];
-                match engine.decode_step(s.decode.as_mut().unwrap())? {
+                match engine.decode_step(s.decode.as_mut().expect(
+                    "invariant: sessions in `decoding` hold a decode \
+                     session"))? {
                     Some(tok) => {
                         budget -= 1;
                         spent_decode += 1;
@@ -473,7 +494,8 @@ impl<E: EngineCore> Scheduler<E> {
     /// the terminal `Done` event.
     fn finish(&mut self, engine: &E, mut s: Session<E>) -> Response {
         self.release_blocks(&mut s);
-        let d = s.decode.take().unwrap();
+        let d = s.decode.take().expect(
+            "invariant: sessions in `decoding` hold a decode session");
         let generated = engine.generated(&d).to_vec();
         let decode_us = engine.decode_elapsed_us(&d);
         let stats = s.stats.take().unwrap_or_default();

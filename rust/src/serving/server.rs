@@ -82,7 +82,9 @@ where
 {
     let (tx, rx) = mpsc::channel::<Command>();
     let (rep_tx, rep_rx) = mpsc::channel::<String>();
-    std::thread::spawn(move || {
+    // thread creation goes through exec (layering: `std::thread` is
+    // exec's alone — pallas-lint enforces it)
+    crate::exec::spawn_worker("serving-engine", move || {
         let (mut sched, mut engine) = match factory() {
             Ok(x) => x,
             Err(e) => {
@@ -211,7 +213,7 @@ impl ServerBuilder {
         let ServerBuilder { config, model } = self;
         let serve = config.serve.clone();
         spawn(move || {
-            let registry = crate::eval::open_registry(&config)?;
+            let registry = crate::runtime::open_registry(&config)?;
             let engine = EngineBuilder::new(registry, &model)
                 .method_config(config.method.clone())
                 .pattern_cache(config.serve.pattern_cache.clone())

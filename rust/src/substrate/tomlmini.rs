@@ -5,6 +5,7 @@
 
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
@@ -100,6 +101,51 @@ pub fn parse(src: &str) -> Result<Toml> {
         out.entries.insert(full, val);
     }
     Ok(out)
+}
+
+/// Serialize back to the flat subset this parser accepts: one dotted
+/// `key = value` line per entry (a top-level `a.b = v` line flattens
+/// to the same key as `[a]` + `b = v`), so `parse(&emit(t))` is
+/// entry-identical to `t` for every document `parse` accepts — string
+/// values out of `parse` can never contain `"` or newlines, and
+/// arrays are always flat, which is exactly what the emitter handles.
+pub fn emit(t: &Toml) -> String {
+    let mut out = String::new();
+    for (k, v) in &t.entries {
+        out.push_str(k);
+        out.push_str(" = ");
+        emit_value(v, &mut out);
+        out.push('\n');
+    }
+    out
+}
+
+fn emit_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Str(s) => {
+            out.push('"');
+            out.push_str(s);
+            out.push('"');
+        }
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                let _ = write!(out, "{}", *n as i64);
+            } else {
+                let _ = write!(out, "{n}");
+            }
+        }
+        Value::Arr(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                emit_value(x, out);
+            }
+            out.push(']');
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -198,6 +244,29 @@ x = 1
     fn comment_inside_string_kept() {
         let t = parse("s = \"a#b\"").unwrap();
         assert_eq!(t.get("s").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn emit_roundtrips_parsed_documents() {
+        let t1 = parse(SAMPLE).unwrap();
+        let text = emit(&t1);
+        let t2 = parse(&text).unwrap();
+        assert_eq!(t1.entries, t2.entries);
+        // flat dotted keys, sorted: stable output for diffs
+        assert!(text.contains("method.nested.x = 1\n"));
+        assert!(text.contains("name = \"demo\"\n"));
+    }
+
+    #[test]
+    fn emit_value_forms() {
+        let t = parse(
+            "f = 0.25\ni = 3\nb = false\ns = \"a#b\"\na = [1, 2]\n")
+            .unwrap();
+        let t2 = parse(&emit(&t)).unwrap();
+        assert_eq!(t.entries, t2.entries);
+        assert!(emit(&t).contains("f = 0.25\n"));
+        assert!(emit(&t).contains("i = 3\n"));
+        assert!(emit(&t).contains("a = [1, 2]\n"));
     }
 
     #[test]

@@ -1,0 +1,6 @@
+// lint fixture: order-bearing state inside a fan_out closure.
+pub fn plan(pool: &Pool, state: &Shared, n: usize) -> Vec<u32> {
+    pool.fan_out(n, |h| {
+        state.inner.borrow_mut().decide_pattern(h)
+    })
+}

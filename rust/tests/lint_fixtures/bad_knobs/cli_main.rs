@@ -1,0 +1,4 @@
+// lint fixture: only the workers knob is wired up here.  (Careful:
+// the flag lookup scans raw text, so this comment must not name the
+// missing flag.)
+pub const USAGE: &str = "serve [--workers N]";

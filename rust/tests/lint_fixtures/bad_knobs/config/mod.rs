@@ -1,0 +1,6 @@
+// lint fixture: serve.magic_level has neither a CLI flag nor a
+// design-doc entry; serve.workers is wired correctly for contrast.
+pub fn apply(t: &Toml, c: &mut Cfg) {
+    c.workers = t.usize_or("serve.workers", c.workers);
+    c.magic = t.usize_or("serve.magic_level", c.magic);
+}

@@ -1,0 +1,6 @@
+// lint fixture: the pattern engine reaching up into serving.
+use crate::serving::Scheduler;
+
+pub fn peek(s: &Scheduler) -> usize {
+    s.depth()
+}

@@ -1,0 +1,6 @@
+// lint fixture: serving importing a harness and spawning raw threads.
+use crate::eval::open_registry;
+
+pub fn start() {
+    std::thread::spawn(|| run());
+}

@@ -1,0 +1,9 @@
+// lint fixture: raw panic sites in the hot path — an unwrap and an
+// expect whose message is not an "invariant: ..." contract.
+pub fn pop(q: &mut Vec<u32>) -> u32 {
+    q.pop().unwrap()
+}
+
+pub fn head(q: &[u32]) -> u32 {
+    q.first().copied().expect("queue is non-empty")
+}

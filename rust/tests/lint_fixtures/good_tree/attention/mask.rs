@@ -1,0 +1,5 @@
+// lint fixture: a pure per-head fan-out closure — nothing in the
+// argument span carries order-bearing state.
+pub fn masks(pool: &Pool, n: usize) -> Vec<u32> {
+    pool.fan_out(n, |h| search(h))
+}

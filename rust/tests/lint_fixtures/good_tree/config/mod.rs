@@ -1,0 +1,5 @@
+// lint fixture: a serve knob that is wired end to end — parsed here,
+// `--workers` in cli_main.rs, named in the design doc the test passes.
+pub fn apply(t: &Toml, c: &mut Cfg) {
+    c.workers = t.usize_or("serve.workers", c.workers);
+}

@@ -1,0 +1,5 @@
+// lint fixture: `exec` is the sanctioned thread owner, so naming
+// std::thread here is allowed by the layering rule.
+pub fn spawn() {
+    std::thread::spawn(|| {}).join().ok();
+}

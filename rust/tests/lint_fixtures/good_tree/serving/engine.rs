@@ -1,0 +1,5 @@
+// lint fixture: the one sanctioned panic form in the hot path — an
+// expect whose message documents the invariant.
+pub fn take(x: Option<u32>) -> u32 {
+    x.expect("invariant: populated by the caller")
+}

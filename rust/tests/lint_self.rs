@@ -1,0 +1,188 @@
+//! Self-tests for pallas-lint: fixture trees under
+//! `rust/tests/lint_fixtures/` (one clean tree plus one violating
+//! tree per rule, asserted down to exact file/line/rule), the binary's
+//! exit codes, and the load-bearing gate — the shipped sources must be
+//! lint-clean against the committed `lint_baseline.toml` and DESIGN.md,
+//! so `cargo test` fails the moment the tree and the baseline drift.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use shareprefill::lint::{self, baseline, rules};
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures")
+}
+
+fn check(tree: &str, base: &baseline::Baseline, design: Option<&str>)
+         -> Vec<lint::Diagnostic> {
+    lint::check_tree(&fixtures().join(tree), Some(base), design)
+        .expect("fixture tree must be walkable")
+        .diagnostics
+}
+
+fn empty() -> baseline::Baseline {
+    baseline::Baseline::default()
+}
+
+fn keys(diags: &[lint::Diagnostic]) -> Vec<(String, usize, &str)> {
+    diags.iter().map(|d| (d.file.clone(), d.line, d.rule)).collect()
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let design = "knob table: serve.workers maps to --workers";
+    let diags = check("good_tree", &empty(), Some(design));
+    assert!(diags.is_empty(), "unexpected findings: {diags:?}");
+}
+
+#[test]
+fn bad_layering_exact_diagnostics() {
+    let diags = check("bad_layering", &empty(), None);
+    assert_eq!(keys(&diags), vec![
+        ("attention/leak.rs".to_string(), 2, rules::RULE_LAYERING),
+        ("serving/server.rs".to_string(), 2, rules::RULE_LAYERING),
+        ("serving/server.rs".to_string(), 5, rules::RULE_LAYERING),
+    ]);
+    assert!(diags[0].message.contains("may not import `serving`"));
+    assert!(diags[1].message.contains("`eval`"));
+    assert!(diags[2].message.contains("std::thread"));
+}
+
+#[test]
+fn bad_determinism_exact_diagnostics() {
+    let diags = check("bad_determinism", &empty(), None);
+    assert_eq!(keys(&diags), vec![
+        ("attention/par.rs".to_string(), 4, rules::RULE_DETERMINISM),
+        ("attention/par.rs".to_string(), 4, rules::RULE_DETERMINISM),
+    ]);
+    assert!(diags[0].message.contains("borrow_mut"),
+            "offset order: borrow_mut first on the line");
+    assert!(diags[1].message.contains("decide_pattern"));
+}
+
+#[test]
+fn bad_panic_flags_new_sites() {
+    let diags = check("bad_panic", &empty(), None);
+    assert_eq!(keys(&diags), vec![
+        ("serving/sched.rs".to_string(), 4, rules::RULE_PANIC),
+        ("serving/sched.rs".to_string(), 8, rules::RULE_PANIC),
+    ]);
+    assert!(diags[0].message.contains("`unwrap()`"));
+    assert!(diags[0].message.contains("baseline allows 0"));
+    assert!(diags[1].message.contains("`expect(..)`"));
+}
+
+#[test]
+fn baseline_freezes_and_ratchets() {
+    // exact freeze: no findings
+    let frozen = baseline::parse("\"serving/sched.rs\" = 2\n").unwrap();
+    assert!(check("bad_panic", &frozen, None).is_empty());
+
+    // baseline above reality: the shrink must be recorded
+    let loose = baseline::parse("\"serving/sched.rs\" = 5\n").unwrap();
+    let diags = check("bad_panic", &loose, None);
+    assert_eq!(keys(&diags),
+               vec![("serving/sched.rs".to_string(), 1,
+                     rules::RULE_PANIC)]);
+    assert!(diags[0].message.contains("stale baseline"));
+
+    // baseline entry for a file with no sites at all: same ratchet
+    let ghost = baseline::parse(
+        "\"serving/gone.rs\" = 1\n\"serving/sched.rs\" = 2\n").unwrap();
+    let diags = check("bad_panic", &ghost, None);
+    assert_eq!(keys(&diags),
+               vec![("serving/gone.rs".to_string(), 1,
+                     rules::RULE_PANIC)]);
+    assert!(diags[0].message.contains("stale baseline"));
+}
+
+#[test]
+fn bad_knobs_exact_diagnostics() {
+    let design = "documented knobs: serve.workers only";
+    let diags = check("bad_knobs", &empty(), Some(design));
+    assert_eq!(keys(&diags), vec![
+        ("config/mod.rs".to_string(), 5, rules::RULE_KNOBS),
+        ("config/mod.rs".to_string(), 5, rules::RULE_KNOBS),
+    ]);
+    assert!(diags[0].message.contains("--magic-level"),
+            "flag half first: {}", diags[0].message);
+    assert!(diags[1].message.contains("DESIGN.md"));
+}
+
+#[test]
+fn write_baseline_counts_match_found_sites() {
+    // base = None is the --write-baseline path: no ratchet comparison,
+    // panic_counts carries what would be frozen
+    let report = lint::check_tree(&fixtures().join("bad_panic"),
+                                  None, None).unwrap();
+    assert!(report.diagnostics.is_empty(),
+            "write mode must not emit ratchet findings");
+    assert_eq!(report.panic_counts.get("serving/sched.rs"), Some(&2));
+    let b = baseline::parse(&baseline::render(&report.panic_counts))
+        .unwrap();
+    assert_eq!(b.allowed("serving/sched.rs"), 2);
+}
+
+#[test]
+fn diagnostic_render_format() {
+    let diags = check("bad_layering", &empty(), None);
+    let line = diags[0].to_string();
+    assert!(line.starts_with("attention/leak.rs:2: [layering] "),
+            "rendered: {line}");
+}
+
+#[test]
+fn binary_exit_codes() {
+    let bin = env!("CARGO_BIN_EXE_pallas-lint");
+    // cwd = the fixtures dir: no lint_baseline.toml / DESIGN.md there,
+    // so the binary's defaults are skipped and fixtures stand alone
+    let run = |tree: &str| {
+        Command::new(bin)
+            .args(["--check", tree])
+            .current_dir(fixtures())
+            .output()
+            .expect("pallas-lint binary runs")
+    };
+
+    let good = run("good_tree");
+    assert_eq!(good.status.code(), Some(0), "good tree is clean");
+    let stdout = String::from_utf8_lossy(&good.stdout);
+    assert!(stdout.contains("pallas-lint: clean (5 file(s) checked)"),
+            "stdout: {stdout}");
+
+    let bad = run("bad_layering");
+    assert_eq!(bad.status.code(), Some(1), "findings exit 1");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains("attention/leak.rs:2: [layering]"),
+            "stdout: {stdout}");
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("3 finding(s)"), "stderr: {stderr}");
+
+    let missing = run("no_such_tree");
+    assert_eq!(missing.status.code(), Some(2), "usage/IO error exit 2");
+}
+
+/// The gate: the shipped tree itself must be clean against the
+/// committed baseline and DESIGN.md.  This is what keeps the Rust
+/// scanner and `tools/lint_baseline_gen.py` honest about each other —
+/// the committed `lint_baseline.toml` was generated by the Python
+/// replica, and this test replays it through the Rust implementation.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let base = baseline::load(&root.join("lint_baseline.toml"))
+        .expect("committed baseline parses");
+    let design = std::fs::read_to_string(root.join("DESIGN.md"))
+        .expect("DESIGN.md is readable");
+    let report = lint::check_tree(&root.join("rust/src"), Some(&base),
+                                  Some(&design)).unwrap();
+    for d in &report.diagnostics {
+        eprintln!("{d}");
+    }
+    assert!(report.diagnostics.is_empty(),
+            "pallas-lint findings on the shipped tree — run `cargo run \
+             --bin pallas-lint -- --check rust/src` for details");
+    assert!(report.files > 40,
+            "walker saw only {} files — wrong root?", report.files);
+}

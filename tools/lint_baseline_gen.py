@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Generate lint_baseline.toml for pallas-lint's panic-hygiene rule.
+
+This is a byte-for-byte replica of the counting semantics implemented in
+rust/src/lint/ (scan.rs + rules.rs).  Run it after burning down or adding
+panic sites in the hot path to refresh the committed baseline:
+
+    python3 tools/lint_baseline_gen.py > lint_baseline.toml
+
+(`pallas-lint --check rust/src --write-baseline` does the same thing from
+the Rust side; this script exists so the baseline can be regenerated in
+environments without a Rust toolchain.)
+"""
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "rust", "src")
+
+IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+PANIC_MACROS = ["panic!", "unreachable!", "todo!", "unimplemented!"]
+
+
+def scrub(src):
+    """Blank comments and string/char literal contents with spaces
+    (newlines preserved), returning (scrubbed, {offset: literal_body}).
+
+    The literal map keys are the byte offset of the opening quote of each
+    (non-raw) string literal; values are the literal body text.
+    """
+    b = list(src)
+    n = len(src)
+    literals = {}
+    out = b[:]
+    i = 0
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            while i < n and src[i] != "\n":
+                out[i] = " "
+                i += 1
+        elif c == "/" and nxt == "*":
+            depth = 0
+            while i < n:
+                if src[i] == "/" and i + 1 < n and src[i + 1] == "*":
+                    depth += 1
+                    out[i] = " "
+                    out[i + 1] = " "
+                    i += 2
+                elif src[i] == "*" and i + 1 < n and src[i + 1] == "/":
+                    depth -= 1
+                    out[i] = " "
+                    out[i + 1] = " "
+                    i += 2
+                    if depth == 0:
+                        break
+                else:
+                    if src[i] != "\n":
+                        out[i] = " "
+                    i += 1
+        elif c == "r" and (nxt == '"' or nxt == "#"):
+            # raw string r"..." / r#"..."# (possibly more #s)
+            j = i + 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and src[j] == '"':
+                close = '"' + "#" * hashes
+                k = src.find(close, j + 1)
+                end = (k + len(close)) if k != -1 else n
+                for p in range(i, end):
+                    if src[p] != "\n":
+                        out[p] = " "
+                i = end
+            else:
+                i += 1
+        elif c == '"':
+            start = i
+            j = i + 1
+            body = []
+            while j < n:
+                if src[j] == "\\" and j + 1 < n:
+                    body.append(src[j:j + 2])
+                    j += 2
+                elif src[j] == '"':
+                    break
+                else:
+                    body.append(src[j])
+                    j += 1
+            end = j + 1 if j < n else n
+            for p in range(i, end):
+                if src[p] != "\n":
+                    out[p] = " "
+            literals[start] = "".join(body)
+            i = end
+        elif c == "'":
+            # char literal vs lifetime: 'x' or '\x' is a literal; 'ident
+            # (no closing quote right after) is a lifetime
+            if nxt == "\\":
+                j = i + 2
+                while j < n and src[j] != "'":
+                    j += 1
+                end = j + 1 if j < n else n
+                for p in range(i, end):
+                    if src[p] != "\n":
+                        out[p] = " "
+                i = end
+            elif i + 2 < n and src[i + 2] == "'":
+                for p in range(i, i + 3):
+                    out[p] = " "
+                i += 3
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out), literals
+
+
+def test_spans(scrubbed):
+    """Spans of `#[cfg(test)] mod … { … }` blocks (byte ranges)."""
+    spans = []
+    pos = 0
+    attr = "#[cfg(test)]"
+    while True:
+        a = scrubbed.find(attr, pos)
+        if a == -1:
+            break
+        open_b = scrubbed.find("{", a + len(attr))
+        if open_b == -1 or "mod" not in scrubbed[a + len(attr):open_b]:
+            pos = a + len(attr)
+            continue
+        depth = 0
+        j = open_b
+        end = len(scrubbed)
+        while j < len(scrubbed):
+            if scrubbed[j] == "{":
+                depth += 1
+            elif scrubbed[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    end = j + 1
+                    break
+            j += 1
+        spans.append((a, end))
+        pos = end
+    return spans
+
+
+def in_spans(spans, off):
+    return any(a <= off < b for a, b in spans)
+
+
+def skip_ws(s, i):
+    while i < len(s) and s[i] in " \t\r\n":
+        i += 1
+    return i
+
+
+def panic_sites(src):
+    """Offsets of panic-hygiene findings, per the pallas-lint semantics:
+    .unwrap(), .expect(..) without an "invariant: …" literal message,
+    and panic-family macros — all outside #[cfg(test)] mod blocks."""
+    scrubbed, literals = scrub(src)
+    spans = test_spans(scrubbed)
+    sites = []
+    pos = 0
+    while True:
+        i = scrubbed.find(".unwrap", pos)
+        if i == -1:
+            break
+        j = skip_ws(scrubbed, i + len(".unwrap"))
+        if j < len(scrubbed) and scrubbed[j] == "(":
+            k = skip_ws(scrubbed, j + 1)
+            if k < len(scrubbed) and scrubbed[k] == ")":
+                after = scrubbed[i + len(".unwrap"):i + len(".unwrap") + 1]
+                if after not in IDENT:  # not .unwrap_or etc.
+                    if not in_spans(spans, i):
+                        sites.append((i, "unwrap"))
+        pos = i + 1
+    pos = 0
+    while True:
+        i = scrubbed.find(".expect", pos)
+        if i == -1:
+            break
+        after = scrubbed[i + len(".expect"):i + len(".expect") + 1]
+        if after in IDENT:  # .expect_err etc.
+            pos = i + 1
+            continue
+        j = skip_ws(scrubbed, i + len(".expect"))
+        if j < len(scrubbed) and scrubbed[j] == "(":
+            # a string-literal argument is blanked to spaces in the
+            # scrubbed text, so skip_ws runs past it: the literal (if
+            # any) is the first one recorded in (j, k]
+            k = skip_ws(scrubbed, j + 1)
+            lit = None
+            for off in range(j + 1, k + 1):
+                if off in literals:
+                    lit = literals[off]
+                    break
+            ok = lit is not None and lit.startswith("invariant:")
+            if not ok and not in_spans(spans, i):
+                sites.append((i, "expect"))
+        pos = i + 1
+    for mac in PANIC_MACROS:
+        pos = 0
+        while True:
+            i = scrubbed.find(mac, pos)
+            if i == -1:
+                break
+            before = scrubbed[i - 1:i]
+            if before not in IDENT and not in_spans(spans, i):
+                sites.append((i, mac))
+            pos = i + 1
+    return sorted(sites)
+
+
+def scoped(rel):
+    return (rel.startswith("serving/") or rel.startswith("exec/")
+            or rel == "methods/pattern_cache.rs")
+
+
+def main():
+    counts = {}
+    for dirpath, _, files in os.walk(ROOT):
+        for f in sorted(files):
+            if not f.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+            if not scoped(rel):
+                continue
+            with open(path) as fh:
+                src = fh.read()
+            n = len(panic_sites(src))
+            if n:
+                counts[rel] = n
+    print("# pallas-lint panic-hygiene baseline — frozen counts of")
+    print("# unwrap()/expect()/panic-family sites in the serving hot path")
+    print("# (serving/, exec/, methods/pattern_cache.rs; test modules")
+    print("# excluded).  This file may only shrink: pallas-lint fails if a")
+    print("# file exceeds its count here (new panic site) OR falls below it")
+    print("# (stale baseline — regenerate with `pallas-lint --check")
+    print("# rust/src --write-baseline` or tools/lint_baseline_gen.py so")
+    print("# the burn-down is recorded).  Files absent from this list are")
+    print("# at zero.")
+    for rel in sorted(counts):
+        print(f'"{rel}" = {counts[rel]}')
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--debug":
+        for dirpath, _, files in os.walk(ROOT):
+            for f in sorted(files):
+                if f.endswith(".rs"):
+                    path = os.path.join(dirpath, f)
+                    rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+                    if scoped(rel):
+                        with open(path) as fh:
+                            src = fh.read()
+                        for off, kind in panic_sites(src):
+                            line = src[:off].count("\n") + 1
+                            print(f"{rel}:{line}: {kind}")
+    else:
+        main()
