@@ -25,14 +25,20 @@
 //!    `serve.workers` 1 / 2 / 4 — simulated prefill time must strictly
 //!    decrease (asserted; CI fails on a scaling regression) while the
 //!    outputs stay identical.
+//! 5. **Fleet scaling** (artifact-free): a mixed-length workload at
+//!    `serve.shards` 1 / 2 / 4 — aggregate simulated prefill
+//!    throughput (total tokens over the busiest shard's modeled
+//!    makespan) must strictly increase with the shard count (asserted;
+//!    CI fails on a scaling regression).
 //!
 //!   cargo run --release --example serve_bench -- \
-//!       [requests] [ctx] [--sim-only] [--json BENCH_6.json]
+//!       [requests] [ctx] [--sim-only] [--json BENCH_7.json]
 //!
 //! `--json` writes one row per SimEngine scenario (name, tokens/s,
 //! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
 
 use shareprefill::config::{MethodKind, ServeConfig};
+use shareprefill::serving::fleet::spawn_fleet;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::sim::SimEngine;
 use shareprefill::serving::{server, Event, ServerBuilder};
@@ -306,6 +312,91 @@ fn worker_scaling_scenario() -> Vec<ScenarioRow> {
     rows
 }
 
+/// Fleet scaling: a mixed-length workload (long + short prompts) at
+/// `serve.shards` 1 / 2 / 4.  Throughput is computed from the *modeled*
+/// per-request prefill cost (tokens × layers × ns/token/layer — the
+/// exact work `SimEngine` simulates) over the busiest shard's makespan,
+/// so the scaling assertion is deterministic on oversubscribed CI
+/// runners where four spinning shards contend for two cores; TTFT
+/// percentiles are real measured wall-clock.  Aggregate throughput
+/// must strictly increase 1 → 2 → 4 (asserted; CI re-asserts from the
+/// JSON).
+fn fleet_scaling_scenario() -> Vec<ScenarioRow> {
+    const LONG_TOKENS: usize = 2048;
+    const SHORT_TOKENS: usize = 256;
+    const EACH: usize = 8;
+    const LAYERS: usize = 8;
+    const NS_PER_TOKEN_LAYER: u64 = 2_000;
+    const TOTAL_TOKENS: usize = EACH * (LONG_TOKENS + SHORT_TOKENS);
+
+    println!("== fleet scaling ({EACH} x {LONG_TOKENS} tok + {EACH} x \
+              {SHORT_TOKENS} tok, shards 1/2/4) ==");
+    let mut rows = Vec::new();
+    let mut prev_tput = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            max_batch_tokens: 4096,
+            chunk_layers: 1,
+            decode_tokens: 2,
+            kv_blocks: 4096,
+            max_concurrent_prefills: 2,
+            shards,
+            ..Default::default()
+        };
+        let mut fleet = spawn_fleet(shards, {
+            let cfg = cfg.clone();
+            move |_| Ok((Scheduler::new(&cfg),
+                         SimEngine::new(LAYERS)
+                             .with_work(NS_PER_TOKEN_LAYER)))
+        });
+        // interleave long and short prompts so the router sees the
+        // mixed-length stream the placement score is built for
+        let lens: Vec<usize> = (0..EACH)
+            .flat_map(|_| [LONG_TOKENS, SHORT_TOKENS])
+            .collect();
+        let sessions: Vec<_> = lens.iter()
+            .map(|&l| fleet.submit(vec![7; l], 2))
+            .collect();
+        // modeled per-shard makespan from the router's actual placement
+        let mut shard_ns = vec![0u64; shards];
+        for (s, &len) in sessions.iter().zip(&lens) {
+            let shard = fleet.assignment_of(s.id).unwrap_or(0);
+            shard_ns[shard] +=
+                (len * LAYERS) as u64 * NS_PER_TOKEN_LAYER;
+        }
+        let makespan_s = shard_ns.iter().copied().max().unwrap_or(1)
+            as f64 / 1e9;
+        let mut ttft = Summary::new();
+        let mut prefill = Vec::new();
+        for s in sessions {
+            if let Some(o) = drain_session(s) {
+                ttft.add(o.ttft_ms);
+                prefill.push(o.prefill_ms);
+            }
+        }
+        let _ = fleet.shutdown();
+        let tput = TOTAL_TOKENS as f64 / makespan_s;
+        println!("shards {shards}: modeled makespan {:8.2} ms -> \
+                  {tput:10.0} tok/s, ttft p50 {:8.2} ms",
+                 makespan_s * 1e3, ttft.p50());
+        assert!(tput > prev_tput,
+                "aggregate prefill throughput must strictly increase \
+                 with the shard count (shards {shards}: {tput:.0} !> \
+                 {prev_tput:.0} tok/s)");
+        prev_tput = tput;
+        rows.push(ScenarioRow {
+            name: format!("fleet_shards_s{shards}"),
+            tokens_per_s: tput,
+            ttft_p50_ms: ttft.p50(),
+            ttft_p95_ms: ttft.percentile(95.0),
+            prefill_ms_mean: mean(&prefill),
+            cache_hit_rate: 0.0,
+        });
+    }
+    println!();
+    rows
+}
+
 /// Per-method uniform stream over the real artifact-backed engine.
 fn real_engine_scenario(n: usize, ctx: usize) {
     for kind in [MethodKind::Flash, MethodKind::SharePrefill] {
@@ -344,13 +435,13 @@ fn real_engine_scenario(n: usize, ctx: usize) {
     }
 }
 
-/// Render the rows as the `BENCH_6.json` artifact (no JSON serializer
+/// Render the rows as the `BENCH_7.json` artifact (no JSON serializer
 /// in the offline vendor set; the schema is flat enough to emit by
 /// hand).  Non-finite values are clamped to 0 so the output always
 /// parses.
 fn render_json(rows: &[ScenarioRow]) -> String {
     let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
-    let mut s = String::from("{\n  \"pr\": 6,\n  \"scenarios\": [\n");
+    let mut s = String::from("{\n  \"pr\": 7,\n  \"scenarios\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \
@@ -403,6 +494,9 @@ fn main() -> anyhow::Result<()> {
     // the scaling headline: same work, more hardware -> strictly less
     // simulated prefill time (asserted inside)
     rows.extend(worker_scaling_scenario());
+    // the fleet headline: same mixed workload, more engine shards ->
+    // strictly more aggregate prefill throughput (asserted inside)
+    rows.extend(fleet_scaling_scenario());
 
     if let Some(path) = json_path {
         std::fs::write(&path, render_json(&rows))?;

@@ -9,8 +9,9 @@
 //!     coordinator runs on every prefill (vslash search, pivotal
 //!     construction, mask packing, abar scatter), artifact-free.  The
 //!     JSON (per-kernel mean_ms + ns_per_token) is merged into the
-//!     bench-smoke trajectory artifact (`BENCH_6.json`) by CI, which
-//!     schema-checks it.
+//!     bench-smoke trajectory artifact (`BENCH_7.json`) by CI, which
+//!     schema-checks it and fails any kernel more than 25% over its
+//!     committed ns/token.
 
 use shareprefill::attention::{construct_pivotal, scatter_abar,
                               search_vslash, BlockMask};

@@ -26,7 +26,7 @@ SUBCOMMANDS
             [--model M] [--method ours|flash|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
             [--chunk-layers N] [--max-concurrent-prefills N]
-            [--workers N] [--admit-retries N] [--kv-blocks N]
+            [--workers N] [--shards N] [--admit-retries N] [--kv-blocks N]
             [--max-batch-tokens N] [--max-batch-requests N]
             [--queue-capacity N] [--pattern-cache]
             [--pattern-cache-capacity N] [--pattern-cache-validation T]
@@ -89,15 +89,16 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let model = args.str_or("model", "sim-llama");
     let n = args.usize_or("requests", 8)?;
     let ctx = args.usize_or("ctx", 1024)?;
-    let handle = ServerBuilder::new()
+    let mut handle = ServerBuilder::new()
         .config(cfg.clone())
         .model(&model)
-        .spawn();
+        .spawn_fleet();
     println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
               ({} layer(s)/prefill chunk, {} concurrent prefill(s), \
-              {} worker(s), pattern cache {})",
+              {} worker(s), {} shard(s), pattern cache {})",
              cfg.method.kind.name(), cfg.serve.chunk_layers,
              cfg.serve.max_concurrent_prefills, cfg.serve.workers,
+             handle.shard_count(),
              if cfg.serve.pattern_cache.enabled { "on" } else { "off" });
     let sessions: Vec<_> = (0..n)
         .map(|_| handle.submit(tasks::latency_prompt(ctx),

@@ -144,6 +144,12 @@ pub struct ServeConfig {
     /// head-indexed result slots.  1 (the default) is the serial path;
     /// any `N` is bit-identical to it — only faster.
     pub workers: usize,
+    /// Engine shards behind the fleet front door (`serving::fleet`):
+    /// each shard is an actor-style worker owning its own scheduler, KV
+    /// cache and worker pool, fed by a per-shard mailbox and placed by
+    /// the load-aware session-affine router.  1 (the default) is the
+    /// single-engine path, bit-identical to a fleet-less build.
+    pub shards: usize,
     /// Cross-request pivotal-pattern cache (SharePrefill only).
     pub pattern_cache: PatternCacheConfig,
 }
@@ -160,6 +166,7 @@ impl Default for ServeConfig {
             max_concurrent_prefills: 2,
             admit_retries: 4,
             workers: 1,
+            shards: 1,
             pattern_cache: PatternCacheConfig::default(),
         }
     }
@@ -229,6 +236,8 @@ impl Config {
             t.usize_or("serve.admit_retries", self.serve.admit_retries);
         self.serve.workers =
             t.usize_or("serve.workers", self.serve.workers).max(1);
+        self.serve.shards =
+            t.usize_or("serve.shards", self.serve.shards).max(1);
         let pc = &mut self.serve.pattern_cache;
         pc.enabled = t.bool_or("serve.pattern_cache.enabled", pc.enabled);
         pc.capacity =
@@ -278,6 +287,8 @@ impl Config {
             args.usize_or("admit-retries", self.serve.admit_retries)?;
         self.serve.workers =
             args.usize_or("workers", self.serve.workers)?.max(1);
+        self.serve.shards =
+            args.usize_or("shards", self.serve.shards)?.max(1);
         if args.flag("pattern-cache") {
             self.serve.pattern_cache.enabled = true;
         }
@@ -307,6 +318,24 @@ mod tests {
         assert_eq!(c.serve.max_concurrent_prefills, 2);
         assert_eq!(c.serve.admit_retries, 4);
         assert_eq!(c.serve.workers, 1, "serial prefill is the default");
+        assert_eq!(c.serve.shards, 1, "single engine is the default");
+    }
+
+    #[test]
+    fn shards_knob_toml_and_cli() {
+        let t = tomlmini::parse("[serve]\nshards = 4\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&t).unwrap();
+        assert_eq!(c.serve.shards, 4);
+        let args = Args::parse(
+            ["x", "--shards", "2"].map(String::from), &[]).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.serve.shards, 2);
+        // 0 clamps to the single-engine path
+        let zero = Args::parse(
+            ["x", "--shards", "0"].map(String::from), &[]).unwrap();
+        c.apply_args(&zero).unwrap();
+        assert_eq!(c.serve.shards, 1);
     }
 
     #[test]
@@ -416,6 +445,7 @@ chunk_layers = 2
 max_concurrent_prefills = 3
 admit_retries = 6
 workers = 4
+shards = 3
 
 [serve.pattern_cache]
 enabled = true
@@ -439,6 +469,7 @@ max_age = 9
         assert_eq!(c.serve.max_concurrent_prefills, 3);
         assert_eq!(c.serve.admit_retries, 6);
         assert_eq!(c.serve.workers, 4);
+        assert_eq!(c.serve.shards, 3);
         assert!(c.serve.pattern_cache.enabled);
         assert_eq!(c.serve.pattern_cache.capacity, 17);
         assert!((c.serve.pattern_cache.validation - 0.6).abs() < 1e-12);

@@ -69,6 +69,23 @@ pub fn layering(rel: &str, sc: &Scrubbed) -> Vec<(usize, String)> {
             }
         }
     }
+    // the raw-thread entry point itself is reserved for the two
+    // sanctioned engine-owner loops: the single-engine server and the
+    // fleet's shard actors.  Everyone else goes through WorkerPool.
+    let spawn_owner = module == THREAD_OWNER
+        || rel == "serving/server.rs"
+        || rel.starts_with("serving/fleet");
+    if !spawn_owner {
+        for off in scan::word_hits(s, b"exec::spawn_worker", 0, s.len()) {
+            if !scan::in_spans(&spans, off) {
+                out.push((off, format!(
+                    "`exec::spawn_worker` outside its owners (module \
+                     `{module}`) — only `serving/server.rs` and \
+                     `serving/fleet` may own engine threads; use \
+                     exec::WorkerPool for data-parallel work")));
+            }
+        }
+    }
     if BELOW_SERVING.contains(&module) {
         for off in scan::word_hits(s, b"crate::serving", 0, s.len()) {
             if !scan::in_spans(&spans, off) {
@@ -242,6 +259,18 @@ mod tests {
              #[cfg(test)]\nmod tests { fn t() { \
              std::thread::sleep(d); } }");
         assert!(layering("util/timer.rs", &sc).is_empty());
+    }
+
+    #[test]
+    fn layering_reserves_spawn_worker_for_engine_owners() {
+        let sc = scrub("crate::exec::spawn_worker(\"w\", move || {});\n");
+        assert!(layering("serving/server.rs", &sc).is_empty());
+        assert!(layering("serving/fleet/mod.rs", &sc).is_empty());
+        assert!(layering("exec/pool.rs", &sc).is_empty());
+        let hits = layering("serving/scheduler.rs", &sc);
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].1.contains("exec::spawn_worker"));
+        assert_eq!(layering("eval/latency.rs", &sc).len(), 1);
     }
 
     #[test]

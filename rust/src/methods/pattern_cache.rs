@@ -53,6 +53,8 @@ pub struct PatternCacheStats {
     pub lookups: u64,
     /// Lookups that returned at least one warm candidate.
     pub warm_lookups: u64,
+    /// Entries absorbed from peer shards' broadcasts (fleet mode).
+    pub absorbed: u64,
 }
 
 /// One cached pattern plus its freshness stamp.  Entries are immutable
@@ -64,6 +66,9 @@ struct CacheSlot {
     entry: Rc<PivotalEntry>,
     /// Publish generation at which this entry was last (re)written.
     refreshed_at: u64,
+    /// `Some(shard)` when the entry was absorbed from a peer shard's
+    /// broadcast, `None` for locally published entries.
+    origin: Option<usize>,
 }
 
 /// The cross-request pivotal-pattern cache: seq bucket → cluster id →
@@ -79,6 +84,12 @@ pub struct PatternCache {
     buckets: HashMap<usize, HashMap<usize, CacheSlot>>,
     /// Monotone publish counter (the staleness clock).
     generation: u64,
+    /// Locally published entries awaiting a broadcast drain (deep
+    /// copies — the fleet ships them across threads).  Bounded at
+    /// `capacity` entries between drains, oldest dropped first, so a
+    /// single-engine deployment that never drains pays O(capacity)
+    /// memory, not O(traffic).
+    pending: Vec<(usize, usize, PivotalEntry)>,
     pub stats: PatternCacheStats,
 }
 
@@ -88,6 +99,7 @@ impl PatternCache {
             cfg,
             buckets: HashMap::new(),
             generation: 0,
+            pending: Vec::new(),
             stats: PatternCacheStats::default(),
         }
     }
@@ -162,13 +174,69 @@ impl PatternCache {
                     None => Rc::new(entry.clone()),
                 },
                 refreshed_at: gen,
+                origin: None,
             };
+            // queue the broadcast copy (deep clone: the export crosses
+            // threads, so it cannot share this cache's Rc)
+            self.pending.push((seq, cluster, slot.entry.as_ref().clone()));
             match bucket.insert(cluster, slot) {
                 Some(_) => self.stats.refreshes += 1,
                 None => self.stats.inserts += 1,
             }
         }
+        if self.pending.len() > self.cfg.capacity {
+            let drop_n = self.pending.len() - self.cfg.capacity;
+            self.pending.drain(..drop_n);
+        }
         self.enforce_capacity();
+    }
+
+    /// Drain the locally published entries queued for the fleet's
+    /// cross-shard broadcast, sorted by (bucket, cluster) so the
+    /// broadcast order is deterministic regardless of dict iteration
+    /// order.  Empty when the cache is disabled (nothing ever queues).
+    pub fn take_broadcast(&mut self) -> Vec<(usize, usize, PivotalEntry)> {
+        let mut out = std::mem::take(&mut self.pending);
+        out.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        out
+    }
+
+    /// Absorb a peer shard's broadcast entry as a warm candidate tagged
+    /// with its origin.  Three rules keep this safe: (1) local entries
+    /// always win — a remote pattern never overwrites one this engine
+    /// derived itself; (2) an absorbed entry is never re-broadcast, so
+    /// gifts cannot loop between shards; (3) adoption stays
+    /// validation-gated at lookup time ([`probe_recall`]), so a
+    /// broadcast can offer a candidate but never change a mask by
+    /// itself.
+    pub fn absorb_remote(&mut self, seq: usize, cluster: usize,
+                         entry: PivotalEntry, origin: usize) {
+        if !self.cfg.enabled || self.cfg.capacity == 0 {
+            return;
+        }
+        let gen = self.generation;
+        let bucket = self.buckets.entry(seq).or_default();
+        if bucket.contains_key(&cluster) {
+            return; // rule 1: the local entry wins
+        }
+        bucket.insert(cluster, CacheSlot {
+            entry: Rc::new(entry),
+            refreshed_at: gen,
+            origin: Some(origin),
+        });
+        self.stats.absorbed += 1;
+        self.enforce_capacity();
+    }
+
+    /// Origin tag of a cached entry: `Some(None)` = published locally,
+    /// `Some(Some(shard))` = absorbed from that shard's broadcast,
+    /// `None` = not cached.
+    pub fn origin_of(&self, seq: usize, cluster: usize)
+                     -> Option<Option<usize>> {
+        self.buckets
+            .get(&seq)
+            .and_then(|b| b.get(&cluster))
+            .map(|s| s.origin)
     }
 
     /// Drop least-recently-refreshed entries until within capacity
@@ -338,6 +406,66 @@ mod tests {
         let mut c = PatternCache::new(on(0, 8));
         c.publish(256, &dict_of(&[(0, 4)]));
         assert!(c.is_empty());
+        assert!(c.take_broadcast().is_empty());
+        c.absorb_remote(256, 0, entry(4, 0), 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn publishes_queue_for_broadcast_in_key_order() {
+        let mut c = PatternCache::new(on(16, 8));
+        c.publish(512, &dict_of(&[(1, 8), (0, 8)]));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        let out = c.take_broadcast();
+        let keys: Vec<(usize, usize)> =
+            out.iter().map(|(s, cl, _)| (*s, *cl)).collect();
+        assert_eq!(keys, vec![(256, 0), (512, 0), (512, 1)]);
+        assert!(c.take_broadcast().is_empty(), "drain is one-shot");
+        // disabled cache never queues
+        let mut off = PatternCache::new(PatternCacheConfig::default());
+        off.publish(256, &dict_of(&[(0, 4)]));
+        assert!(off.take_broadcast().is_empty());
+    }
+
+    #[test]
+    fn pending_broadcast_is_bounded_by_capacity() {
+        let mut c = PatternCache::new(on(2, 1000));
+        c.publish(256, &dict_of(&[(0, 4)]));
+        c.publish(512, &dict_of(&[(1, 8)]));
+        c.publish(1024, &dict_of(&[(2, 16)]));
+        let out = c.take_broadcast();
+        assert_eq!(out.len(), 2, "pending must not outgrow capacity");
+        // oldest queued entry (bucket 256) was the one dropped
+        assert!(out.iter().all(|(s, _, _)| *s != 256));
+    }
+
+    #[test]
+    fn absorb_remote_tags_origin_and_local_wins() {
+        let mut c = PatternCache::new(on(16, 8));
+        c.absorb_remote(256, 0, entry(4, 7), 3);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.absorbed, 1);
+        assert_eq!(c.origin_of(256, 0), Some(Some(3)));
+        assert_eq!(c.origin_of(256, 9), None);
+        // the absorbed entry is a warm candidate …
+        assert_eq!(c.lookup(256).len(), 1);
+        // … but was never queued for re-broadcast (no gift loops)
+        assert!(c.take_broadcast().is_empty());
+        // a local publish overwrites it and clears the origin tag
+        c.publish(256, &dict_of(&[(0, 4)]));
+        assert_eq!(c.origin_of(256, 0), Some(None));
+        // and a remote gift never overwrites a local entry
+        c.absorb_remote(256, 0, entry(4, 9), 5);
+        assert_eq!(c.origin_of(256, 0), Some(None));
+        assert_eq!(c.stats.absorbed, 1);
+    }
+
+    #[test]
+    fn disabled_cache_never_absorbs() {
+        let mut c = PatternCache::new(PatternCacheConfig::default());
+        c.absorb_remote(256, 0, entry(4, 0), 1);
+        assert!(c.is_empty());
+        assert_eq!(c.stats.absorbed, 0);
     }
 
     #[test]

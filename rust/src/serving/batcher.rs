@@ -86,7 +86,8 @@ impl<T: BatchItem> Batcher<T> {
     pub fn next_batch(&mut self) -> Vec<T> {
         let mut batch = Vec::new();
         let mut tokens = 0usize;
-        while let Some(front) = self.queue.front() {
+        loop {
+            let Some(front) = self.queue.front() else { break };
             let t = front.cost();
             let fits = batch.is_empty()
                 || (tokens + t <= self.max_batch_tokens
@@ -94,8 +95,9 @@ impl<T: BatchItem> Batcher<T> {
             if !fits {
                 break;
             }
+            let Some(item) = self.queue.pop_front() else { break };
             tokens += t;
-            batch.push(self.queue.pop_front().unwrap());
+            batch.push(item);
             if batch.len() >= self.max_batch_requests {
                 break;
             }

@@ -34,7 +34,8 @@ use anyhow::{bail, Result};
 use std::cell::RefCell;
 use std::rc::Rc;
 
-use crate::attention::{pack_heads, scatter_abar_heads, BlockMask};
+use crate::attention::{pack_heads, scatter_abar_heads, BlockMask,
+                       PivotalEntry};
 use crate::config::{MethodConfig, MethodKind, PatternCacheConfig};
 use crate::exec::WorkerPool;
 use crate::methods::{build_strategy, CacheDecision, PatternCache,
@@ -170,6 +171,23 @@ impl DecodeSession {
     }
 }
 
+/// One cross-shard pattern-cache gift: a pivotal entry published by a
+/// completed prefill on shard `origin`, rebroadcast by the fleet front
+/// door into every peer engine's cache (see `serving::fleet`).  `entry`
+/// is `None` for engines that model the cache at bucket granularity
+/// (the `SimEngine`'s warm-bucket gifts carry no pattern payload).
+#[derive(Debug, Clone)]
+pub struct PatternExport {
+    /// Shard the entry was published on (stamped by the shard loop; 0
+    /// until then).
+    pub origin: usize,
+    /// Sequence-length bucket the entry belongs to.
+    pub seq: usize,
+    /// Cluster id within the bucket.
+    pub cluster: usize,
+    pub entry: Option<PivotalEntry>,
+}
+
 /// The engine interface the scheduler drives.  [`Engine`] is the real
 /// artifact-backed implementation; [`super::sim::SimEngine`] is a
 /// deterministic stand-in so scheduler/server tests and benches run
@@ -206,6 +224,22 @@ pub trait EngineCore {
 
     /// Accumulated decode compute time.
     fn decode_elapsed_us(&self, d: &Self::Decode) -> u64;
+
+    /// Drain pattern-cache entries published since the last call, for
+    /// the fleet's cross-shard broadcast (`origin` is left 0 — the shard
+    /// loop stamps it).  Engines without a shareable cache return
+    /// nothing; the default keeps single-engine deployments zero-cost.
+    fn take_pattern_exports(&mut self) -> Vec<PatternExport> {
+        Vec::new()
+    }
+
+    /// Absorb a peer shard's broadcast entry into this engine's cache.
+    /// Must be a no-op when the cache is off, and must never bypass
+    /// validation-gated adoption: an absorbed entry is only ever a warm
+    /// *candidate* — it cannot change a mask by itself.
+    fn absorb_pattern_export(&mut self, export: &PatternExport) {
+        let _ = export;
+    }
 }
 
 /// Lazy probe provider for one layer (computes each probe at most once).
@@ -627,6 +661,32 @@ impl EngineCore for Engine {
 
     fn decode_elapsed_us(&self, d: &DecodeSession) -> u64 {
         d.decode_us
+    }
+
+    fn take_pattern_exports(&mut self) -> Vec<PatternExport> {
+        let Some(cache) = &self.pattern_cache else {
+            return Vec::new();
+        };
+        cache
+            .borrow_mut()
+            .take_broadcast()
+            .into_iter()
+            .map(|(seq, cluster, entry)| PatternExport {
+                origin: 0,
+                seq,
+                cluster,
+                entry: Some(entry),
+            })
+            .collect()
+    }
+
+    fn absorb_pattern_export(&mut self, export: &PatternExport) {
+        if let (Some(cache), Some(entry)) =
+            (&self.pattern_cache, &export.entry)
+        {
+            cache.borrow_mut().absorb_remote(
+                export.seq, export.cluster, entry.clone(), export.origin);
+        }
     }
 }
 

@@ -1,0 +1,713 @@
+//! **Engine fleet**: N actor-style engine shards behind one front door.
+//!
+//! Each shard is a worker thread owning a full serving stack — its own
+//! [`Scheduler`], KV allocator, pattern cache and worker pool — fed by
+//! a private mailbox ([`ShardCmd`]) exactly like the single-engine
+//! server loop in `serving/server.rs`.  The [`Fleet`] front door places
+//! sessions with the [`FleetRouter`] (load-aware, session-affine,
+//! deterministic tie-breaks) and forwards follow-up commands to the
+//! owning shard's mailbox.
+//!
+//! **Mailbox protocol.**  Commands flow one way (front door → shard);
+//! bookkeeping flows back on a per-shard note channel ([`ShardNote`]):
+//! `Retired(id)` when a session received its terminal event (so the
+//! front door's registry and the router's load model stay honest), and
+//! `Export` when the shard's pattern cache published a new entry.  The
+//! front door rebroadcasts each export to every *other* shard as
+//! [`ShardCmd::Absorb`] — entries are tagged with their origin shard,
+//! absorbed only as validation-gated warm candidates, never
+//! re-broadcast (no gift loops), and the whole path is inert when the
+//! pattern cache is off.
+//!
+//! **Supervision.**  Every shard thread carries a drop guard that
+//! reports its exit on a third channel — including a panicking unwind.
+//! The front door pumps its supervision loop on every public call: a
+//! shard that died outside shutdown has its already-terminated sessions
+//! retired (notes drained first, so nobody is double-terminated), every
+//! session it still owned receives exactly one synthesized terminal
+//! [`Event::Error`], and a fresh shard is spawned in its place.  KV
+//! reclamation is by construction: the dead shard's allocator died with
+//! its thread, and the replacement starts empty.  There is no
+//! supervisor thread — supervision is lazy, which keeps the fleet
+//! deterministic to drive from tests.
+//!
+//! `spawn_fleet(1, …)` does not build any of this: it returns the plain
+//! single-engine [`server::spawn`] handle, so `serve.shards = 1` is
+//! bit-identical to the pre-fleet path (asserted at the unit, fuzz and
+//! bench levels).
+
+pub mod router;
+
+pub use router::FleetRouter;
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use super::engine::{EngineCore, PatternExport};
+use super::metrics::Metrics;
+use super::request::{Request, RequestId};
+use super::scheduler::Scheduler;
+use super::server::{self, ServerHandle};
+use super::session::{Event, EventSink, SessionHandle};
+
+/// Commands accepted by a shard's mailbox.
+pub enum ShardCmd {
+    Submit(Request, EventSink),
+    Cancel(RequestId),
+    /// Absorb a peer shard's pattern-cache broadcast.
+    Absorb(PatternExport),
+    /// Fault injection (fuzz/tests): exit immediately *without* any
+    /// cleanup, exactly like a panicking unwind — the exit guard
+    /// reports an unclean death and the supervisor takes over.
+    Kill,
+    /// Drain all in-flight work, then exit cleanly.
+    Shutdown,
+}
+
+/// Bookkeeping a shard streams back to the front door.
+pub enum ShardNote {
+    /// This session received its terminal event on the shard.
+    Retired(RequestId),
+    /// The shard's pattern cache published an entry (origin stamped).
+    Export(PatternExport),
+}
+
+/// A shard's exit report, sent by its drop guard on *any* exit path —
+/// clean shutdown, engine error, fault injection, or panic unwind.
+pub struct ShardExit {
+    /// True only for a drained shutdown with zero KV blocks in use.
+    pub clean: bool,
+    /// Lifetime metrics, harvested on orderly exits (`None` after a
+    /// panic or kill — the scheduler died mid-flight).
+    pub metrics: Option<Metrics>,
+}
+
+/// Drop guard ensuring the exit report is sent even through a panic.
+struct ExitGuard {
+    tx: mpsc::Sender<ShardExit>,
+    clean: bool,
+    metrics: Option<Metrics>,
+}
+
+impl Drop for ExitGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ShardExit {
+            clean: self.clean,
+            metrics: self.metrics.take(),
+        });
+    }
+}
+
+/// The shard actor body: the single-engine server loop plus the note
+/// stream (retirements + pattern exports) and the exit guard.
+fn run_shard<E: EngineCore>(
+    shard: usize,
+    mut sched: Scheduler<E>,
+    mut engine: E,
+    rx: mpsc::Receiver<ShardCmd>,
+    notes: mpsc::Sender<ShardNote>,
+    exit: mpsc::Sender<ShardExit>,
+) {
+    sched.track_retirements();
+    let mut guard = ExitGuard { tx: exit, clean: false, metrics: None };
+    let mut shutting_down = false;
+    loop {
+        // ingest commands (blocking only when fully idle)
+        loop {
+            let cmd = if !sched.has_work() && !shutting_down {
+                match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => {
+                        // front door dropped: drain and exit
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            };
+            match cmd {
+                ShardCmd::Submit(r, sink) => {
+                    sched.submit(r, sink);
+                }
+                ShardCmd::Cancel(id) => {
+                    sched.cancel(id);
+                }
+                ShardCmd::Absorb(x) => engine.absorb_pattern_export(&x),
+                ShardCmd::Kill => return,
+                ShardCmd::Shutdown => shutting_down = true,
+            }
+        }
+        let result = sched.run_round(&mut engine);
+        // bookkeeping first: retirements before any exit report, so the
+        // front door never synthesizes a second terminal event for a
+        // session this shard already terminated
+        for id in sched.take_retired() {
+            let _ = notes.send(ShardNote::Retired(id));
+        }
+        for mut x in engine.take_pattern_exports() {
+            x.origin = shard;
+            let _ = notes.send(ShardNote::Export(x));
+        }
+        if let Err(e) = result {
+            // terminal engine failure: every live session got an Error
+            // from fail_all; report the (orderly) unclean exit
+            sched.fail_all(&format!("{e:#}"));
+            for id in sched.take_retired() {
+                let _ = notes.send(ShardNote::Retired(id));
+            }
+            guard.metrics = Some(std::mem::take(&mut sched.metrics));
+            return;
+        }
+        if shutting_down && !sched.has_work() {
+            guard.clean = sched.kv.used() == 0;
+            guard.metrics = Some(std::mem::take(&mut sched.metrics));
+            return;
+        }
+    }
+}
+
+/// One shard's channel triple as held by the front door.
+struct ShardSlot {
+    tx: mpsc::Sender<ShardCmd>,
+    notes: mpsc::Receiver<ShardNote>,
+    exit: mpsc::Receiver<ShardExit>,
+}
+
+fn spawn_shard<E, F>(shard: usize, factory: F) -> ShardSlot
+where
+    E: EngineCore + 'static,
+    F: Fn(usize) -> Result<(Scheduler<E>, E)> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel::<ShardCmd>();
+    let (note_tx, note_rx) = mpsc::channel::<ShardNote>();
+    let (exit_tx, exit_rx) = mpsc::channel::<ShardExit>();
+    // thread creation goes through exec (layering: `std::thread` is
+    // exec's alone; `serving/fleet` and `server.rs` are the only
+    // modules allowed to name this entry point — pallas-lint enforces
+    // both)
+    crate::exec::spawn_worker(&format!("fleet-shard-{shard}"), move || {
+        match factory(shard) {
+            Ok((sched, engine)) => {
+                run_shard(shard, sched, engine, rx, note_tx, exit_tx);
+            }
+            Err(_) => {
+                // init failure: report straight away so the front door
+                // can fail the shard's sessions and retry
+                let _ = exit_tx.send(ShardExit {
+                    clean: false,
+                    metrics: None,
+                });
+            }
+        }
+    });
+    ShardSlot { tx, notes: note_rx, exit: exit_rx }
+}
+
+/// The sharded front door: router + session registry + supervisor.
+/// Lives on the caller's thread; all public methods pump the
+/// supervision loop first, so crashes are observed (and repaired) at
+/// the next interaction rather than by a background thread.
+pub struct Fleet {
+    shards: Vec<ShardSlot>,
+    router: FleetRouter,
+    /// Sessions not yet known to have reached a terminal event, with a
+    /// clone of their sink so the supervisor can synthesize exactly one
+    /// terminal `Error` if their shard dies.
+    sessions: HashMap<RequestId, EventSink>,
+    spawner: Box<dyn Fn(usize) -> ShardSlot + Send>,
+    next_id: u64,
+    restarts: u64,
+    /// Metrics harvested from shards that exited before shutdown.
+    harvested: Vec<Metrics>,
+}
+
+impl Fleet {
+    fn submit(&mut self, tokens: Vec<i32>, max_new_tokens: usize)
+              -> SessionHandle {
+        self.pump();
+        let id = self.next_id;
+        self.next_id += 1;
+        let (sink, events) = EventSink::channel();
+        let shard = self.router.place(id, tokens.len());
+        self.sessions.insert(id, sink.clone());
+        // a send to a shard that died since the pump above is not lost:
+        // the session is registered, so the supervisor synthesizes its
+        // terminal Error when it observes the crash
+        let _ = self.shards[shard].tx.send(ShardCmd::Submit(
+            Request::new(id, tokens, max_new_tokens), sink));
+        SessionHandle { id, events }
+    }
+
+    fn cancel(&mut self, id: RequestId) {
+        self.pump();
+        // affinity: late cancels still reach the owning shard's mailbox
+        if let Some(shard) = self.router.route(id) {
+            let _ = self.shards[shard].tx.send(ShardCmd::Cancel(id));
+        }
+    }
+
+    /// Drain every shard's notes (retirements + export broadcast), then
+    /// observe at most one exit per shard and repair it.  Returns the
+    /// number of notes processed (a test-visible progress signal).
+    fn pump(&mut self) -> usize {
+        let mut drained = 0usize;
+        for i in 0..self.shards.len() {
+            loop {
+                let note = match self.shards[i].notes.try_recv() {
+                    Ok(n) => n,
+                    Err(_) => break,
+                };
+                drained += 1;
+                match note {
+                    ShardNote::Retired(id) => {
+                        self.router.retire(id);
+                        self.sessions.remove(&id);
+                    }
+                    ShardNote::Export(x) => {
+                        for (j, s) in self.shards.iter().enumerate() {
+                            if j != i {
+                                let _ = s.tx.send(
+                                    ShardCmd::Absorb(x.clone()));
+                            }
+                        }
+                    }
+                }
+            }
+            let exit = match self.shards[i].exit.try_recv() {
+                Ok(e) => Some(e),
+                // disconnected without a report: the thread died before
+                // its guard existed (factory panic) — treat as a crash
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    Some(ShardExit { clean: false, metrics: None })
+                }
+                Err(mpsc::TryRecvError::Empty) => None,
+            };
+            if let Some(exit) = exit {
+                self.on_exit(i, exit);
+            }
+        }
+        drained
+    }
+
+    /// Supervision: shard `shard` exited outside shutdown.  Harvest its
+    /// metrics, retire everything it already terminated (buffered notes
+    /// count), give every session it still owned exactly one terminal
+    /// `Error`, and restart it with a fresh scheduler/engine/KV.
+    /// Reclamation is by construction: the dead allocator's blocks died
+    /// with its thread.  A persistently failing factory shows up as a
+    /// climbing `restarts` counter, one respawn per pump — the front
+    /// door never spins on it.
+    fn on_exit(&mut self, shard: usize, exit: ShardExit) {
+        if let Some(m) = exit.metrics {
+            self.harvested.push(m);
+        }
+        while let Ok(note) = self.shards[shard].notes.try_recv() {
+            if let ShardNote::Retired(id) = note {
+                self.router.retire(id);
+                self.sessions.remove(&id);
+            }
+            // a dead shard's unflushed exports are dropped: gifts are
+            // only candidates, and forwarding from a crashed publisher
+            // buys nothing worth the extra state machine
+        }
+        for id in self.router.forget_shard(shard) {
+            let Some(sink) = self.sessions.remove(&id) else { continue };
+            sink.send(Event::Error {
+                id,
+                message: format!(
+                    "engine shard {shard} crashed; session aborted (its \
+                     KV and queue slots died with the shard)"),
+            });
+        }
+        self.restarts += 1;
+        self.shards[shard] = (self.spawner)(shard);
+    }
+
+    fn kill_shard(&mut self, shard: usize) {
+        if shard < self.shards.len() {
+            let _ = self.shards[shard].tx.send(ShardCmd::Kill);
+        }
+    }
+
+    fn shutdown(mut self) -> String {
+        self.pump();
+        for s in &self.shards {
+            let _ = s.tx.send(ShardCmd::Shutdown);
+        }
+        let mut agg = Metrics::new();
+        for m in &self.harvested {
+            agg.absorb(m);
+        }
+        let mut crashed = 0usize;
+        let mut shard_lines = Vec::new();
+        for i in 0..self.shards.len() {
+            let exit = self.shards[i].exit.recv().ok();
+            // final note drain either way: sessions the shard
+            // terminated while we were waiting must not be
+            // double-terminated below
+            while let Ok(note) = self.shards[i].notes.try_recv() {
+                if let ShardNote::Retired(id) = note {
+                    self.router.retire(id);
+                    self.sessions.remove(&id);
+                }
+            }
+            match exit {
+                Some(e) => {
+                    if !e.clean {
+                        crashed += 1;
+                    }
+                    if let Some(m) = e.metrics {
+                        shard_lines.push(format!(
+                            "  shard {i}: {} done, {} rejected, {} \
+                             cancelled",
+                            m.requests_completed, m.requests_rejected,
+                            m.requests_cancelled));
+                        agg.absorb(&m);
+                    }
+                }
+                None => crashed += 1,
+            }
+            // sessions a crashed shard still owned get their one
+            // terminal Error here (a clean shard has none left)
+            for id in self.router.forget_shard(i) {
+                let Some(sink) = self.sessions.remove(&id) else {
+                    continue;
+                };
+                sink.send(Event::Error {
+                    id,
+                    message: format!(
+                        "engine shard {i} shut down with the session \
+                         in flight"),
+                });
+            }
+        }
+        // safety net: a session whose shard assignment evaporated
+        // entirely (should be unreachable — forget_shard covers every
+        // placed session)
+        for (id, sink) in self.sessions.drain() {
+            sink.send(Event::Error {
+                id,
+                message: "fleet shut down before the session reached a \
+                          shard".to_string(),
+            });
+        }
+        let mut report = format!(
+            "fleet: {} shards, {} restarts, {} unclean exits, {} \
+             sessions routed",
+            self.shards.len(), self.restarts, crashed,
+            self.router.placed_total());
+        for line in shard_lines {
+            report.push('\n');
+            report.push_str(&line);
+        }
+        report.push('\n');
+        report.push_str(&agg.report());
+        report
+    }
+}
+
+/// One front door over 1..=N engines.  `Single` *is* the pre-fleet
+/// [`ServerHandle`] — no router, no supervisor, no extra hop — so the
+/// default `serve.shards = 1` deployment is bit-identical to a build
+/// without this module.
+pub enum FleetHandle {
+    Single(ServerHandle),
+    Sharded(Box<Fleet>),
+}
+
+impl FleetHandle {
+    /// Submit a prompt; returns the per-session event stream.
+    pub fn submit(&mut self, tokens: Vec<i32>, max_new_tokens: usize)
+                  -> SessionHandle {
+        match self {
+            FleetHandle::Single(h) => h.submit(tokens, max_new_tokens),
+            FleetHandle::Sharded(f) => f.submit(tokens, max_new_tokens),
+        }
+    }
+
+    /// Request cancellation; routed to the session's own shard.
+    pub fn cancel(&mut self, id: RequestId) {
+        match self {
+            FleetHandle::Single(h) => h.cancel(id),
+            FleetHandle::Sharded(f) => f.cancel(id),
+        }
+    }
+
+    /// Graceful shutdown: drain every shard, aggregate their metrics,
+    /// and return the report (prefixed with a fleet summary line when
+    /// sharded).
+    pub fn shutdown(self) -> String {
+        match self {
+            FleetHandle::Single(h) => h.shutdown(),
+            FleetHandle::Sharded(f) => f.shutdown(),
+        }
+    }
+
+    /// Fault injection for tests/fuzzing: make a shard die as if its
+    /// thread panicked.  No-op on a single-engine handle.
+    pub fn kill_shard(&mut self, shard: usize) {
+        if let FleetHandle::Sharded(f) = self {
+            f.kill_shard(shard);
+        }
+    }
+
+    /// Run one supervision pump now (notes + exits); returns the number
+    /// of notes processed.  Tests use this to wait for broadcast
+    /// propagation deterministically; production callers never need it
+    /// (every public call pumps).
+    pub fn pump_now(&mut self) -> usize {
+        match self {
+            FleetHandle::Single(_) => 0,
+            FleetHandle::Sharded(f) => f.pump(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        match self {
+            FleetHandle::Single(_) => 1,
+            FleetHandle::Sharded(f) => f.shards.len(),
+        }
+    }
+
+    /// True when this handle is the plain single-engine server path.
+    pub fn is_single(&self) -> bool {
+        matches!(self, FleetHandle::Single(_))
+    }
+
+    /// Shard restarts performed by the supervisor so far.
+    pub fn restarts(&self) -> u64 {
+        match self {
+            FleetHandle::Single(_) => 0,
+            FleetHandle::Sharded(f) => f.restarts,
+        }
+    }
+
+    /// The shard a session was placed on (`Some(0)` always, when
+    /// single).
+    pub fn assignment_of(&self, id: RequestId) -> Option<usize> {
+        match self {
+            FleetHandle::Single(_) => Some(0),
+            FleetHandle::Sharded(f) => f.router.route(id),
+        }
+    }
+}
+
+/// Spawn `shards` engine shards behind one front door, each built by
+/// `factory(shard)` *on its own thread* (PJRT handles never cross
+/// threads, exactly as in [`server::spawn`]).  `shards <= 1` returns
+/// the plain single-engine server handle — the bit-identity guarantee
+/// for the default config.
+pub fn spawn_fleet<E, F>(shards: usize, factory: F) -> FleetHandle
+where
+    E: EngineCore + 'static,
+    F: Fn(usize) -> Result<(Scheduler<E>, E)> + Clone + Send + 'static,
+{
+    let n = shards.max(1);
+    if n == 1 {
+        return FleetHandle::Single(server::spawn(move || factory(0)));
+    }
+    let spawner: Box<dyn Fn(usize) -> ShardSlot + Send> =
+        Box::new(move |shard| spawn_shard(shard, factory.clone()));
+    let slots = (0..n).map(|i| (spawner)(i)).collect();
+    FleetHandle::Sharded(Box::new(Fleet {
+        shards: slots,
+        router: FleetRouter::new(n),
+        sessions: HashMap::new(),
+        spawner,
+        next_id: 0,
+        restarts: 0,
+        harvested: Vec::new(),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::serving::sim::SimEngine;
+
+    fn sim_fleet(shards: usize, cache: bool, work_ns: u64) -> FleetHandle {
+        let cfg = ServeConfig::default();
+        spawn_fleet(shards, move |_| {
+            let mut e = SimEngine::new(4);
+            if cache {
+                e = e.with_pattern_cache();
+            }
+            if work_ns > 0 {
+                e = e.with_work(work_ns);
+            }
+            Ok((Scheduler::new(&cfg), e))
+        })
+    }
+
+    /// Timing-free event signature (mirrors the fuzz harness's `sig`).
+    fn sig(ev: &Event) -> String {
+        match ev {
+            Event::PrefillProgress { id, layers_done, layers_total } => {
+                format!("P{id}:{layers_done}/{layers_total}")
+            }
+            Event::PrefillDone { id, .. } => format!("F{id}"),
+            Event::Token { id, token, index } => {
+                format!("T{id}:{token}@{index}")
+            }
+            Event::Done { id, response } => {
+                format!("D{id}:{:?}", response.generated)
+            }
+            Event::Cancelled { id } => format!("C{id}"),
+            Event::Rejected { id, reason } => {
+                format!("R{id}:{}", reason.kind())
+            }
+            Event::Error { id, .. } => format!("E{id}"),
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_server_path_bit_identical() {
+        // the same fixed workload through the pre-fleet server and a
+        // 1-shard fleet must yield identical per-session event streams
+        let cfg = ServeConfig::default();
+        let baseline = server::spawn(move || {
+            Ok((Scheduler::new(&cfg), SimEngine::new(4)))
+        });
+        let mut fleet = sim_fleet(1, false, 0);
+        assert!(fleet.is_single());
+        assert_eq!(fleet.shard_count(), 1);
+        assert_eq!(fleet.restarts(), 0);
+        let lens = [64usize, 256, 16];
+        let base_handles: Vec<SessionHandle> = lens
+            .iter()
+            .map(|&l| baseline.submit(vec![7; l], 2))
+            .collect();
+        let fleet_handles: Vec<SessionHandle> = lens
+            .iter()
+            .map(|&l| fleet.submit(vec![7; l], 2))
+            .collect();
+        for (b, f) in base_handles.into_iter().zip(fleet_handles) {
+            assert_eq!(fleet.assignment_of(f.id), Some(0));
+            let bs: Vec<String> = b.collect().iter().map(sig).collect();
+            let fs: Vec<String> = f.collect().iter().map(sig).collect();
+            assert_eq!(bs, fs, "shards=1 must match the server path");
+        }
+        let base_report = baseline.shutdown();
+        let fleet_report = fleet.shutdown();
+        assert!(!fleet_report.contains("fleet:"),
+                "single path must not grow a fleet summary");
+        assert_eq!(base_report.lines().next(), fleet_report.lines().next());
+    }
+
+    #[test]
+    fn fleet_serves_across_shards() {
+        let mut fleet = sim_fleet(2, false, 0);
+        assert!(!fleet.is_single());
+        assert_eq!(fleet.shard_count(), 2);
+        let handles: Vec<SessionHandle> =
+            (0..6).map(|_| fleet.submit(vec![7; 64], 2)).collect();
+        let mut seen_shards = std::collections::HashSet::new();
+        for h in handles {
+            if let Some(s) = fleet.assignment_of(h.id) {
+                seen_shards.insert(s);
+            }
+            let events = h.collect();
+            let last = events.last().expect("stream must not be empty");
+            assert!(matches!(last, Event::Done { .. }),
+                    "expected Done, got {last:?}");
+        }
+        assert_eq!(seen_shards.len(), 2, "load must spread across shards");
+        let report = fleet.shutdown();
+        assert!(report.contains("fleet: 2 shards, 0 restarts"),
+                "missing fleet summary: {report}");
+        assert!(report.contains("requests: 6 done"),
+                "aggregated metrics wrong: {report}");
+    }
+
+    #[test]
+    fn killed_shard_terminates_sessions_once_and_restarts() {
+        // enough simulated work that the kill lands mid-prefill
+        let mut fleet = sim_fleet(2, false, 20_000);
+        let victim = fleet.submit(vec![7; 512], 2);
+        assert_eq!(fleet.assignment_of(victim.id), Some(0),
+                   "first placement must be shard 0 (tie-break)");
+        fleet.kill_shard(0);
+        // the terminal Error for the aborted session is synthesized by
+        // the supervision pump once the exit report lands — drive it
+        for _ in 0..5_000 {
+            fleet.pump_now();
+            if fleet.restarts() >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(fleet.restarts() >= 1, "supervisor never saw the crash");
+        let events = victim.collect();
+        let terminals =
+            events.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1, "exactly one terminal event: {events:?}");
+        assert!(events.last().is_some_and(Event::is_terminal),
+                "stream must end on the terminal event");
+        // the restarted shard serves new sessions normally
+        let next = fleet.submit(vec![7; 16], 1);
+        let last = next.collect().pop().expect("stream must not be empty");
+        assert!(matches!(last, Event::Done { .. }),
+                "restarted shard must serve: got {last:?}");
+        assert!(fleet.restarts() >= 1);
+        let report = fleet.shutdown();
+        assert!(report.contains("restarts"), "summary missing: {report}");
+    }
+
+    #[test]
+    fn broadcast_warms_peer_shards() {
+        let mut fleet = sim_fleet(2, true, 0);
+        // session 0 → shard 0 (tie-break); completing it publishes its
+        // bucket, which the front door rebroadcasts to shard 1
+        let first = fleet.submit(vec![7; 256], 1);
+        let first_events = first.collect();
+        assert!(matches!(first_events.last(),
+                         Some(Event::Done { .. })));
+        // wait for the Retired + Export notes to arrive, then pump so
+        // the Absorb lands in shard 1's mailbox before the next Submit
+        let mut drained = 0usize;
+        for _ in 0..2_000 {
+            drained += fleet.pump_now();
+            if drained >= 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(drained >= 2, "expected Retired + Export notes");
+        // session 1 → shard 1 (shard 0 already served one) runs warm
+        // off the absorbed bucket, never having served 256 itself
+        let second = fleet.submit(vec![7; 256], 1);
+        assert_eq!(fleet.assignment_of(second.id), Some(1));
+        let events = second.collect();
+        let warm = events.iter().any(|e| matches!(
+            e, Event::PrefillDone { stats, .. } if stats.cache_hits > 0));
+        assert!(warm, "peer shard must run warm: {events:?}");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn cancel_routes_to_owning_shard() {
+        // heavy work so the session is still in flight when cancelled
+        let mut fleet = sim_fleet(2, false, 50_000);
+        let h = fleet.submit(vec![7; 512], 4);
+        fleet.cancel(h.id);
+        let events = h.collect();
+        let terminals = events.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1);
+        assert!(matches!(events.last(),
+                         Some(Event::Cancelled { .. })
+                         | Some(Event::Done { .. })),
+                "cancel must land or the session completes: {events:?}");
+        fleet.shutdown();
+    }
+}

@@ -1,0 +1,218 @@
+//! Load-aware placement and session affinity for the engine fleet.
+//!
+//! The router is pure bookkeeping — no channels, no threads — so the
+//! placement policy is unit-testable in isolation and deterministic by
+//! construction:
+//!
+//! * **Placement** scores every shard as `queue depth × estimated
+//!   remaining prefill tokens` and picks the minimum, tie-broken by the
+//!   lowest shard id.  New sessions therefore spread away from loaded
+//!   shards while an idle fleet fills shard 0 first, reproducibly.
+//! * **Affinity**: once placed, a session's id maps to its shard for
+//!   the rest of the process lifetime (the mapping survives
+//!   retirement), so follow-up commands — cancels racing a completion,
+//!   late client actions — always reach the owning mailbox.
+//! * **Retirement** refunds the load model when a session reaches its
+//!   terminal event; **forgetting** a shard (it crashed) refunds all of
+//!   its live sessions at once and reports them, sorted by id, so the
+//!   supervisor can synthesize exactly one terminal event each.
+
+use std::collections::HashMap;
+
+use crate::serving::request::RequestId;
+
+/// Per-session charge retained while the session is live: owning shard
+/// and the prefill-token estimate to refund at retirement.
+#[derive(Debug, Clone, Copy)]
+struct Charge {
+    shard: usize,
+    est_tokens: u64,
+}
+
+/// Session-affine, load-aware request router for `serving::fleet`.
+#[derive(Debug)]
+pub struct FleetRouter {
+    /// Live-session count per shard (the "queue depth" factor).
+    depth: Vec<usize>,
+    /// Estimated remaining prefill tokens per shard.
+    est_tokens: Vec<u64>,
+    /// Charges for sessions that have not yet reached a terminal event.
+    live: HashMap<RequestId, Charge>,
+    /// Full placement history: survives retirement for affinity.
+    assigned: HashMap<RequestId, usize>,
+}
+
+impl FleetRouter {
+    pub fn new(shards: usize) -> FleetRouter {
+        let shards = shards.max(1);
+        FleetRouter {
+            depth: vec![0; shards],
+            est_tokens: vec![0; shards],
+            live: HashMap::new(),
+            assigned: HashMap::new(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.depth.len()
+    }
+
+    /// Load score = queue depth × estimated remaining prefill tokens.
+    /// `u128` so a pathological backlog cannot overflow the product.
+    fn score(&self, shard: usize) -> u128 {
+        self.depth[shard] as u128 * self.est_tokens[shard] as u128
+    }
+
+    /// Place a new session on the least-loaded shard (deterministic
+    /// tie-break: lowest shard id) and charge the load model.  Each
+    /// session is charged at least one token so an all-empty-prompt
+    /// backlog still registers as depth.
+    pub fn place(&mut self, id: RequestId, prompt_tokens: usize) -> usize {
+        let mut best = 0usize;
+        for shard in 1..self.depth.len() {
+            if self.score(shard) < self.score(best) {
+                best = shard;
+            }
+        }
+        let est_tokens = prompt_tokens.max(1) as u64;
+        self.depth[best] += 1;
+        self.est_tokens[best] += est_tokens;
+        self.live.insert(id, Charge { shard: best, est_tokens });
+        self.assigned.insert(id, best);
+        best
+    }
+
+    /// The shard owning `id`, live or retired — affinity means a
+    /// session's follow-up commands always reach the same mailbox.
+    pub fn route(&self, id: RequestId) -> Option<usize> {
+        self.assigned.get(&id).copied()
+    }
+
+    /// Refund a session's load charge after its terminal event.
+    /// Idempotent; the affinity mapping is kept.
+    pub fn retire(&mut self, id: RequestId) {
+        if let Some(c) = self.live.remove(&id) {
+            self.depth[c.shard] -= 1;
+            self.est_tokens[c.shard] -= c.est_tokens;
+        }
+    }
+
+    /// The shard died: refund and return all of its live sessions
+    /// (ascending id, so the supervisor's synthesized terminal events
+    /// are deterministic).  Its replacement starts with an empty load.
+    pub fn forget_shard(&mut self, shard: usize) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .live
+            .iter()
+            .filter(|(_, c)| c.shard == shard)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for &id in &ids {
+            self.retire(id);
+        }
+        ids
+    }
+
+    /// Total sessions ever placed (the fleet summary's "routed" count).
+    pub fn placed_total(&self) -> usize {
+        self.assigned.len()
+    }
+
+    /// Live sessions currently charged to `shard`.
+    pub fn live_on(&self, shard: usize) -> usize {
+        self.depth[shard]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_load_ties_break_by_lowest_shard_id() {
+        let mut r = FleetRouter::new(3);
+        // Empty fleet: every score is 0, so shard 0 must win.
+        assert_eq!(r.place(0, 128), 0);
+        // Depth 1 × 128 on shard 0 vs 0 on shards 1 and 2 → shard 1.
+        assert_eq!(r.place(1, 128), 1);
+        assert_eq!(r.place(2, 128), 2);
+        // All equal again (1 × 128 each): back to shard 0.
+        assert_eq!(r.place(3, 128), 0);
+    }
+
+    #[test]
+    fn placement_is_deterministic_under_replay() {
+        let script: &[usize] = &[512, 16, 2048, 64, 64, 1024, 8, 256];
+        let run = |shards: usize| -> Vec<usize> {
+            let mut r = FleetRouter::new(shards);
+            script
+                .iter()
+                .enumerate()
+                .map(|(id, &len)| r.place(id as u64, len))
+                .collect()
+        };
+        assert_eq!(run(4), run(4));
+        assert_eq!(run(2), run(2));
+    }
+
+    #[test]
+    fn affinity_sticks_across_the_session_lifetime() {
+        let mut r = FleetRouter::new(2);
+        let shard = r.place(7, 4096);
+        assert_eq!(r.route(7), Some(shard));
+        // Load the other shard; the existing session must not move.
+        for id in 100..110 {
+            r.place(id, 4096);
+        }
+        assert_eq!(r.route(7), Some(shard));
+        // Even after retirement the mapping survives, so a late cancel
+        // still reaches the shard that owned the session.
+        r.retire(7);
+        assert_eq!(r.route(7), Some(shard));
+        assert_eq!(r.route(999), None);
+    }
+
+    #[test]
+    fn new_sessions_rebalance_away_from_a_loaded_shard() {
+        let mut r = FleetRouter::new(2);
+        // One huge session lands on shard 0 …
+        assert_eq!(r.place(0, 10_000), 0);
+        // … so a burst of small sessions prefers shard 1 until its
+        // depth × tokens product catches up with 1 × 10_000.
+        let mut on_1 = 0;
+        for id in 1..5 {
+            if r.place(id, 32) == 1 {
+                on_1 += 1;
+            }
+        }
+        assert!(on_1 >= 3, "expected small sessions on shard 1, got {on_1}");
+    }
+
+    #[test]
+    fn retire_refunds_the_load_model() {
+        let mut r = FleetRouter::new(2);
+        r.place(0, 10_000);
+        r.retire(0);
+        r.retire(0); // idempotent
+        assert_eq!(r.live_on(0), 0);
+        // Shard 0 is empty again, so the tie-break sends the next
+        // session back to it.
+        assert_eq!(r.place(1, 64), 0);
+    }
+
+    #[test]
+    fn forget_shard_reports_live_sessions_sorted_and_clears_load() {
+        let mut r = FleetRouter::new(2);
+        r.place(5, 100); // shard 0
+        r.place(2, 100); // shard 1
+        r.place(9, 100); // shard 0 (tie at 1×100 → lowest id)
+        r.retire(5);
+        assert_eq!(r.forget_shard(0), vec![9]);
+        assert_eq!(r.live_on(0), 0);
+        assert_eq!(r.forget_shard(0), Vec::<RequestId>::new());
+        // Affinity survives even a forget: the dead shard's id is still
+        // the routing answer (its replacement holds the mailbox).
+        assert_eq!(r.route(9), Some(0));
+    }
+}

@@ -53,7 +53,9 @@ impl KvAllocator {
         }
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            let b = self.free.pop().unwrap();
+            let b = self.free.pop()
+                .expect("invariant: free list holds >= n blocks \
+                         (length-checked above, &mut self held)");
             debug_assert_eq!(self.refcount[b as usize], 0);
             self.refcount[b as usize] = 1;
             out.push(b);

@@ -72,6 +72,39 @@ impl Metrics {
         self.pool_workers = self.pool_workers.max(stats.pool_workers as u64);
     }
 
+    /// Merge another engine's lifetime metrics into this one (the
+    /// fleet's shard aggregation): counters add, histograms merge
+    /// bucket-for-bucket, the density summary concatenates samples, and
+    /// the pool width takes the max (shards share one configured
+    /// width — a mixed fleet reports the widest).
+    pub fn absorb(&mut self, other: &Metrics) {
+        self.requests_completed += other.requests_completed;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_cancelled += other.requests_cancelled;
+        self.prompt_tokens += other.prompt_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.prefill_us.absorb(&other.prefill_us);
+        self.decode_us.absorb(&other.decode_us);
+        self.queue_us.absorb(&other.queue_us);
+        self.ttft_us.absorb(&other.ttft_us);
+        self.density.absorb(&other.density);
+        self.dense_heads += other.dense_heads;
+        self.shared_heads += other.shared_heads;
+        self.vslash_heads += other.vslash_heads;
+        self.query_aware_heads += other.query_aware_heads;
+        self.cache_hit_heads += other.cache_hit_heads;
+        self.cache_miss_heads += other.cache_miss_heads;
+        self.cache_rejected_heads += other.cache_rejected_heads;
+        self.rounds += other.rounds;
+        self.decode_budget_tokens += other.decode_budget_tokens;
+        self.prefill_budget_tokens += other.prefill_budget_tokens;
+        self.idle_budget_tokens += other.idle_budget_tokens;
+        self.pool_rounds += other.pool_rounds;
+        self.pool_items += other.pool_items;
+        self.pool_span_items += other.pool_span_items;
+        self.pool_workers = self.pool_workers.max(other.pool_workers);
+    }
+
     /// Count-based worker occupancy in `[0, 1]` across all recorded
     /// prefills: items sharded / (critical-path items × pool width).
     /// 1.0 with no recorded fan-outs (a serial engine is fully
@@ -248,6 +281,40 @@ mod tests {
         assert!(r.contains("workers: 4 (2 fan-out rounds, 12 items"),
                 "worker line missing from report: {r}");
         assert!(r.contains("occupancy 75%"), "occupancy wrong: {r}");
+    }
+
+    #[test]
+    fn absorb_merges_shard_metrics() {
+        let mut a = Metrics::new();
+        a.requests_completed = 2;
+        a.prompt_tokens = 100;
+        a.cache_hit_heads = 3;
+        a.ttft_us.record_us(1_000);
+        a.density.add(0.5);
+        a.record_round(4, 2, 0, 8);
+        a.pool_workers = 2;
+        let mut b = Metrics::new();
+        b.requests_completed = 1;
+        b.requests_rejected = 1;
+        b.prompt_tokens = 50;
+        b.cache_miss_heads = 1;
+        b.ttft_us.record_us(3_000);
+        b.density.add(1.0);
+        b.record_round(1, 1, 1, 8);
+        b.pool_workers = 4;
+        a.absorb(&b);
+        assert_eq!(a.requests_completed, 3);
+        assert_eq!(a.requests_rejected, 1);
+        assert_eq!(a.prompt_tokens, 150);
+        assert_eq!(a.ttft_us.count(), 2);
+        assert!((a.ttft_us.mean_us() - 2_000.0).abs() < 1e-9);
+        assert_eq!(a.density.count(), 2);
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.prefill_budget_tokens, 4);
+        assert_eq!(a.pool_workers, 4, "widest shard wins");
+        assert!((a.cache_hit_rate() - 0.75).abs() < 1e-12);
+        let r = a.report();
+        assert!(r.contains("requests: 3 done, 1 rejected, 0 cancelled"));
     }
 
     #[test]

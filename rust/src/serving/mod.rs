@@ -1,11 +1,14 @@
 //! The serving coordinator: session/event types, admission queue, paged
 //! KV-cache accounting, the chunk-resumable prefill/decode engine (the
 //! executor of the paper's Algorithm 1), the continuous-batching
-//! scheduler gluing them together, metrics, and the thread+channel
-//! server front-end with its streaming session API.
+//! scheduler gluing them together, metrics, the thread+channel server
+//! front-end with its streaming session API, and the sharded engine
+//! fleet (router + supervision) that multiplexes N such engines behind
+//! one front door.
 
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod kvcache;
 pub mod metrics;
 pub mod request;
@@ -15,7 +18,8 @@ pub mod session;
 pub mod sim;
 
 pub use engine::{DecodeSession, Engine, EngineBuilder, EngineCore,
-                 PrefillResult, PrefillStats, PrefillTask};
+                 PatternExport, PrefillResult, PrefillStats, PrefillTask};
+pub use fleet::{spawn_fleet, FleetHandle, FleetRouter};
 pub use request::{Request, RequestId, Response};
 pub use scheduler::Scheduler;
 pub use server::{ServerBuilder, ServerHandle};

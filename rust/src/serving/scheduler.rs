@@ -99,6 +99,13 @@ pub struct Scheduler<E: EngineCore> {
     max_active: usize,
     max_prefills: usize,
     admit_retries: usize,
+    /// When true, every id that receives its terminal event is logged to
+    /// `retired` until drained — the fleet front door consumes this so
+    /// its session registry (used to synthesize terminal `Error`s after
+    /// a shard crash) never double-terminates a stream.  Off by default:
+    /// the single-engine path pays nothing.
+    track_retired: bool,
+    retired: Vec<RequestId>,
 }
 
 impl<E: EngineCore> Scheduler<E> {
@@ -117,6 +124,26 @@ impl<E: EngineCore> Scheduler<E> {
             max_active: cfg.max_batch_requests.max(1),
             max_prefills: cfg.max_concurrent_prefills.max(1),
             admit_retries: cfg.admit_retries,
+            track_retired: false,
+            retired: Vec::new(),
+        }
+    }
+
+    /// Enable the terminal-event log drained by [`Scheduler::take_retired`]
+    /// (fleet supervision; see the `track_retired` field).
+    pub fn track_retirements(&mut self) {
+        self.track_retired = true;
+    }
+
+    /// Drain the ids that reached a terminal event since the last call.
+    /// Empty unless [`Scheduler::track_retirements`] was enabled.
+    pub fn take_retired(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.retired)
+    }
+
+    fn log_retired(&mut self, id: RequestId) {
+        if self.track_retired {
+            self.retired.push(id);
         }
     }
 
@@ -145,6 +172,7 @@ impl<E: EngineCore> Scheduler<E> {
                     id: s.req.id,
                     reason: RejectReason::QueueFull,
                 });
+                self.log_retired(s.req.id);
                 false
             }
         }
@@ -195,6 +223,7 @@ impl<E: EngineCore> Scheduler<E> {
         s.state = SessionState::Cancelled;
         self.metrics.requests_cancelled += 1;
         s.sink.send(Event::Cancelled { id: s.req.id });
+        self.log_retired(s.req.id);
     }
 
     fn reject(&mut self, mut s: Session<E>, reason: RejectReason) {
@@ -202,6 +231,7 @@ impl<E: EngineCore> Scheduler<E> {
         s.state = SessionState::Rejected;
         self.metrics.requests_rejected += 1;
         s.sink.send(Event::Rejected { id: s.req.id, reason });
+        self.log_retired(s.req.id);
     }
 
     fn release_blocks(&mut self, s: &mut Session<E>) {
@@ -221,6 +251,7 @@ impl<E: EngineCore> Scheduler<E> {
             id: s.req.id,
             message: message.to_string(),
         });
+        self.log_retired(s.req.id);
     }
 
     /// Fail every live session with a terminal `Error` event (engine
@@ -238,6 +269,7 @@ impl<E: EngineCore> Scheduler<E> {
                 id: s.req.id,
                 message: message.to_string(),
             });
+            self.log_retired(s.req.id);
         }
     }
 
@@ -522,6 +554,7 @@ impl<E: EngineCore> Scheduler<E> {
             id: s.req.id,
             response: response.clone(),
         });
+        self.log_retired(s.req.id);
         response
     }
 }
@@ -594,6 +627,32 @@ mod tests {
         assert!(sched.metrics.cache_hit_rate() > 0.0);
         assert!(sched.metrics.report().contains("pattern cache:"));
         assert_eq!(sched.kv.used(), 0);
+    }
+
+    #[test]
+    fn retirement_log_tracks_terminal_events() {
+        let cfg = ServeConfig { queue_capacity: 1, ..Default::default() };
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        sched.track_retirements();
+        assert!(sched.submit(Request::new(0, vec![7; 16], 1),
+                             EventSink::null()));
+        // queue-full rejection is a terminal event too
+        assert!(!sched.submit(Request::new(1, vec![7; 16], 1),
+                              EventSink::null()));
+        assert_eq!(sched.take_retired(), vec![1]);
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert_eq!(sched.take_retired(), vec![0]);
+        assert!(sched.take_retired().is_empty());
+        // off by default: nothing is logged
+        let mut quiet: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        quiet.submit(Request::new(0, vec![7; 16], 1), EventSink::null());
+        while quiet.has_work() {
+            quiet.run_round(&mut engine).unwrap();
+        }
+        assert!(quiet.take_retired().is_empty());
     }
 
     #[test]

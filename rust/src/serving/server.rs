@@ -207,12 +207,38 @@ impl ServerBuilder {
         self
     }
 
+    /// Engine shards behind the fleet front door (`serve.shards`;
+    /// 1 = the plain single-engine server path).
+    pub fn shards(mut self, n: usize) -> ServerBuilder {
+        self.config.serve.shards = n.max(1);
+        self
+    }
+
     /// Spawn with the real artifact-backed engine (built on the worker
     /// thread via [`EngineBuilder`]).
     pub fn spawn(self) -> ServerHandle {
         let ServerBuilder { config, model } = self;
         let serve = config.serve.clone();
         spawn(move || {
+            let registry = crate::runtime::open_registry(&config)?;
+            let engine = EngineBuilder::new(registry, &model)
+                .method_config(config.method.clone())
+                .pattern_cache(config.serve.pattern_cache.clone())
+                .workers(config.serve.workers)
+                .build()?;
+            Ok((Scheduler::new(&serve), engine))
+        })
+    }
+
+    /// Spawn `serve.shards` artifact-backed engines behind the fleet
+    /// front door.  Each shard builds its own engine *on its own
+    /// thread* (PJRT handles never cross threads); `serve.shards = 1`
+    /// returns the plain single-engine path unchanged.
+    pub fn spawn_fleet(self) -> super::fleet::FleetHandle {
+        let ServerBuilder { config, model } = self;
+        let shards = config.serve.shards;
+        let serve = config.serve.clone();
+        super::fleet::spawn_fleet(shards, move |_shard| {
             let registry = crate::runtime::open_registry(&config)?;
             let engine = EngineBuilder::new(registry, &model)
                 .method_config(config.method.clone())

@@ -11,7 +11,7 @@
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 
-use super::engine::{EngineCore, PrefillStats};
+use super::engine::{EngineCore, PatternExport, PrefillStats};
 use crate::BLOCK_SIZE;
 
 /// Fraction (percent) of the cold per-chunk compute a warm-cache
@@ -52,6 +52,11 @@ pub struct SimEngine {
     /// bit-identical at every width — only the simulated per-chunk
     /// compute shrinks (Amdahl over the per-head fraction).
     workers: u64,
+    /// Buckets newly warmed since the last [`EngineCore::
+    /// take_pattern_exports`] drain — the fleet's cross-shard broadcast
+    /// feed.  Bounded by the number of distinct buckets even if never
+    /// drained; always empty with the cache off.
+    fresh_buckets: Vec<usize>,
 }
 
 pub struct SimPrefill {
@@ -80,6 +85,7 @@ impl SimEngine {
             ns_per_token_layer: 0,
             warm_buckets: None,
             workers: 1,
+            fresh_buckets: Vec::new(),
         }
     }
 
@@ -176,9 +182,13 @@ impl EngineCore for SimEngine {
         let causal = nb * (nb + 1) / 2 * t.layers_total;
         let cache_on = self.warm_buckets.is_some();
         // PrefillDone is the publish point, exactly as in the real
-        // engine: a cancelled prefill never warms the bucket.
+        // engine: a cancelled prefill never warms the bucket.  A bucket
+        // warmed for the first time also feeds the fleet broadcast.
         if let Some(w) = self.warm_buckets.as_mut() {
-            w.insert(Self::bucket_of(t.prompt_len));
+            let bucket = Self::bucket_of(t.prompt_len);
+            if w.insert(bucket) {
+                self.fresh_buckets.push(bucket);
+            }
         }
         let workers = self.workers as usize;
         let stats = PrefillStats {
@@ -232,6 +242,28 @@ impl EngineCore for SimEngine {
 
     fn decode_elapsed_us(&self, d: &SimDecode) -> u64 {
         d.decode_us
+    }
+
+    fn take_pattern_exports(&mut self) -> Vec<PatternExport> {
+        // bucket-granularity gifts: no pattern payload, just "this seq
+        // bucket is warm now"
+        self.fresh_buckets
+            .drain(..)
+            .map(|bucket| PatternExport {
+                origin: 0,
+                seq: bucket,
+                cluster: 0,
+                entry: None,
+            })
+            .collect()
+    }
+
+    fn absorb_pattern_export(&mut self, export: &PatternExport) {
+        // warm the bucket only when the cache is on; an absorbed bucket
+        // is deliberately NOT re-exported (no broadcast loops)
+        if let Some(w) = self.warm_buckets.as_mut() {
+            w.insert(export.seq);
+        }
     }
 }
 
@@ -356,6 +388,46 @@ mod tests {
                     "workers {w}: {} not < {prev}", s.latency_us);
             prev = s.latency_us;
         }
+    }
+
+    #[test]
+    fn exports_drain_fresh_buckets_once() {
+        let mut e = SimEngine::new(4).with_pattern_cache();
+        run_one(&mut e, 256);
+        run_one(&mut e, 256); // repeat bucket: nothing new to export
+        run_one(&mut e, 512);
+        let exports = e.take_pattern_exports();
+        let buckets: Vec<usize> = exports.iter().map(|x| x.seq).collect();
+        assert_eq!(buckets, vec![SimEngine::bucket_of(256),
+                                 SimEngine::bucket_of(512)]);
+        assert!(exports.iter().all(|x| x.entry.is_none()));
+        assert!(e.take_pattern_exports().is_empty(), "drain is one-shot");
+        // cache off: nothing is ever exported
+        let mut off = SimEngine::new(4);
+        run_one(&mut off, 256);
+        assert!(off.take_pattern_exports().is_empty());
+    }
+
+    #[test]
+    fn absorbed_bucket_runs_warm_but_is_not_reexported() {
+        let mut e = SimEngine::new(4).with_pattern_cache();
+        e.absorb_pattern_export(&PatternExport {
+            origin: 1,
+            seq: SimEngine::bucket_of(256),
+            cluster: 0,
+            entry: None,
+        });
+        let s = run_one(&mut e, 256);
+        assert_eq!(s.cache_hits, 4, "absorbed bucket must run warm");
+        assert!(e.take_pattern_exports().is_empty(),
+                "absorbed warmth must not broadcast again");
+        // cache off: absorb is inert
+        let mut off = SimEngine::new(4);
+        off.absorb_pattern_export(&PatternExport {
+            origin: 1, seq: 256, cluster: 0, entry: None,
+        });
+        let cold = off.take_pattern_exports();
+        assert!(cold.is_empty());
     }
 
     #[test]

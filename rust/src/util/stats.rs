@@ -70,6 +70,12 @@ impl Summary {
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
+
+    /// Merge another summary's samples into this one (fleet metrics
+    /// aggregation: percentiles over the union, not a mean of means).
+    pub fn absorb(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
 }
 
 /// Fixed-bucket log-scale histogram for latencies (µs granularity).
@@ -109,6 +115,16 @@ impl Histogram {
         } else {
             self.sum_us as f64 / self.count as f64
         }
+    }
+
+    /// Merge another histogram bucket-for-bucket (fleet metrics
+    /// aggregation; both sides share the fixed log-bucket layout).
+    pub fn absorb(&mut self, other: &Histogram) {
+        for (b, n) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += n;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
     }
 
     /// Upper bound (µs) of the bucket containing the q-quantile.
@@ -169,5 +185,43 @@ mod tests {
     fn histogram_empty() {
         let h = Histogram::new();
         assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn histogram_absorb_merges_buckets() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for us in [10u64, 1000] {
+            a.record_us(us);
+        }
+        for us in [20u64, 5000, 80] {
+            b.record_us(us);
+        }
+        let mut merged = Histogram::new();
+        for us in [10u64, 1000, 20, 5000, 80] {
+            merged.record_us(us);
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), merged.count());
+        assert_eq!(a.mean_us(), merged.mean_us());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_us(q), merged.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn summary_absorb_merges_samples() {
+        let mut a = Summary::new();
+        a.add(1.0);
+        a.add(2.0);
+        let mut b = Summary::new();
+        b.add(10.0);
+        a.absorb(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean() - 13.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.max(), 10.0);
+        // absorbing an empty summary is a no-op
+        a.absorb(&Summary::new());
+        assert_eq!(a.count(), 3);
     }
 }

@@ -19,7 +19,14 @@
 //! * replaying the identical script at a **different worker-pool
 //!   width** (1 vs `SHAREPREFILL_WORKERS`, default 4) also produces a
 //!   bit-identical event stream — the head-parallel pool may only
-//!   change wall-clock, never any request's output.
+//!   change wall-clock, never any request's output;
+//! * the same deterministic workload through `spawn_fleet(1, ..)` and
+//!   the plain `server::spawn` produces bit-identical per-session
+//!   event streams — `serve.shards = 1` *is* the single-engine path;
+//! * under **shard-kill fault injection** (shards ∈ {2, 4}), every
+//!   session still receives exactly one terminal event, it ends the
+//!   stream, the killed shard is restarted, and every shard drains
+//!   with zero KV blocks in use at shutdown (no KV leakage).
 //!
 //! The seed is fixed for reproducibility; override with
 //! `SHAREPREFILL_FUZZ_SEED=<u64>` to explore other schedules (CI pins
@@ -30,6 +37,7 @@ use std::time::Instant;
 
 use shareprefill::config::ServeConfig;
 use shareprefill::exec::env_workers;
+use shareprefill::serving::fleet::spawn_fleet;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::server;
 use shareprefill::serving::sim::SimEngine;
@@ -312,5 +320,148 @@ fn fuzz_server_submit_cancel_shutdown() {
         }
     }
     eprintln!("[fuzz] server lifecycle: {cases} cases in {:?}",
+              t0.elapsed());
+}
+
+/// `serve.shards = 1` bit-identity at the fuzz level: the same
+/// deterministic workload (no cancels — a cancel's landing round is
+/// timing-dependent, which would make the comparison flaky rather than
+/// prove anything) through the pre-fleet `server::spawn` and a 1-shard
+/// fleet must yield identical per-session event streams, edge cases
+/// (empty and oversized prompts) included.
+#[test]
+fn fuzz_fleet_single_shard_is_bit_identical_to_server() {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(fuzz_seed() ^ 0x00F1_EE70);
+    let cases = 4usize;
+    for case in 0..cases {
+        let cfg = ServeConfig {
+            max_batch_tokens: *rng.choose(&[64usize, 8192]),
+            decode_tokens: 1 + rng.below(3),
+            chunk_layers: 1 + rng.below(3),
+            max_concurrent_prefills: 1 + rng.below(3),
+            ..Default::default()
+        };
+        let workload: Vec<(usize, usize)> = (0..4 + rng.below(6))
+            .map(|_| {
+                let len = match rng.below(8) {
+                    0 => 0,
+                    1 => MAX_PROMPT + 1 + rng.below(64),
+                    _ => 1 + rng.below(MAX_PROMPT),
+                };
+                (len, 1 + rng.below(3))
+            })
+            .collect();
+        let server = server::spawn({
+            let cfg = cfg.clone();
+            move || Ok((Scheduler::new(&cfg),
+                        SimEngine::new(LAYERS).with_max_prompt(MAX_PROMPT)))
+        });
+        let mut fleet = spawn_fleet(1, {
+            let cfg = cfg.clone();
+            move |_| Ok((Scheduler::new(&cfg),
+                         SimEngine::new(LAYERS)
+                             .with_max_prompt(MAX_PROMPT)))
+        });
+        assert!(fleet.is_single(),
+                "shards=1 must be the plain server path");
+        let on_server: Vec<_> = workload.iter()
+            .map(|&(len, max_new)| server.submit(vec![1; len], max_new))
+            .collect();
+        let on_fleet: Vec<_> = workload.iter()
+            .map(|&(len, max_new)| fleet.submit(vec![1; len], max_new))
+            .collect();
+        for (a, b) in on_server.into_iter().zip(on_fleet) {
+            let sa: Vec<String> = a.collect().iter().map(sig).collect();
+            let sb: Vec<String> = b.collect().iter().map(sig).collect();
+            assert_eq!(sa, sb,
+                       "case {case}: shards=1 diverged from the server");
+        }
+        let ra = server.shutdown();
+        let rb = fleet.shutdown();
+        assert_eq!(ra.lines().next(), rb.lines().next(),
+                   "case {case}: request accounting diverged");
+        assert!(!rb.contains("fleet:"),
+                "case {case}: single path grew a fleet summary");
+    }
+    eprintln!("[fuzz] fleet single-shard parity: {cases} cases in {:?}",
+              t0.elapsed());
+}
+
+/// Shard-kill fault injection at shards ∈ {2, 4}: random traffic
+/// (with cancels) over slow simulated engines, one shard killed
+/// mid-flight.  Every session must still get exactly one terminal
+/// event ending its stream; the supervisor must restart the shard; and
+/// at shutdown every shard must drain with zero KV blocks in use (the
+/// per-shard clean-exit flag the fleet summary counts) — the KV-leak
+/// invariant across failure and restart.
+#[test]
+fn fuzz_fleet_shard_kill_invariants() {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(fuzz_seed() ^ 0x0051_AB00);
+    let mut cases = 0usize;
+    for &shards in &[2usize, 4] {
+        for case in 0..3u64 {
+            let cache_on = case % 2 == 0;
+            let cfg = ServeConfig::default();
+            let mut fleet = spawn_fleet(shards, {
+                let cfg = cfg.clone();
+                move |_| {
+                    // slow prefills so the kill lands mid-flight
+                    let mut e = SimEngine::new(LAYERS)
+                        .with_max_prompt(MAX_PROMPT)
+                        .with_work(10_000);
+                    if cache_on {
+                        e = e.with_pattern_cache();
+                    }
+                    Ok((Scheduler::new(&cfg), e))
+                }
+            });
+            assert_eq!(fleet.shard_count(), shards);
+            let n = 4 + rng.below(8);
+            let sessions: Vec<_> = (0..n)
+                .map(|_| fleet.submit(
+                    vec![1; 64 + rng.below(MAX_PROMPT - 64)],
+                    1 + rng.below(3)))
+                .collect();
+            for s in &sessions {
+                if rng.below(5) == 0 {
+                    fleet.cancel(s.id);
+                }
+            }
+            fleet.kill_shard(rng.below(shards));
+            // drive the supervision pump until the crash is observed
+            // and repaired (terminal Errors synthesized, shard respawned)
+            for _ in 0..10_000 {
+                fleet.pump_now();
+                if fleet.restarts() >= 1 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            assert!(fleet.restarts() >= 1,
+                    "supervisor never observed the kill \
+                     (shards {shards}, case {case})");
+            for s in sessions {
+                let id = s.id;
+                let events = s.collect();
+                let last = events.last().unwrap_or_else(
+                    || panic!("session {id}: empty stream"));
+                assert!(last.is_terminal(),
+                        "session {id}: stream ended without a terminal");
+                assert_eq!(
+                    events.iter().filter(|e| e.is_terminal()).count(), 1,
+                    "session {id}: exactly one terminal event");
+            }
+            let report = fleet.shutdown();
+            assert!(report.contains(&format!("fleet: {shards} shards")),
+                    "missing fleet summary: {report}");
+            assert!(report.contains("0 unclean exits"),
+                    "KV leaked across failure/restart \
+                     (shards {shards}, case {case}): {report}");
+            cases += 1;
+        }
+    }
+    eprintln!("[fuzz] fleet shard-kill: {cases} cases in {:?}",
               t0.elapsed());
 }
