@@ -32,7 +32,7 @@
 //!    CI fails on a scaling regression).
 //!
 //!   cargo run --release --example serve_bench -- \
-//!       [requests] [ctx] [--sim-only] [--json BENCH_7.json]
+//!       [requests] [ctx] [--sim-only] [--json BENCH_8.json]
 //!
 //! `--json` writes one row per SimEngine scenario (name, tokens/s,
 //! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
@@ -435,13 +435,13 @@ fn real_engine_scenario(n: usize, ctx: usize) {
     }
 }
 
-/// Render the rows as the `BENCH_7.json` artifact (no JSON serializer
+/// Render the rows as the `BENCH_8.json` artifact (no JSON serializer
 /// in the offline vendor set; the schema is flat enough to emit by
 /// hand).  Non-finite values are clamped to 0 so the output always
 /// parses.
 fn render_json(rows: &[ScenarioRow]) -> String {
     let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
-    let mut s = String::from("{\n  \"pr\": 7,\n  \"scenarios\": [\n");
+    let mut s = String::from("{\n  \"pr\": 8,\n  \"scenarios\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \

@@ -6,15 +6,17 @@
 //!   * default — registry-backed artifacts (needs `make artifacts` and
 //!     a PJRT runtime, so it cannot run in plain CI)
 //!   * `--host-only [--json PATH]` — the host-side kernels the
-//!     coordinator runs on every prefill (vslash search, pivotal
-//!     construction, mask packing, abar scatter), artifact-free.  The
-//!     JSON (per-kernel mean_ms + ns_per_token) is merged into the
-//!     bench-smoke trajectory artifact (`BENCH_7.json`) by CI, which
-//!     schema-checks it and fails any kernel more than 25% over its
-//!     committed ns/token.
+//!     coordinator runs on every prefill (vslash search, thresholded
+//!     FlashPrefill-style discovery, pivotal construction, mask
+//!     packing, abar scatter), artifact-free.  The JSON (per-kernel
+//!     mean_ms + ns_per_token) is merged into the bench-smoke
+//!     trajectory artifact (`BENCH_8.json`) by CI, which schema-checks
+//!     it and fails any kernel more than 15% over its committed
+//!     ns/token.
 
 use shareprefill::attention::{construct_pivotal, scatter_abar,
-                              search_vslash, BlockMask};
+                              search_vslash, search_vslash_threshold,
+                              BlockMask};
 use shareprefill::bench::Bench;
 use shareprefill::config::Config;
 use shareprefill::eval::open_registry;
@@ -79,6 +81,11 @@ fn host_only(json_path: Option<&str>) -> anyhow::Result<()> {
     let mut b = Bench::new(&format!("kernel micro (host) @ seq {seq}"));
     b.case("search_vslash", || {
         std::hint::black_box(search_vslash(&amap, bs, seq, gamma));
+        seq
+    });
+    b.case("search_flash_threshold", || {
+        std::hint::black_box(search_vslash_threshold(&amap, bs, seq,
+                                                     gamma));
         seq
     });
     b.case("construct_pivotal", || {

@@ -1,7 +1,14 @@
-//! Causal block-sparse pattern: per query row-block, the sorted set of kv
+//! Causal block-sparse pattern: per query row-block, the set of kv
 //! blocks to compute.  This is the paper's mask `M` at block granularity,
 //! plus the packing that turns it into the L1 kernel's `(idx, valid)`
 //! budget tensors.
+//!
+//! Rows are packed `u64` bitset words (bit `j & 63` of word `j >> 6` =
+//! kv block `j` computed): insert/contains are one OR/AND, union and
+//! jaccard are word-wise OR/AND + popcount, and pack walks set bits with
+//! `trailing_zeros`.  The observable semantics are identical to the
+//! earlier sorted-`Vec<u32>` row representation — equivalence
+//! property-tested below against a verbatim copy of it.
 
 use crate::exec::WorkerPool;
 use crate::runtime::Tensor;
@@ -10,21 +17,45 @@ use crate::runtime::Tensor;
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockMask {
     pub nb: usize,
-    /// Sorted, deduped kv-block indices per row-block; all entries `<= row`.
-    rows: Vec<Vec<u32>>,
+    /// `u64` words per row (`ceil(nb / 64)`).
+    wpr: usize,
+    /// `nb * wpr` words, row-major; only causal bits (`col <= row`) set.
+    bits: Vec<u64>,
+}
+
+/// Bits of row word `w` whose columns are causal (`col <= row`).
+fn causal_word(row: usize, w: usize) -> u64 {
+    let lo = w << 6;
+    if row < lo {
+        0
+    } else if row - lo >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (row - lo + 1)) - 1
+    }
 }
 
 impl BlockMask {
+    /// Words needed per row for an `nb`-wide grid.
+    pub(crate) fn words_per_row(nb: usize) -> usize {
+        nb.div_ceil(64)
+    }
+
     pub fn empty(nb: usize) -> Self {
-        BlockMask { nb, rows: vec![Vec::new(); nb] }
+        let wpr = Self::words_per_row(nb);
+        BlockMask { nb, wpr, bits: vec![0u64; nb * wpr] }
     }
 
     /// Full causal (dense) pattern: row i computes blocks 0..=i.
     pub fn dense(nb: usize) -> Self {
-        BlockMask {
-            nb,
-            rows: (0..nb).map(|i| (0..=i as u32).collect()).collect(),
+        let mut m = BlockMask::empty(nb);
+        for i in 0..nb {
+            let base = i * m.wpr;
+            for w in 0..m.wpr {
+                m.bits[base + w] = causal_word(i, w);
+            }
         }
+        m
     }
 
     /// Build from an iterator of (row, col) pairs; clamps to causal.
@@ -42,47 +73,74 @@ impl BlockMask {
         if row >= self.nb || col > row {
             return;
         }
-        let r = &mut self.rows[row];
-        match r.binary_search(&(col as u32)) {
-            Ok(_) => {}
-            Err(pos) => r.insert(pos, col as u32),
-        }
+        self.bits[row * self.wpr + (col >> 6)] |= 1u64 << (col & 63);
     }
 
     pub fn contains(&self, row: usize, col: usize) -> bool {
-        self.rows[row].binary_search(&(col as u32)).is_ok()
+        if row >= self.nb || col >= self.nb {
+            return false;
+        }
+        self.bits[row * self.wpr + (col >> 6)] & (1u64 << (col & 63)) != 0
     }
 
-    pub fn row(&self, i: usize) -> &[u32] {
-        &self.rows[i]
+    /// Sorted kv-block indices of one row, materialized from the bitset
+    /// words.  Callers are cold paths (metrics, cache validation,
+    /// rendering, tests); the hot paths stay word-level.
+    pub fn row(&self, i: usize) -> Vec<u32> {
+        let base = i * self.wpr;
+        let mut out = Vec::new();
+        for w in 0..self.wpr {
+            let mut word = self.bits[base + w];
+            while word != 0 {
+                out.push(((w as u32) << 6) | word.trailing_zeros());
+                word &= word - 1;
+            }
+        }
+        out
     }
 
     /// Ensure every row contains its diagonal block (self-attention is
     /// always computed — keeps softmax well-defined for every query).
     pub fn ensure_diagonal(&mut self) {
         for i in 0..self.nb {
-            self.insert(i, i);
+            self.bits[i * self.wpr + (i >> 6)] |= 1u64 << (i & 63);
         }
     }
 
     /// Union in-place with another mask of the same grid.
     pub fn union(&mut self, other: &BlockMask) {
         assert_eq!(self.nb, other.nb);
-        for i in 0..self.nb {
-            for &j in &other.rows[i] {
-                self.insert(i, j as usize);
-            }
+        for (a, b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= *b;
+        }
+    }
+
+    /// OR a full row of bitset words in, clamped to the causal prefix
+    /// `col <= row` — the word-granular entry point the closed-form
+    /// vslash mask construction builds rows with.
+    pub(crate) fn or_row_words(&mut self, row: usize, words: &[u64]) {
+        debug_assert_eq!(words.len(), self.wpr);
+        let base = row * self.wpr;
+        for w in 0..self.wpr {
+            self.bits[base + w] |= words[w] & causal_word(row, w);
         }
     }
 
     /// Number of computed blocks.
     pub fn count(&self) -> usize {
-        self.rows.iter().map(Vec::len).sum()
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    fn row_count(&self, i: usize) -> usize {
+        self.bits[i * self.wpr..(i + 1) * self.wpr]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
     }
 
     /// Max row population — determines the budget bucket.
     pub fn max_row(&self) -> usize {
-        self.rows.iter().map(Vec::len).max().unwrap_or(0)
+        (0..self.nb).map(|i| self.row_count(i)).max().unwrap_or(0)
     }
 
     /// Fraction of the causal lower triangle that is computed.
@@ -95,31 +153,11 @@ impl BlockMask {
     /// |intersection| / |union| — robust to the many zeros in sparse maps).
     pub fn jaccard(&self, other: &BlockMask) -> f64 {
         assert_eq!(self.nb, other.nb);
-        let mut inter = 0usize;
-        let mut uni = 0usize;
-        for i in 0..self.nb {
-            let a = &self.rows[i];
-            let b = &other.rows[i];
-            let (mut x, mut y) = (0usize, 0usize);
-            while x < a.len() && y < b.len() {
-                match a[x].cmp(&b[y]) {
-                    std::cmp::Ordering::Equal => {
-                        inter += 1;
-                        uni += 1;
-                        x += 1;
-                        y += 1;
-                    }
-                    std::cmp::Ordering::Less => {
-                        uni += 1;
-                        x += 1;
-                    }
-                    std::cmp::Ordering::Greater => {
-                        uni += 1;
-                        y += 1;
-                    }
-                }
-            }
-            uni += a.len() - x + b.len() - y;
+        let mut inter = 0u64;
+        let mut uni = 0u64;
+        for (a, b) in self.bits.iter().zip(&other.bits) {
+            inter += (a & b).count_ones() as u64;
+            uni += (a | b).count_ones() as u64;
         }
         if uni == 0 {
             1.0
@@ -138,19 +176,32 @@ impl BlockMask {
         let mut idx = vec![0i32; nb * budget];
         let mut valid = vec![0f32; nb * budget];
         for i in 0..nb {
-            let r = &self.rows[i];
-            let keep = if r.len() > budget {
-                &r[r.len() - budget..]
-            } else {
-                &r[..]
-            };
-            for (s, &j) in keep.iter().enumerate() {
-                idx[i * budget + s] = j as i32;
-                valid[i * budget + s] = 1.0;
+            // skip the lowest (len - budget) set bits, word-at-a-time
+            let mut skip = self.row_count(i).saturating_sub(budget);
+            let mut s = 0usize;
+            let base = i * self.wpr;
+            for w in 0..self.wpr {
+                let mut word = self.bits[base + w];
+                let pop = word.count_ones() as usize;
+                if skip >= pop {
+                    skip -= pop;
+                    continue;
+                }
+                while word != 0 {
+                    let j = (w << 6) | word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    if skip > 0 {
+                        skip -= 1;
+                        continue;
+                    }
+                    idx[i * budget + s] = j as i32;
+                    valid[i * budget + s] = 1.0;
+                    s += 1;
+                }
             }
             // pad remaining slots with the diagonal index (masked out)
-            for s in keep.len()..budget {
-                idx[i * budget + s] = i as i32;
+            for slot in s..budget {
+                idx[i * budget + slot] = i as i32;
             }
         }
         (Tensor::i32(vec![nb, budget], idx),
@@ -161,7 +212,7 @@ impl BlockMask {
     pub fn to_grid(&self) -> Vec<bool> {
         let mut g = vec![false; self.nb * self.nb];
         for i in 0..self.nb {
-            for &j in &self.rows[i] {
+            for j in self.row(i) {
                 g[i * self.nb + j as usize] = true;
             }
         }
@@ -301,6 +352,116 @@ mod tests {
             assert!((jab - jba).abs() < 1e-12);
             assert!((0.0..=1.0).contains(&jab));
             assert!((a.jaccard(&a) - 1.0).abs() < 1e-12);
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Equivalence against the pre-bitset representation
+    // ------------------------------------------------------------------
+
+    /// Verbatim copy of the sorted-`Vec<u32>`-rows `BlockMask` this
+    /// bitset representation replaced — the equivalence oracle.
+    struct RefMask {
+        nb: usize,
+        rows: Vec<Vec<u32>>,
+    }
+
+    impl RefMask {
+        fn empty(nb: usize) -> Self {
+            RefMask { nb, rows: vec![Vec::new(); nb] }
+        }
+
+        fn insert(&mut self, row: usize, col: usize) {
+            if row >= self.nb || col > row {
+                return;
+            }
+            let r = &mut self.rows[row];
+            match r.binary_search(&(col as u32)) {
+                Ok(_) => {}
+                Err(pos) => r.insert(pos, col as u32),
+            }
+        }
+
+        fn union(&mut self, other: &RefMask) {
+            for i in 0..self.nb {
+                for &j in &other.rows[i] {
+                    self.insert(i, j as usize);
+                }
+            }
+        }
+
+        fn pack(&self, budget: usize) -> (Vec<i32>, Vec<f32>) {
+            let nb = self.nb;
+            let mut idx = vec![0i32; nb * budget];
+            let mut valid = vec![0f32; nb * budget];
+            for i in 0..nb {
+                let r = &self.rows[i];
+                let keep = if r.len() > budget {
+                    &r[r.len() - budget..]
+                } else {
+                    &r[..]
+                };
+                for (s, &j) in keep.iter().enumerate() {
+                    idx[i * budget + s] = j as i32;
+                    valid[i * budget + s] = 1.0;
+                }
+                for s in keep.len()..budget {
+                    idx[i * budget + s] = i as i32;
+                }
+            }
+            (idx, valid)
+        }
+    }
+
+    /// Random op sequences drive the bitset and Vec representations in
+    /// lockstep; every observable (rows, count, contains, pack tensors,
+    /// jaccard) must agree exactly.  `nb` runs past 64 so multi-word
+    /// rows and word boundaries are exercised.
+    #[test]
+    fn prop_bitset_matches_vec_reference() {
+        property("bitset == vec reference", 60, |g: &mut Gen| {
+            let nb = g.usize_in(1..100);
+            let mut m = BlockMask::empty(nb);
+            let mut r = RefMask::empty(nb);
+            for _ in 0..g.usize_in(0..120) {
+                let (i, j) = (g.usize_in(0..nb), g.usize_in(0..nb));
+                m.insert(i, j);
+                r.insert(i, j);
+            }
+            if g.bool() {
+                let mut m2 = BlockMask::empty(nb);
+                let mut r2 = RefMask::empty(nb);
+                for _ in 0..g.usize_in(0..40) {
+                    let (i, j) = (g.usize_in(0..nb), g.usize_in(0..nb));
+                    m2.insert(i, j);
+                    r2.insert(i, j);
+                }
+                m.union(&m2);
+                r.union(&r2);
+            }
+            if g.bool() {
+                m.ensure_diagonal();
+                for i in 0..nb {
+                    r.insert(i, i);
+                }
+            }
+            assert_eq!(m.count(),
+                       r.rows.iter().map(Vec::len).sum::<usize>());
+            assert_eq!(m.max_row(),
+                       r.rows.iter().map(Vec::len).max().unwrap_or(0));
+            for i in 0..nb {
+                assert_eq!(m.row(i), r.rows[i], "row {i} diverged");
+            }
+            for _ in 0..30 {
+                let (i, j) = (g.usize_in(0..nb), g.usize_in(0..nb));
+                assert_eq!(m.contains(i, j),
+                           r.rows[i].binary_search(&(j as u32)).is_ok());
+            }
+            let budget = g.usize_in(1..nb + 1);
+            let (idx, valid) = m.pack(budget);
+            let (ridx, rvalid) = r.pack(budget);
+            assert_eq!(idx.as_i32().unwrap(), &ridx[..]);
+            assert_eq!(valid.as_f32().unwrap(), &rvalid[..]);
         });
     }
 }

@@ -9,6 +9,8 @@ pub mod vslash;
 
 pub use blockmask::{pack_heads, BlockMask};
 pub use decide::{decide_pattern, Decision};
-pub use pivotal::{construct_pivotal, scatter_abar, scatter_abar_heads,
-                  PivotalDict, PivotalEntry};
-pub use vslash::{search_vslash, search_vslash_heads};
+pub use pivotal::{construct_pivotal, construct_pivotal_scratch,
+                  scatter_abar, scatter_abar_heads, PivotalDict,
+                  PivotalEntry};
+pub use vslash::{search_vslash, search_vslash_heads,
+                 search_vslash_threshold, search_vslash_threshold_heads};

@@ -4,9 +4,10 @@
 //! When a head runs with the *dense* pattern, its block-averaged QK map Ã
 //! is complete.  We then: row-softmax Ã into block-averaged attention
 //! scores, keep the last row as the pivotal representative ã (used for the
-//! JS similarity check of Alg. 3), flatten + normalize the whole map, sort
-//! descending, take the minimal prefix whose cumulative mass ≥ γ, and store
-//! the resulting block mask keyed by the head's cluster.
+//! JS similarity check of Alg. 3), take the minimal flattened prefix whose
+//! cumulative mass ≥ γ (the selection normalizes by the total internally,
+//! so Alg. 2's explicit normalize pass is fused away), and store the
+//! resulting block mask keyed by the head's cluster.
 
 use std::collections::HashMap;
 
@@ -35,21 +36,35 @@ pub type PivotalDict = HashMap<usize, PivotalEntry>;
 /// Returns the entry; the caller stores it under the head's cluster id.
 pub fn construct_pivotal(abar: &[f32], nb: usize, gamma: f32,
                          source: (usize, usize)) -> PivotalEntry {
+    construct_pivotal_scratch(abar, nb, gamma, source, &mut Vec::new())
+}
+
+/// [`construct_pivotal`] with a caller-owned scratch buffer: the
+/// softmaxed score map is built in `scratch` (cleared and refilled, no
+/// per-call allocation), so the publish fan-out path constructing pivots
+/// for many heads reuses one buffer across calls.
+///
+/// Algorithm 2's explicit flatten + normalize pass is fused away:
+/// `cumulative_select` already normalizes by the map's total mass inside
+/// its γ-stop (`acc >= γ·Σ`), so pre-dividing every score by the same
+/// positive total selects the same prefix — the softmaxed scores feed
+/// the selection directly and the nb² division pass disappears.
+pub fn construct_pivotal_scratch(abar: &[f32], nb: usize, gamma: f32,
+                                 source: (usize, usize),
+                                 scratch: &mut Vec<f32>) -> PivotalEntry {
     debug_assert_eq!(abar.len(), nb * nb);
     // Row-softmax: Ã = softmax(block-averaged QK) per query row-block —
     // attention semantics at block granularity.
-    let mut scores = abar.to_vec();
+    scratch.clear();
+    scratch.extend_from_slice(abar);
+    let scores = &mut scratch[..];
     for i in 0..nb {
         softmax_inplace(&mut scores[i * nb..(i + 1) * nb]);
     }
     // Pivotal representative: last row.
     let ahat_last = scores[(nb - 1) * nb..].to_vec();
-    // Flatten + normalize, then minimal cumulative-γ selection.
-    let total: f32 = scores.iter().sum();
-    if total > 0.0 {
-        scores.iter_mut().for_each(|x| *x /= total);
-    }
-    let selected = cumulative_select(&scores, gamma);
+    // Minimal cumulative-γ selection over the flattened map.
+    let selected = cumulative_select(scores, gamma);
     let mut mask = BlockMask::empty(nb);
     for flat in selected {
         mask.insert(flat / nb, flat % nb);
@@ -164,6 +179,31 @@ mod tests {
         assert_eq!(full[2 * nb + 1], 0.3);
         assert_eq!(full[2 * nb + 2], 0.4);
         assert_eq!(full[1], NEG_INF); // masked slot not scattered
+    }
+
+    /// One scratch buffer driven across many heads must reproduce the
+    /// allocate-per-call wrapper exactly (masks, representative, source).
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation() {
+        let mut g = Gen::from_seed(23);
+        let mut scratch = Vec::new();
+        for head in 0..6 {
+            let nb = g.usize_in(2..9);
+            let mut m = vec![NEG_INF; nb * nb];
+            for i in 0..nb {
+                for j in 0..=i {
+                    m[i * nb + j] = g.f32_in(-3.0, 3.0);
+                }
+            }
+            let gamma = g.f32_in(0.3, 0.99);
+            let fresh = construct_pivotal(&m, nb, gamma, (0, head));
+            let reused = construct_pivotal_scratch(&m, nb, gamma,
+                                                   (0, head),
+                                                   &mut scratch);
+            assert_eq!(fresh.mask, reused.mask);
+            assert_eq!(fresh.ahat_last, reused.ahat_last);
+            assert_eq!(fresh.source, reused.source);
+        }
     }
 
     #[test]

@@ -7,9 +7,19 @@
 //! cumulative-γ prefix of each sorted list is selected; the union of the
 //! chosen vertical columns and slash diagonals, mapped to block
 //! granularity, forms the mask.
+//!
+//! Mechanical-sympathy notes: the accumulation is one pass of two
+//! sequential streams per probe row (no strided second write), and the
+//! mask is built in closed form — a selected slash offset `d = db·B + r`
+//! lights block `i − db` at every row-block `i ≥ db`, plus `i − db − 1`
+//! when the stripe straddles a block boundary (`r > 0`), so the whole
+//! slash family collapses to a small set of block-diagonal offsets OR'd
+//! into each row as shifted bitset words.  `search_vslash_threshold` is
+//! the FlashPrefill-style variant that swaps the cumulative-γ selection
+//! for direct thresholding.
 
 use crate::exec::WorkerPool;
-use crate::util::math::cumulative_select;
+use crate::util::math::{cumulative_select, threshold_select};
 use crate::BLOCK_SIZE;
 
 use super::BlockMask;
@@ -23,52 +33,116 @@ pub fn search_vslash(amap: &[f32], bs: usize, seq: usize, gamma: f32)
                      -> BlockMask {
     let nb = seq / BLOCK_SIZE;
     debug_assert_eq!(amap.len(), bs * seq);
-    let q0 = seq - bs; // qpos of probe row 0
+    let (vert, slash) = accumulate_vslash(amap, bs, seq);
+    let sel_v = cumulative_select(&vert, gamma);
+    let sel_s = cumulative_select(&slash, gamma);
+    build_mask(nb, &sel_v, &sel_s)
+}
 
-    // vertical: total mass per key position
+/// FlashPrefill-style discovery (arxiv 2603.06199): the same probe
+/// accumulation, but vertical columns and slash offsets are selected by
+/// the calibrated threshold `θ(γ) = (1-γ)·mass/positions` instead of the
+/// sorted cumulative-γ prefix — no sort, no cumulative scan, the same
+/// ≥ γ coverage guarantee, a slightly denser selection on flat maps
+/// (see [`threshold_select`]).
+pub fn search_vslash_threshold(amap: &[f32], bs: usize, seq: usize,
+                               gamma: f32) -> BlockMask {
+    let nb = seq / BLOCK_SIZE;
+    debug_assert_eq!(amap.len(), bs * seq);
+    let (vert, slash) = accumulate_vslash(amap, bs, seq);
+    let sel_v = threshold_select(&vert, gamma);
+    let sel_s = threshold_select(&slash, gamma);
+    build_mask(nb, &sel_v, &sel_s)
+}
+
+/// One cache-blocked pass over the probe map: vertical totals are a
+/// streaming vector add, slash totals add each causal row prefix
+/// reversed — two sequential (auto-vectorizable) streams per row instead
+/// of one loop with a strided second write.  Each `(row, cell)` pair
+/// contributes exactly once and rows accumulate in the same order as
+/// the fused loop this replaces, so the totals are bit-identical.
+fn accumulate_vslash(amap: &[f32], bs: usize, seq: usize)
+                     -> (Vec<f32>, Vec<f32>) {
+    let q0 = seq - bs; // qpos of probe row 0
     let mut vert = vec![0f32; seq];
-    // slash: total mass per diagonal offset d = qpos - kpos ∈ [0, seq)
     let mut slash = vec![0f32; seq];
     for r in 0..bs {
         let qpos = q0 + r;
-        let row = &amap[r * seq..(r + 1) * seq];
-        for (kpos, &a) in row.iter().enumerate().take(qpos + 1) {
+        let row = &amap[r * seq..r * seq + qpos + 1];
+        for (kpos, &a) in row.iter().enumerate() {
             vert[kpos] += a;
-            slash[qpos - kpos] += a;
+        }
+        // reversed, index == diagonal offset d = qpos - kpos
+        for (d, &a) in row.iter().rev().enumerate() {
+            slash[d] += a;
         }
     }
-    let sel_v = cumulative_select(&vert, gamma);
-    let sel_s = cumulative_select(&slash, gamma);
+    (vert, slash)
+}
 
-    let mut mask = BlockMask::empty(nb);
-    // vertical token columns -> block columns, for every row-block at or
-    // below which the column is causal
-    for &col in &sel_v {
+/// Closed-form mask construction from selected vertical token columns
+/// and slash offsets.
+///
+/// Verticals collapse to a word-set of block columns, AND'ed with each
+/// row's causal prefix.  A slash offset `d` (`d = db·B + r`) touches, at
+/// row-block `i ≥ db`, block `i − db`, plus `i − db − 1` when `r > 0` —
+/// so the selected offsets collapse to a set `S` of block-diagonal
+/// lags, held bit-reversed so one word-level right shift per row lands
+/// every lag `s ∈ S` on column `i − s`.
+fn build_mask(nb: usize, sel_v: &[usize], sel_s: &[usize]) -> BlockMask {
+    let wpr = BlockMask::words_per_row(nb);
+    let wbits = wpr * 64;
+    let mut vcols = vec![0u64; wpr];
+    for &col in sel_v {
         let jb = col / BLOCK_SIZE;
-        for i in jb..nb {
-            mask.insert(i, jb);
+        vcols[jb >> 6] |= 1u64 << (jb & 63);
+    }
+    // block-diagonal lag set, bit-reversed: lag s sits at bit wbits-1-s,
+    // so `srev >> (wbits-1-i)` puts it at bit i-s (dropped when s > i)
+    let mut srev = vec![0u64; wpr];
+    for &d in sel_s {
+        let db = d / BLOCK_SIZE;
+        let p = wbits - 1 - db;
+        srev[p >> 6] |= 1u64 << (p & 63);
+        if d % BLOCK_SIZE > 0 && db + 1 < nb {
+            let p = wbits - 2 - db;
+            srev[p >> 6] |= 1u64 << (p & 63);
         }
     }
-    // slash offsets -> per row-block, the kv blocks its tokens reach at
-    // that offset (the diagonal stripe crosses up to two blocks per row)
-    for &d in &sel_s {
-        for i in 0..nb {
-            let row_lo = i * BLOCK_SIZE;
-            let row_hi = row_lo + BLOCK_SIZE - 1;
-            if row_hi < d {
-                continue; // offset reaches above position 0 for all rows
-            }
-            let k_hi = row_hi - d;
-            let jb_hi = k_hi / BLOCK_SIZE;
-            mask.insert(i, jb_hi.min(i));
-            if row_lo >= d {
-                let jb_lo = (row_lo - d) / BLOCK_SIZE;
-                mask.insert(i, jb_lo.min(i));
-            }
-        }
+    let mut mask = BlockMask::empty(nb);
+    let mut rowbuf = vec![0u64; wpr];
+    for i in 0..nb {
+        rowbuf.copy_from_slice(&vcols);
+        shr_or(&srev, wbits - 1 - i, &mut rowbuf);
+        // the diagonal block is always computed (self-attention keeps
+        // softmax well-defined for every query)
+        rowbuf[i >> 6] |= 1u64 << (i & 63);
+        mask.or_row_words(i, &rowbuf);
     }
-    mask.ensure_diagonal();
     mask
+}
+
+/// `dst |= src >> shift` over little-endian u64 words (word 0 holds
+/// bits 0–63); both slices are the same length.
+fn shr_or(src: &[u64], shift: usize, dst: &mut [u64]) {
+    let n = src.len();
+    let ws = shift >> 6;
+    let bs = shift & 63;
+    if bs == 0 {
+        for w in 0..n - ws {
+            dst[w] |= src[w + ws];
+        }
+    } else {
+        for w in 0..n - ws {
+            let lo = src[w + ws] >> bs;
+            let hi = if w + ws + 1 < n {
+                src[w + ws + 1] << (64 - bs)
+            } else {
+                0
+            };
+            dst[w] |= lo | hi;
+        }
+    }
 }
 
 /// Head-sliced entry point: one [`search_vslash`] per `(head, γ)` job,
@@ -86,6 +160,19 @@ pub fn search_vslash_heads(pool: &WorkerPool, amap: &[f32],
         let (h, gamma) = jobs[k];
         let head_map = &amap[h * per_head..(h + 1) * per_head];
         search_vslash(head_map, bs, seq, gamma)
+    })
+}
+
+/// Head-sliced [`search_vslash_threshold`]: same head-indexed fan-out
+/// contract as [`search_vslash_heads`], thresholded selection.
+pub fn search_vslash_threshold_heads(pool: &WorkerPool, amap: &[f32],
+                                     jobs: &[(usize, f32)], bs: usize,
+                                     seq: usize) -> Vec<BlockMask> {
+    let per_head = bs * seq;
+    pool.fan_out(jobs.len(), |k| {
+        let (h, gamma) = jobs[k];
+        let head_map = &amap[h * per_head..(h + 1) * per_head];
+        search_vslash_threshold(head_map, bs, seq, gamma)
     })
 }
 
@@ -163,11 +250,13 @@ mod tests {
                 }
             }
             let gamma = g.f32_in(0.3, 0.99);
-            let mask = search_vslash(&m, bs, seq, gamma);
-            for i in 0..nb {
-                assert!(mask.contains(i, i));
-                for &j in mask.row(i) {
-                    assert!((j as usize) <= i);
+            for mask in [search_vslash(&m, bs, seq, gamma),
+                         search_vslash_threshold(&m, bs, seq, gamma)] {
+                for i in 0..nb {
+                    assert!(mask.contains(i, i));
+                    for j in mask.row(i) {
+                        assert!((j as usize) <= i);
+                    }
                 }
             }
         });
@@ -195,11 +284,23 @@ mod tests {
                               bs, seq, gamma)
             })
             .collect();
+        let serial_thr: Vec<BlockMask> = jobs.iter()
+            .map(|&(h, gamma)| {
+                search_vslash_threshold(
+                    &amap[h * bs * seq..(h + 1) * bs * seq], bs, seq,
+                    gamma)
+            })
+            .collect();
         for workers in [1usize, 2, 4] {
             let pool = crate::exec::WorkerPool::new(workers);
             let got = search_vslash_heads(&pool, &amap, &jobs, bs, seq);
             assert_eq!(got, serial,
                        "fan-out at {workers} workers changed a mask");
+            let got = search_vslash_threshold_heads(&pool, &amap, &jobs,
+                                                    bs, seq);
+            assert_eq!(got, serial_thr,
+                       "threshold fan-out at {workers} workers changed \
+                        a mask");
         }
     }
 
@@ -227,5 +328,125 @@ mod tests {
         let total: f32 = vert.iter().sum();
         let covered: f32 = sel.iter().map(|&c| vert[c]).sum();
         assert!(covered >= gamma * total - 1e-3);
+    }
+
+    // ------------------------------------------------------------------
+    // Equivalence against the pre-rewrite search
+    // ------------------------------------------------------------------
+
+    /// Verbatim copy of the pre-rewrite `search_vslash`: fused strided
+    /// accumulation + per-offset × per-row-block stripe insertion.  The
+    /// bit-identity oracle for the closed-form rewrite.
+    fn search_vslash_reference(amap: &[f32], bs: usize, seq: usize,
+                               gamma: f32) -> BlockMask {
+        let nb = seq / BLOCK_SIZE;
+        let q0 = seq - bs;
+        let mut vert = vec![0f32; seq];
+        let mut slash = vec![0f32; seq];
+        for r in 0..bs {
+            let qpos = q0 + r;
+            let row = &amap[r * seq..(r + 1) * seq];
+            for (kpos, &a) in row.iter().enumerate().take(qpos + 1) {
+                vert[kpos] += a;
+                slash[qpos - kpos] += a;
+            }
+        }
+        let sel_v = cumulative_select(&vert, gamma);
+        let sel_s = cumulative_select(&slash, gamma);
+        let mut mask = BlockMask::empty(nb);
+        for &col in &sel_v {
+            let jb = col / BLOCK_SIZE;
+            for i in jb..nb {
+                mask.insert(i, jb);
+            }
+        }
+        for &d in &sel_s {
+            for i in 0..nb {
+                let row_lo = i * BLOCK_SIZE;
+                let row_hi = row_lo + BLOCK_SIZE - 1;
+                if row_hi < d {
+                    continue;
+                }
+                let k_hi = row_hi - d;
+                let jb_hi = k_hi / BLOCK_SIZE;
+                mask.insert(i, jb_hi.min(i));
+                if row_lo >= d {
+                    let jb_lo = (row_lo - d) / BLOCK_SIZE;
+                    mask.insert(i, jb_lo.min(i));
+                }
+            }
+        }
+        mask.ensure_diagonal();
+        mask
+    }
+
+    fn random_causal_map(g: &mut Gen, bs: usize, seq: usize) -> Vec<f32> {
+        let q0 = seq - bs;
+        let mut m = vec![0f32; bs * seq];
+        for r in 0..bs {
+            for k in 0..=q0 + r {
+                // sparse holes keep the selection lists interesting
+                m[r * seq + k] = if g.usize_in(0..4) == 0 {
+                    0.0
+                } else {
+                    g.f32_in(0.0, 1.0)
+                };
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn prop_closed_form_bit_identical_to_reference() {
+        property("closed-form vslash == reference", 20, |g: &mut Gen| {
+            let nbs = [2usize, 3, 4, 7];
+            let nb = nbs[g.usize_in(0..4)];
+            let seq = nb * BLOCK_SIZE;
+            let bs = BLOCK_SIZE;
+            let m = random_causal_map(g, bs, seq);
+            for gamma in [0.3, 0.65, 0.9, 1.0] {
+                let got = search_vslash(&m, bs, seq, gamma);
+                let want = search_vslash_reference(&m, bs, seq, gamma);
+                assert_eq!(got, want, "nb={nb} gamma={gamma}");
+            }
+        });
+    }
+
+    /// Same oracle across the 64-block word boundary (multi-word rows:
+    /// the shifted-lag construction must carry bits between words).
+    #[test]
+    fn closed_form_matches_reference_past_word_boundary() {
+        let nb = 66;
+        let seq = nb * BLOCK_SIZE;
+        let bs = BLOCK_SIZE;
+        let mut g = Gen::from_seed(29);
+        let m = random_causal_map(&mut g, bs, seq);
+        for gamma in [0.65, 0.9] {
+            let got = search_vslash(&m, bs, seq, gamma);
+            let want = search_vslash_reference(&m, bs, seq, gamma);
+            assert_eq!(got, want, "gamma={gamma}");
+        }
+    }
+
+    /// Thresholded discovery keeps the cumulative mask: its selections
+    /// are supersets of the cumulative-γ prefixes, and the mask builder
+    /// is monotone in its selection lists.
+    #[test]
+    fn threshold_mask_covers_cumulative_mask() {
+        let (bs, seq) = (BLOCK_SIZE, 4 * BLOCK_SIZE);
+        let nb = seq / BLOCK_SIZE;
+        let mut g = Gen::from_seed(17);
+        let m = random_causal_map(&mut g, bs, seq);
+        for gamma in [0.5, 0.8, 0.9] {
+            let cum = search_vslash(&m, bs, seq, gamma);
+            let thr = search_vslash_threshold(&m, bs, seq, gamma);
+            for i in 0..nb {
+                for j in cum.row(i) {
+                    assert!(thr.contains(i, j as usize),
+                            "gamma={gamma}: cumulative block ({i},{j}) \
+                             missing from thresholded mask");
+                }
+            }
+        }
     }
 }

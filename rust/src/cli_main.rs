@@ -23,7 +23,7 @@ USAGE: shareprefill <subcommand> [options]
 SUBCOMMANDS
   serve     run the serving engine on a synthetic request stream
             (chunked prefill + continuous batching; per-request TTFT)
-            [--model M] [--method ours|flash|minference|flexprefill]
+            [--model M] [--method ours|flash|flashprefill|minference|flexprefill]
             [--requests N] [--ctx L] [--decode-tokens N]
             [--chunk-layers N] [--max-concurrent-prefills N]
             [--workers N] [--shards N] [--admit-retries N] [--kv-blocks N]

@@ -11,6 +11,10 @@ use std::path::PathBuf;
 pub enum MethodKind {
     /// Dense FlashAttention-2 baseline.
     Flash,
+    /// FlashPrefill-style thresholded discovery: vertical-slash patterns
+    /// selected by thresholding the probe map directly (no sort, no
+    /// cumulative scan); γ calibrates the threshold.
+    FlashPrefill,
     /// MInference: per-head dynamic vertical-slash (default config of the
     /// paper's comparison).
     MInference,
@@ -24,6 +28,7 @@ impl MethodKind {
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "flash" | "flashattn" | "dense" => MethodKind::Flash,
+            "flashprefill" | "threshold" => MethodKind::FlashPrefill,
             "minference" => MethodKind::MInference,
             "flexprefill" | "flex" => MethodKind::FlexPrefill,
             "shareprefill" | "ours" | "share" => MethodKind::SharePrefill,
@@ -34,14 +39,16 @@ impl MethodKind {
     pub fn name(&self) -> &'static str {
         match self {
             MethodKind::Flash => "FlashAttn",
+            MethodKind::FlashPrefill => "FlashPrefill",
             MethodKind::MInference => "MInference",
             MethodKind::FlexPrefill => "FlexPrefill",
             MethodKind::SharePrefill => "SharePrefill",
         }
     }
 
-    pub fn all() -> [MethodKind; 4] {
-        [MethodKind::Flash, MethodKind::MInference, MethodKind::FlexPrefill,
+    pub fn all() -> [MethodKind; 5] {
+        [MethodKind::Flash, MethodKind::FlashPrefill,
+         MethodKind::MInference, MethodKind::FlexPrefill,
          MethodKind::SharePrefill]
     }
 }
@@ -492,6 +499,14 @@ max_age = 9
         assert_eq!(MethodKind::parse("ours").unwrap(),
                    MethodKind::SharePrefill);
         assert_eq!(MethodKind::parse("dense").unwrap(), MethodKind::Flash);
+        assert_eq!(MethodKind::parse("flashprefill").unwrap(),
+                   MethodKind::FlashPrefill);
+        assert_eq!(MethodKind::parse("threshold").unwrap(),
+                   MethodKind::FlashPrefill);
         assert!(MethodKind::parse("bogus").is_err());
+        // every kind's canonical name round-trips through parse
+        for k in MethodKind::all() {
+            assert_eq!(MethodKind::parse(k.name()).unwrap(), k);
+        }
     }
 }

@@ -41,6 +41,7 @@ const FAN_OUT_FORBIDDEN: [&str; 7] = [
 pub fn panic_scope(rel: &str) -> bool {
     rel.starts_with("serving/") || rel.starts_with("exec/")
         || rel == "methods/pattern_cache.rs"
+        || rel == "methods/flash_threshold.rs"
 }
 
 /// Top-level module of a file path relative to the source root.
@@ -328,6 +329,7 @@ mod tests {
         assert!(panic_scope("serving/scheduler.rs"));
         assert!(panic_scope("exec/pool.rs"));
         assert!(panic_scope("methods/pattern_cache.rs"));
+        assert!(panic_scope("methods/flash_threshold.rs"));
         assert!(!panic_scope("methods/shareprefill.rs"));
         assert!(!panic_scope("eval/latency.rs"));
     }

@@ -1,0 +1,186 @@
+//! **FlashPrefill**-style thresholded discovery (arxiv 2603.06199):
+//! every head gets a vertical-slash pattern whose vertical columns and
+//! slash offsets are selected by thresholding the probe map directly —
+//! no sort, no cumulative scan.
+//!
+//! Calibration: the existing γ knob maps to the per-score threshold
+//! `θ(γ) = (1-γ)·mass/positions` (see `util::math::threshold_select`) —
+//! every score rejected by θ carries less than an equal share of the
+//! `(1-γ)` slack, so the kept set always covers ≥ γ of the probe mass,
+//! the same budget contract `cumulative_select` meets by sorting.  In
+//! exact arithmetic the thresholded selection is a superset of the
+//! cumulative-γ prefix, which is what the mask-recall test against
+//! SharePrefill below leans on.
+//!
+//! Like the other planners in `methods/`, this file is on the
+//! panic-hygiene hot path enforced by `pallas-lint`.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::attention::search_vslash_threshold_heads;
+use crate::config::MethodKind;
+use crate::exec::WorkerPool;
+use crate::BLOCK_SIZE;
+
+use super::{HeadPlan, NoState, PatternLabel, PatternState,
+            PatternStrategy, Probes};
+
+pub struct FlashThreshold {
+    gamma: f32,
+    /// Engine-owned worker pool for the per-head thresholded searches
+    /// (serial by default; any width is bit-identical).
+    pool: Rc<WorkerPool>,
+}
+
+impl FlashThreshold {
+    pub fn new(gamma: f32) -> FlashThreshold {
+        FlashThreshold { gamma, pool: Rc::new(WorkerPool::serial()) }
+    }
+
+    /// Attach the engine-owned worker pool.
+    pub fn with_pool(mut self, pool: Rc<WorkerPool>) -> FlashThreshold {
+        self.pool = pool;
+        self
+    }
+}
+
+impl PatternStrategy for FlashThreshold {
+    fn kind(&self) -> MethodKind {
+        MethodKind::FlashPrefill
+    }
+
+    fn begin_request(&self, _seq: usize) -> Box<dyn PatternState> {
+        // patterns are re-thresholded per layer from the probe map;
+        // nothing carries across layers or requests
+        Box::new(NoState)
+    }
+
+    fn plan_layer(&self, _state: &mut dyn PatternState, _layer: usize,
+                  seq: usize, num_heads: usize, probes: &mut dyn Probes)
+                  -> Result<Vec<HeadPlan>> {
+        let amap_t = probes.vslash_map()?.clone();
+        let amap = amap_t.as_f32()?;
+        // every head thresholds; fan out with head-indexed slots
+        let jobs: Vec<(usize, f32)> =
+            (0..num_heads).map(|h| (h, self.gamma)).collect();
+        let masks = search_vslash_threshold_heads(&self.pool, amap, &jobs,
+                                                  BLOCK_SIZE, seq);
+        Ok(masks.into_iter()
+            .map(|m| HeadPlan::sparse(m, PatternLabel::VSlash))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::BlockMask;
+    use crate::methods::shareprefill::SharePrefill;
+    use crate::methods::tests_support::FakeProbes;
+
+    #[test]
+    fn every_head_gets_causal_vslash_plan() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = seq / BLOCK_SIZE;
+        let mut probes = FakeProbes::structured(2, seq);
+        let f = FlashThreshold::new(0.9);
+        assert_eq!(f.kind(), MethodKind::FlashPrefill);
+        let mut st = f.begin_request(seq);
+        let plans = f.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+            .unwrap();
+        assert_eq!(plans.len(), 2);
+        for p in &plans {
+            assert_eq!(p.label, PatternLabel::VSlash);
+            let mask = p.mask.as_ref().unwrap();
+            assert!(mask.count() > 0);
+            for i in 0..nb {
+                assert!(mask.contains(i, i), "diag missing at {i}");
+                for j in mask.row(i) {
+                    assert!((j as usize) <= i, "causality violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_matches_serial_bitwise() {
+        let seq = 4 * BLOCK_SIZE;
+        let run = |workers: usize| {
+            let mut probes = FakeProbes::structured(3, seq);
+            let f = FlashThreshold::new(0.9)
+                .with_pool(Rc::new(WorkerPool::new(workers)));
+            let mut st = f.begin_request(seq);
+            f.plan_layer(st.as_mut(), 0, seq, 3, &mut probes)
+                .unwrap()
+                .into_iter()
+                .map(|p| p.mask.unwrap())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4), "pool width changed a threshold mask");
+    }
+
+    #[test]
+    fn gamma_monotone_in_selection_size() {
+        let seq = 4 * BLOCK_SIZE;
+        let count_at = |gamma: f32| {
+            let mut probes = FakeProbes::structured(2, seq);
+            let f = FlashThreshold::new(gamma);
+            let mut st = f.begin_request(seq);
+            f.plan_layer(st.as_mut(), 0, seq, 2, &mut probes)
+                .unwrap()
+                .iter()
+                .map(|p| p.mask.as_ref().unwrap().count())
+                .sum::<usize>()
+        };
+        assert!(count_at(0.5) <= count_at(0.95),
+                "higher γ (lower θ) must not shrink the selection");
+    }
+
+    /// Strategy-level mask-recall against SharePrefill: with sharing
+    /// ablated (`tau <= 0`) SharePrefill plans every head through the
+    /// exact cumulative-γ vslash search, so the thresholded strategy's
+    /// masks — built from superset selections at the same γ — must
+    /// recall (cover) essentially all of SharePrefill's mask blocks.
+    #[test]
+    fn mask_recall_against_shareprefill() {
+        let seq = 4 * BLOCK_SIZE;
+        let nb = seq / BLOCK_SIZE;
+        let heads = 3;
+        let gamma = 0.9f32;
+
+        let sp = SharePrefill::new(0.0, 0.3, gamma, 1, heads, None);
+        let mut sp_state = sp.begin_request(seq);
+        let mut probes = FakeProbes::structured(heads, seq);
+        let sp_plans = sp
+            .plan_layer(sp_state.as_mut(), 0, seq, heads, &mut probes)
+            .unwrap();
+
+        let f = FlashThreshold::new(gamma);
+        let mut f_state = f.begin_request(seq);
+        let mut probes = FakeProbes::structured(heads, seq);
+        let f_plans = f
+            .plan_layer(f_state.as_mut(), 0, seq, heads, &mut probes)
+            .unwrap();
+
+        let mut covered = 0usize;
+        let mut wanted = 0usize;
+        for h in 0..heads {
+            let sp_mask: &BlockMask = sp_plans[h].mask.as_ref().unwrap();
+            let f_mask: &BlockMask = f_plans[h].mask.as_ref().unwrap();
+            for i in 0..nb {
+                for j in sp_mask.row(i) {
+                    wanted += 1;
+                    if f_mask.contains(i, j as usize) {
+                        covered += 1;
+                    }
+                }
+            }
+        }
+        assert!(wanted > 0);
+        let recall = covered as f64 / wanted as f64;
+        assert!(recall >= 0.9,
+                "thresholded masks recall only {recall:.3} of \
+                 SharePrefill's blocks ({covered}/{wanted})");
+    }
+}

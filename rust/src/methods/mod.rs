@@ -1,6 +1,7 @@
-//! Pattern strategies: the paper's SharePrefill plus the three baselines
-//! it compares against (FlashAttention-2 dense, MInference vertical-slash,
-//! FlexPrefill pooled query-aware patterns).
+//! Pattern strategies: the paper's SharePrefill plus the baselines it is
+//! compared against (FlashAttention-2 dense, MInference vertical-slash,
+//! FlexPrefill pooled query-aware patterns, and the FlashPrefill-style
+//! thresholded discovery in [`flash_threshold`]).
 //!
 //! A strategy consumes per-layer *probe* statistics (computed lazily by
 //! the engine through [`Probes`]) and emits one [`HeadPlan`] per query
@@ -15,6 +16,7 @@
 //! task, so concurrent prefills never share or clobber pattern state.
 
 pub mod flash;
+pub mod flash_threshold;
 pub mod flexprefill;
 pub mod minference;
 pub mod pattern_cache;
@@ -31,6 +33,7 @@ use crate::exec::WorkerPool;
 use crate::runtime::Tensor;
 
 pub use flash::Flash;
+pub use flash_threshold::FlashThreshold;
 pub use flexprefill::FlexPrefill;
 pub use minference::MInference;
 pub use pattern_cache::{PatternCache, PatternCacheStats};
@@ -215,6 +218,9 @@ pub fn build_strategy(cfg: &MethodConfig, num_layers: usize,
                       -> Box<dyn PatternStrategy> {
     match cfg.kind {
         MethodKind::Flash => Box::new(Flash::new()),
+        MethodKind::FlashPrefill => {
+            Box::new(FlashThreshold::new(cfg.gamma).with_pool(pool))
+        }
         MethodKind::MInference => {
             Box::new(MInference::new(cfg.gamma).with_pool(pool))
         }

@@ -28,7 +28,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::attention::{construct_pivotal, decide_pattern,
+use crate::attention::{construct_pivotal_scratch, decide_pattern,
                        search_vslash_heads, BlockMask, Decision,
                        PivotalDict, PivotalEntry};
 use crate::config::MethodKind;
@@ -75,6 +75,10 @@ pub struct SharePrefillState {
     /// Probe-recall threshold warm candidates must pass (copied from
     /// the cache config so `plan_layer` never re-borrows the cache).
     validation: f64,
+    /// Scratch buffer for pivotal construction, reused across every
+    /// `publish_abar` of the request (one nb² softmax workspace instead
+    /// of an allocation per publishing head).
+    scratch: Vec<f32>,
     pub stats: DecisionStats,
 }
 
@@ -175,6 +179,7 @@ impl PatternStrategy for SharePrefill {
             adopted: Vec::new(),
             cache_on,
             validation,
+            scratch: Vec::new(),
             stats: DecisionStats::default(),
         })
     }
@@ -341,8 +346,9 @@ impl PatternStrategy for SharePrefill {
                     head: usize, nb: usize, abar: &[f32]) {
         if let Some(c) = self.cluster_of(layer, head) {
             let st = state_mut::<SharePrefillState>(state);
-            let entry = construct_pivotal(abar, nb, self.gamma,
-                                          (layer, head));
+            let entry = construct_pivotal_scratch(abar, nb, self.gamma,
+                                                  (layer, head),
+                                                  &mut st.scratch);
             st.dict.insert(c, entry);
             // A freshly constructed pattern replaces any cache adoption
             // for this cluster (possible when a same-layer head was

@@ -6,7 +6,9 @@
 //! attention scores; `js_distance` is the sparsity / similarity test
 //! (Alg. 3 line 6); `cumulative_select` is the minimal-budget selection
 //! (`min { k : Σ a[I[1:k]] >= γ }`) used by both pivotal-pattern
-//! construction (Alg. 2) and vertical-slash search (Alg. 5).
+//! construction (Alg. 2) and vertical-slash search (Alg. 5);
+//! `threshold_select` is the sort-free FlashPrefill-style variant that
+//! calibrates the same γ knob to a per-score threshold.
 
 pub const NEG_INF: f32 = f32::NEG_INFINITY;
 
@@ -88,22 +90,87 @@ pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
 /// Minimal prefix of the descending-sorted indices whose mass reaches
 /// `gamma * total`; returns the selected indices. Always selects at least
 /// one element when the slice is non-empty with positive mass.
+///
+/// Partial selection, not a full `argsort_desc`: positive entries are
+/// packed into `(!value_bits, index)` u64 keys whose ascending order is
+/// exactly the stable descending argsort order (positive-f32 bit
+/// patterns are monotone in value; the low index word breaks ties the
+/// way a stable sort does).  A threshold prepass bounds where the γ-stop
+/// can land — every entry below `(1-γ)·total/len` together carries less
+/// than `(1-γ)·total` mass, so the selection fits inside the at-least-θ
+/// head — and only that head is partitioned (`select_nth_unstable`) and
+/// sorted.  The accumulation visits the same values in the same order as
+/// the full sort did, so the output is bit-identical (property-tested
+/// against the reference below).
 pub fn cumulative_select(xs: &[f32], gamma: f32) -> Vec<usize> {
     let total: f32 = xs.iter().filter(|x| x.is_finite()).sum();
     if total <= 0.0 {
         return Vec::new();
     }
-    let order = argsort_desc(xs);
-    let mut acc = 0.0f32;
-    let mut out = Vec::new();
-    for i in order {
-        if !xs[i].is_finite() || xs[i] <= 0.0 {
-            break;
+    let target = gamma * total;
+    let theta = (1.0 - gamma) * total / xs.len() as f32;
+    let mut keys: Vec<u64> = Vec::with_capacity(xs.len());
+    let mut head = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_finite() && x > 0.0 {
+            keys.push((((x.to_bits() ^ u32::MAX) as u64) << 32) | i as u64);
+            if x >= theta {
+                head += 1;
+            }
         }
+    }
+    let n = keys.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let head = head.clamp(1, n);
+    if head < n {
+        keys.select_nth_unstable(head - 1);
+    }
+    keys[..head].sort_unstable();
+    let mut sorted_to = head;
+    let mut out = Vec::with_capacity(head);
+    let mut acc = 0.0f32;
+    let mut pos = 0usize;
+    while pos < n {
+        if pos == sorted_to {
+            // The prepass bound holds in exact arithmetic; if f32
+            // rounding makes the running sum miss the target inside the
+            // head, finish over the (already partitioned-away) tail.
+            keys[sorted_to..].sort_unstable();
+            sorted_to = n;
+        }
+        let i = (keys[pos] & 0xFFFF_FFFF) as usize;
         out.push(i);
         acc += xs[i];
-        if acc >= gamma * total {
+        if acc >= target {
             break;
+        }
+        pos += 1;
+    }
+    out
+}
+
+/// Thresholded selection (FlashPrefill, arxiv 2603.06199): keep every
+/// index whose value meets the calibrated threshold
+/// `θ(γ) = (1-γ)·total/len` — one branch per entry, no sort, no
+/// cumulative scan.  Calibration: each rejected entry carries less than
+/// θ, so the rejected mass stays below `len·θ = (1-γ)·total` and the
+/// kept set always covers ≥ γ of the mass — the same guarantee
+/// `cumulative_select` meets by sorting, traded for a denser selection
+/// on flat distributions (in exact arithmetic the kept set is a
+/// superset of the minimal cumulative-γ prefix).  Indices return in
+/// ascending order.
+pub fn threshold_select(xs: &[f32], gamma: f32) -> Vec<usize> {
+    let total: f32 = xs.iter().filter(|x| x.is_finite()).sum();
+    if total <= 0.0 {
+        return Vec::new();
+    }
+    let theta = (1.0 - gamma) * total / xs.len() as f32;
+    let mut out = Vec::new();
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_finite() && x > 0.0 && x >= theta {
+            out.push(i);
         }
     }
     out
@@ -174,5 +241,92 @@ mod tests {
     #[test]
     fn argsort_desc_orders() {
         assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
+    }
+
+    /// The pre-optimization `cumulative_select`: full stable argsort +
+    /// linear scan.  Kept verbatim as the equivalence oracle.
+    fn cumulative_select_reference(xs: &[f32], gamma: f32) -> Vec<usize> {
+        let total: f32 = xs.iter().filter(|x| x.is_finite()).sum();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        let order = argsort_desc(xs);
+        let mut acc = 0.0f32;
+        let mut out = Vec::new();
+        for i in order {
+            if !xs[i].is_finite() || xs[i] <= 0.0 {
+                break;
+            }
+            out.push(i);
+            acc += xs[i];
+            if acc >= gamma * total {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Seeded random input with ties (values quantized to 1/8 steps),
+    /// zeros, and -inf holes — the shapes probe maps actually take.
+    fn gen_xs(g: &mut crate::util::proptest::Gen) -> Vec<f32> {
+        let n = g.usize_in(1..200);
+        (0..n)
+            .map(|_| match g.usize_in(0..8) {
+                0 => NEG_INF,
+                1 => 0.0,
+                _ => (g.f32_in(0.0, 4.0) * 8.0).round() / 8.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_partial_select_bit_identical_to_reference() {
+        crate::util::proptest::property(
+            "cumulative_select == full-argsort reference", 200, |g| {
+                let xs = gen_xs(g);
+                for gamma in [0.0, 0.3, 0.65, 0.9, 0.99, 1.0] {
+                    assert_eq!(cumulative_select(&xs, gamma),
+                               cumulative_select_reference(&xs, gamma),
+                               "xs={xs:?} gamma={gamma}");
+                }
+            });
+    }
+
+    #[test]
+    fn prop_threshold_select_covers_gamma() {
+        crate::util::proptest::property(
+            "threshold_select covers >= gamma of the mass", 200, |g| {
+                let xs = gen_xs(g);
+                let gamma = g.f32_in(0.0, 1.0);
+                let sel = threshold_select(&xs, gamma);
+                let total: f32 =
+                    xs.iter().filter(|x| x.is_finite()).sum();
+                if total <= 0.0 {
+                    assert!(sel.is_empty());
+                    return;
+                }
+                let covered: f32 = sel.iter().map(|&i| xs[i]).sum();
+                assert!(covered >= gamma * total - 1e-3 * total.abs(),
+                        "covered {covered} < {gamma} * {total}");
+                // ascending, deduplicated, in range, positive entries
+                assert!(sel.windows(2).all(|w| w[0] < w[1]));
+                assert!(sel.iter().all(|&i| xs[i] > 0.0));
+            });
+    }
+
+    #[test]
+    fn threshold_select_supersets_cumulative() {
+        let xs = [0.5, 0.3, 0.15, 0.05];
+        for gamma in [0.5, 0.8, 0.9, 1.0] {
+            let cum = cumulative_select(&xs, gamma);
+            let thr = threshold_select(&xs, gamma);
+            assert!(cum.iter().all(|i| thr.contains(i)),
+                    "gamma={gamma}: {thr:?} must cover {cum:?}");
+        }
+        // γ=1 keeps every positive entry, like the cumulative path
+        assert_eq!(threshold_select(&xs, 1.0), vec![0, 1, 2, 3]);
+        // -inf and zeros are never selected
+        assert_eq!(threshold_select(&[NEG_INF, 1.0, 0.0, 1.0], 0.9),
+                   vec![1, 3]);
     }
 }

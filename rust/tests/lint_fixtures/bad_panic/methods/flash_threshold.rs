@@ -1,0 +1,6 @@
+// lint fixture: a raw unwrap in the thresholded-discovery method,
+// which sits inside the panic-hygiene hot-path scope like the other
+// methods/ hot-path files.
+pub fn plan(budget: Option<usize>) -> usize {
+    budget.unwrap()
+}

@@ -64,23 +64,30 @@ fn bad_determinism_exact_diagnostics() {
 #[test]
 fn bad_panic_flags_new_sites() {
     let diags = check("bad_panic", &empty(), None);
+    // BTreeMap order: methods/ sorts before serving/
     assert_eq!(keys(&diags), vec![
+        ("methods/flash_threshold.rs".to_string(), 5, rules::RULE_PANIC),
         ("serving/sched.rs".to_string(), 4, rules::RULE_PANIC),
         ("serving/sched.rs".to_string(), 8, rules::RULE_PANIC),
     ]);
     assert!(diags[0].message.contains("`unwrap()`"));
     assert!(diags[0].message.contains("baseline allows 0"));
-    assert!(diags[1].message.contains("`expect(..)`"));
+    assert!(diags[1].message.contains("`unwrap()`"));
+    assert!(diags[2].message.contains("`expect(..)`"));
 }
 
 #[test]
 fn baseline_freezes_and_ratchets() {
     // exact freeze: no findings
-    let frozen = baseline::parse("\"serving/sched.rs\" = 2\n").unwrap();
+    let frozen = baseline::parse(
+        "\"methods/flash_threshold.rs\" = 1\n\"serving/sched.rs\" = 2\n")
+        .unwrap();
     assert!(check("bad_panic", &frozen, None).is_empty());
 
     // baseline above reality: the shrink must be recorded
-    let loose = baseline::parse("\"serving/sched.rs\" = 5\n").unwrap();
+    let loose = baseline::parse(
+        "\"methods/flash_threshold.rs\" = 1\n\"serving/sched.rs\" = 5\n")
+        .unwrap();
     let diags = check("bad_panic", &loose, None);
     assert_eq!(keys(&diags),
                vec![("serving/sched.rs".to_string(), 1,
@@ -89,7 +96,8 @@ fn baseline_freezes_and_ratchets() {
 
     // baseline entry for a file with no sites at all: same ratchet
     let ghost = baseline::parse(
-        "\"serving/gone.rs\" = 1\n\"serving/sched.rs\" = 2\n").unwrap();
+        "\"methods/flash_threshold.rs\" = 1\n\"serving/gone.rs\" = 1\n\
+         \"serving/sched.rs\" = 2\n").unwrap();
     let diags = check("bad_panic", &ghost, None);
     assert_eq!(keys(&diags),
                vec![("serving/gone.rs".to_string(), 1,
@@ -119,9 +127,12 @@ fn write_baseline_counts_match_found_sites() {
     assert!(report.diagnostics.is_empty(),
             "write mode must not emit ratchet findings");
     assert_eq!(report.panic_counts.get("serving/sched.rs"), Some(&2));
+    assert_eq!(report.panic_counts.get("methods/flash_threshold.rs"),
+               Some(&1));
     let b = baseline::parse(&baseline::render(&report.panic_counts))
         .unwrap();
     assert_eq!(b.allowed("serving/sched.rs"), 2);
+    assert_eq!(b.allowed("methods/flash_threshold.rs"), 1);
 }
 
 #[test]

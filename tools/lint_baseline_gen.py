@@ -218,7 +218,8 @@ def panic_sites(src):
 
 def scoped(rel):
     return (rel.startswith("serving/") or rel.startswith("exec/")
-            or rel == "methods/pattern_cache.rs")
+            or rel == "methods/pattern_cache.rs"
+            or rel == "methods/flash_threshold.rs")
 
 
 def main():
@@ -238,7 +239,8 @@ def main():
                 counts[rel] = n
     print("# pallas-lint panic-hygiene baseline — frozen counts of")
     print("# unwrap()/expect()/panic-family sites in the serving hot path")
-    print("# (serving/, exec/, methods/pattern_cache.rs; test modules")
+    print("# (serving/, exec/, methods/pattern_cache.rs,")
+    print("# methods/flash_threshold.rs; test modules")
     print("# excluded).  This file may only shrink: pallas-lint fails if a")
     print("# file exceeds its count here (new panic site) OR falls below it")
     print("# (stale baseline — regenerate with `pallas-lint --check")
