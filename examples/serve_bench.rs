@@ -6,7 +6,7 @@
 //! EXPERIMENTS.md; CI's `bench-smoke` job runs the deterministic
 //! SimEngine scenarios and archives the machine-readable trajectory.
 //!
-//! Four scenarios:
+//! Six scenarios:
 //!
 //! 1. **Per-method uniform stream** (needs `make artifacts`): the real
 //!    engine under concurrent equal-length prompts.  Skipped with
@@ -30,22 +30,40 @@
 //!    throughput (total tokens over the busiest shard's modeled
 //!    makespan) must strictly increase with the shard count (asserted;
 //!    CI fails on a scaling regression).
+//! 6. **Open-loop overload** (artifact-free, fully virtual-time):
+//!    Poisson and bursty arrival traces with mixed prompt-length
+//!    classes (70% short interactive / 25% medium / 5% long) driven
+//!    through `Scheduler` + `SimEngine` on a deterministic virtual
+//!    clock — arrivals do not wait for service, so offered load can
+//!    exceed capacity.  Closed-loop capacity is calibrated first, then
+//!    the overload traces run at 2× that rate with the
+//!    `serve.admission.*` knobs on.  Asserted (here and re-asserted by
+//!    CI from the JSON): goodput stays ≥ 70% of closed-loop capacity,
+//!    admitted interactive p99 TTFT stays bounded, sheds are fast and
+//!    structured, and completed + rejected == submitted.
 //!
 //!   cargo run --release --example serve_bench -- \
-//!       [requests] [ctx] [--sim-only] [--json BENCH_8.json]
+//!       [requests] [ctx] [--sim-only] [--json BENCH_9.json]
 //!
 //! `--json` writes one row per SimEngine scenario (name, tokens/s,
 //! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
+
+use std::collections::{HashMap, HashSet};
 
 use shareprefill::config::{MethodKind, ServeConfig};
 use shareprefill::serving::fleet::spawn_fleet;
 use shareprefill::serving::scheduler::Scheduler;
 use shareprefill::serving::sim::SimEngine;
-use shareprefill::serving::{server, Event, ServerBuilder};
+use shareprefill::serving::{server, Event, EventSink, Request, ServerBuilder};
+use shareprefill::util::rng::Rng;
 use shareprefill::util::stats::Summary;
 use shareprefill::workloads::tasks::latency_prompt;
 
-/// One machine-readable result row (the `--json` schema).
+/// One machine-readable result row (the `--json` schema).  `extras`
+/// holds scenario-specific numeric fields (the open-loop rows carry
+/// `goodput_ratio` / `ttft_p99_ms` / `reject_p99_ms` / `requests_shed`
+/// on top of the common schema; the CI validator checks the common
+/// keys and the overload SLOs, and tolerates the extras elsewhere).
 struct ScenarioRow {
     name: String,
     tokens_per_s: f64,
@@ -53,6 +71,7 @@ struct ScenarioRow {
     ttft_p95_ms: f64,
     prefill_ms_mean: f64,
     cache_hit_rate: f64,
+    extras: Vec<(&'static str, f64)>,
 }
 
 /// Outcome of one drained session, pulled off its event stream.
@@ -160,6 +179,7 @@ fn mixed_length_scenario(max_prefills: usize) -> ScenarioRow {
         ttft_p95_ms: short_ttft.percentile(95.0),
         prefill_ms_mean: mean(&short_prefill),
         cache_hit_rate: 0.0,
+        extras: Vec::new(),
     }
 }
 
@@ -239,6 +259,7 @@ fn pattern_cache_scenario() -> Vec<ScenarioRow> {
             } else {
                 hits as f64 / total as f64
             },
+            extras: Vec::new(),
         }
     };
     vec![row("pattern_cache_off", &off, wall_off),
@@ -306,6 +327,7 @@ fn worker_scaling_scenario() -> Vec<ScenarioRow> {
             ttft_p95_ms: ttft.percentile(95.0),
             prefill_ms_mean: prefill_mean,
             cache_hit_rate: 0.0,
+            extras: Vec::new(),
         });
     }
     println!();
@@ -391,6 +413,330 @@ fn fleet_scaling_scenario() -> Vec<ScenarioRow> {
             ttft_p95_ms: ttft.percentile(95.0),
             prefill_ms_mean: mean(&prefill),
             cache_hit_rate: 0.0,
+            extras: Vec::new(),
+        });
+    }
+    println!();
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Open-loop overload: trace-driven arrivals on a virtual clock.
+// ---------------------------------------------------------------------
+
+/// Virtual cost model for the open-loop rows: the SimEngine runs with
+/// `with_work(0)` (no wall-clock spin), and the driver advances a
+/// virtual clock by `ROUND_OVERHEAD_NS` plus `NS_PER_TOKEN` per budget
+/// token the round actually spent — so every number below is exactly
+/// reproducible on any machine.
+const OL_LAYERS: usize = 8;
+const OL_NS_PER_TOKEN: u64 = 2_000;
+const OL_ROUND_OVERHEAD_NS: u64 = 20_000;
+const OL_MAX_NEW: usize = 4;
+/// Interactive class boundary (also `serve.admission.interactive_max_tokens`).
+const OL_INTERACTIVE_MAX: usize = 128;
+/// Overload SLOs, asserted here and re-asserted by CI from the JSON.
+const OL_GOODPUT_FLOOR: f64 = 0.70;
+const OL_TTFT_P99_SLO_MS: f64 = 250.0;
+const OL_REJECT_P99_SLO_MS: f64 = 500.0;
+
+/// One arrival in a generated open-loop trace.
+struct Arrival {
+    at_ns: u64,
+    prompt: usize,
+}
+
+/// Mixed prompt-length classes: 70% short interactive, 25% medium,
+/// 5% long.
+fn sample_class(rng: &mut Rng) -> usize {
+    match rng.below(100) {
+        0..=69 => 64,
+        70..=94 => 512,
+        _ => 2048,
+    }
+}
+
+/// Poisson arrivals over pre-sampled prompt lengths: exponential
+/// inter-arrival gaps around `mean_gap_ns`.
+fn poisson_trace(rng: &mut Rng, prompts: &[usize], mean_gap_ns: f64)
+                 -> Vec<Arrival> {
+    let mut t = 0.0f64;
+    prompts.iter()
+        .map(|&prompt| {
+            t += -mean_gap_ns * (1.0 - rng.f64()).ln();
+            Arrival { at_ns: t as u64, prompt }
+        })
+        .collect()
+}
+
+/// Bursty arrivals: volleys of 8–16 simultaneous requests, with the
+/// volley gap sized so the *average* rate matches `mean_gap_ns` per
+/// request — same offered load as the Poisson trace, spikier shape.
+fn burst_trace(rng: &mut Rng, prompts: &[usize], mean_gap_ns: f64)
+               -> Vec<Arrival> {
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(prompts.len());
+    while out.len() < prompts.len() {
+        let volley = (8 + rng.below(9)).min(prompts.len() - out.len());
+        for _ in 0..volley {
+            out.push(Arrival { at_ns: t, prompt: prompts[out.len()] });
+        }
+        t += (volley as f64 * mean_gap_ns) as u64;
+    }
+    out
+}
+
+/// Serving config the open-loop rows run under; `admission` switches
+/// the `serve.admission.*` ladder on (the calibration run keeps every
+/// knob at its inert default).
+fn open_loop_cfg(admission: bool) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        max_batch_tokens: 1024,
+        max_batch_requests: 8,
+        queue_capacity: 256,
+        decode_tokens: OL_MAX_NEW,
+        kv_blocks: 4096,
+        chunk_layers: 1,
+        max_concurrent_prefills: 2,
+        ..Default::default()
+    };
+    if admission {
+        cfg.admission.enabled = true;
+        cfg.admission.max_queue_depth = 24;
+        cfg.admission.kv_overcommit = 1.5;
+        cfg.admission.max_queue_rounds = 64;
+        cfg.admission.interactive_max_tokens = OL_INTERACTIVE_MAX;
+        cfg.admission.degrade_queue_depth = 12;
+        cfg.admission.degraded_budget_pct = 75;
+        cfg.admission.degraded_max_prefills = 1;
+    }
+    cfg
+}
+
+/// Everything one open-loop run reports, all in virtual time.
+struct OpenLoopOutcome {
+    submitted: usize,
+    completed: usize,
+    rejected: usize,
+    completed_prompt_tokens: usize,
+    makespan_s: f64,
+    ttft_ms: Vec<f64>,
+    interactive_ttft_ms: Vec<f64>,
+    prefill_ms: Vec<f64>,
+    reject_ms: Vec<f64>,
+}
+
+/// Sorted-percentile over raw samples (0 when empty) — the open-loop
+/// rows use exact percentiles rather than `Summary`'s histogram bins
+/// so the deterministic virtual-time numbers stay exact.
+fn pctl(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(f64::total_cmp);
+    let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+/// Drive one trace through `Scheduler` + `SimEngine` on the virtual
+/// clock: submit every arrival whose timestamp has passed, run one
+/// scheduling round, advance the clock by the round's modeled cost,
+/// drain the event stream with the new timestamp, repeat until the
+/// trace is exhausted and the scheduler drains.
+fn drive_open_loop(cfg: &ServeConfig, trace: &[Arrival]) -> OpenLoopOutcome {
+    let mut engine = SimEngine::new(OL_LAYERS).with_work(0);
+    let mut sched: Scheduler<SimEngine> = Scheduler::new(cfg);
+    let (sink, rx) = EventSink::channel();
+
+    let mut out = OpenLoopOutcome {
+        submitted: trace.len(),
+        completed: 0,
+        rejected: 0,
+        completed_prompt_tokens: 0,
+        makespan_s: 0.0,
+        ttft_ms: Vec::new(),
+        interactive_ttft_ms: Vec::new(),
+        prefill_ms: Vec::new(),
+        reject_ms: Vec::new(),
+    };
+    let mut arrived_at: HashMap<u64, u64> = HashMap::new();
+    let mut prompt_of: HashMap<u64, usize> = HashMap::new();
+    let mut seen_ttft: HashSet<u64> = HashSet::new();
+    let mut last_terminal_ns = 0u64;
+    let interactive_max = cfg.admission.interactive_max_tokens;
+
+    let mut vclock = 0u64;
+    let mut next = 0usize;
+    let mut rounds = 0usize;
+    loop {
+        while next < trace.len() && trace[next].at_ns <= vclock {
+            let id = next as u64;
+            arrived_at.insert(id, trace[next].at_ns);
+            prompt_of.insert(id, trace[next].prompt);
+            sched.submit(&engine,
+                         Request::new(id, vec![7; trace[next].prompt],
+                                      OL_MAX_NEW),
+                         sink.clone());
+            next += 1;
+        }
+        // submit-time sheds surface immediately, at the current clock
+        drain_virtual(&rx, vclock, &arrived_at, &prompt_of,
+                      interactive_max, &mut seen_ttft, &mut out,
+                      &mut last_terminal_ns);
+        if !sched.has_work() {
+            match trace.get(next) {
+                // idle gap: jump straight to the next arrival
+                Some(a) => {
+                    vclock = vclock.max(a.at_ns);
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let before = sched.metrics.decode_budget_tokens
+            + sched.metrics.prefill_budget_tokens;
+        sched.run_round(&mut engine)
+            .expect("SimEngine rounds cannot fail");
+        let spent = sched.metrics.decode_budget_tokens
+            + sched.metrics.prefill_budget_tokens - before;
+        vclock += OL_ROUND_OVERHEAD_NS + spent * OL_NS_PER_TOKEN;
+        drain_virtual(&rx, vclock, &arrived_at, &prompt_of,
+                      interactive_max, &mut seen_ttft, &mut out,
+                      &mut last_terminal_ns);
+        rounds += 1;
+        assert!(rounds < 1_000_000, "open-loop driver failed to drain");
+    }
+    out.makespan_s = last_terminal_ns.max(1) as f64 / 1e9;
+    out
+}
+
+/// Drain every event currently on the stream, timestamping it `now_ns`
+/// on the virtual clock (event latency = now − the trace arrival time).
+#[allow(clippy::too_many_arguments)]
+fn drain_virtual(rx: &std::sync::mpsc::Receiver<Event>, now_ns: u64,
+                 arrived_at: &HashMap<u64, u64>,
+                 prompt_of: &HashMap<u64, usize>, interactive_max: usize,
+                 seen_ttft: &mut HashSet<u64>, out: &mut OpenLoopOutcome,
+                 last_terminal_ns: &mut u64) {
+    while let Ok(ev) = rx.try_recv() {
+        let id = ev.id();
+        let t0 = arrived_at.get(&id).copied().unwrap_or(now_ns);
+        let ms = now_ns.saturating_sub(t0) as f64 / 1e6;
+        let record_ttft = |out: &mut OpenLoopOutcome,
+                           seen: &mut HashSet<u64>| {
+            if seen.insert(id) {
+                out.ttft_ms.push(ms);
+                let len = prompt_of.get(&id).copied().unwrap_or(usize::MAX);
+                if interactive_max > 0 && len <= interactive_max {
+                    out.interactive_ttft_ms.push(ms);
+                }
+            }
+        };
+        match ev {
+            Event::Token { .. } => record_ttft(out, seen_ttft),
+            Event::PrefillDone { .. } => out.prefill_ms.push(ms),
+            Event::Done { .. } => {
+                record_ttft(out, seen_ttft);
+                out.completed += 1;
+                out.completed_prompt_tokens +=
+                    prompt_of.get(&id).copied().unwrap_or(0);
+                *last_terminal_ns = now_ns;
+            }
+            Event::Rejected { .. } => {
+                out.rejected += 1;
+                out.reject_ms.push(ms);
+                *last_terminal_ns = now_ns;
+            }
+            Event::Cancelled { .. } | Event::Error { .. } => {
+                *last_terminal_ns = now_ns;
+            }
+            Event::PrefillProgress { .. } => {}
+        }
+    }
+}
+
+/// The open-loop scenario set: calibrate closed-loop capacity, then a
+/// sustained Poisson trace at 0.9× and Poisson + bursty overload
+/// traces at 2×, with the admission ladder on.  The per-trace arrival
+/// gap is derived from the *sampled* prompt lengths so the offered
+/// token rate is exactly `mult ×` the calibrated capacity.
+/// Deterministic end to end (fixed seed, virtual clock).
+fn open_loop_scenario() -> Vec<ScenarioRow> {
+    const N_REQ: usize = 256;
+    const CALIB_REQ: usize = 64;
+    let mut rng = Rng::new(0x09_0AD5);
+
+    // closed-loop capacity: everything queued up front, no admission
+    let closed: Vec<Arrival> = (0..CALIB_REQ)
+        .map(|_| Arrival { at_ns: 0, prompt: sample_class(&mut rng) })
+        .collect();
+    let cal = drive_open_loop(&open_loop_cfg(false), &closed);
+    assert_eq!(cal.completed, CALIB_REQ,
+               "closed-loop calibration must complete every request");
+    let capacity = cal.completed_prompt_tokens as f64 / cal.makespan_s;
+    println!("== open-loop overload (virtual time) ==");
+    println!("closed-loop capacity: {capacity:10.0} tok/s \
+              ({CALIB_REQ} requests, makespan {:.2} ms)",
+             cal.makespan_s * 1e3);
+
+    let cases: [(&str, bool, f64); 3] = [
+        ("open_loop_sustained", false, 0.9),
+        ("open_loop_overload_poisson", false, 2.0),
+        ("open_loop_overload_burst", true, 2.0),
+    ];
+    let mut rows = Vec::new();
+    for (name, bursty, mult) in cases {
+        let prompts: Vec<usize> =
+            (0..N_REQ).map(|_| sample_class(&mut rng)).collect();
+        let offered: usize = prompts.iter().sum();
+        // mean gap that makes this trace's offered token rate exactly
+        // `mult ×` the calibrated closed-loop capacity
+        let gap = offered as f64 / N_REQ as f64 / (capacity * mult) * 1e9;
+        let trace = if bursty {
+            burst_trace(&mut rng, &prompts, gap)
+        } else {
+            poisson_trace(&mut rng, &prompts, gap)
+        };
+        let o = drive_open_loop(&open_loop_cfg(true), &trace);
+        assert_eq!(o.completed + o.rejected, o.submitted,
+                   "{name}: terminal accounting must reconcile");
+        let goodput = o.completed_prompt_tokens as f64 / o.makespan_s;
+        let ratio = goodput / capacity;
+        let ttft_p99 = pctl(&o.interactive_ttft_ms, 99.0);
+        let reject_p99 = pctl(&o.reject_ms, 99.0);
+        println!("{name}: {:3} done / {:3} shed of {:3}, goodput \
+                  {goodput:10.0} tok/s ({:.2}x closed-loop), interactive \
+                  ttft p99 {ttft_p99:7.2} ms, reject p99 \
+                  {reject_p99:7.2} ms",
+                 o.completed, o.rejected, o.submitted, ratio);
+        // the overload SLOs (CI re-asserts these from the JSON)
+        assert!(ratio >= OL_GOODPUT_FLOOR,
+                "{name}: goodput {ratio:.2}x below the \
+                 {OL_GOODPUT_FLOOR:.2}x closed-loop floor");
+        assert!(ttft_p99 <= OL_TTFT_P99_SLO_MS,
+                "{name}: admitted interactive ttft p99 {ttft_p99:.2} ms \
+                 over the {OL_TTFT_P99_SLO_MS} ms SLO");
+        assert!(reject_p99 <= OL_REJECT_P99_SLO_MS,
+                "{name}: shed latency p99 {reject_p99:.2} ms over the \
+                 {OL_REJECT_P99_SLO_MS} ms bound — rejects must be fast");
+        if mult >= 2.0 {
+            assert!(o.rejected > 0,
+                    "{name}: 2x overload must shed load");
+        }
+        rows.push(ScenarioRow {
+            name: name.to_string(),
+            tokens_per_s: goodput,
+            ttft_p50_ms: pctl(&o.ttft_ms, 50.0),
+            ttft_p95_ms: pctl(&o.ttft_ms, 95.0),
+            prefill_ms_mean: mean(&o.prefill_ms),
+            cache_hit_rate: 0.0,
+            extras: vec![
+                ("goodput_ratio", ratio),
+                ("ttft_p99_ms", ttft_p99),
+                ("reject_p99_ms", reject_p99),
+                ("requests_shed", o.rejected as f64),
+            ],
         });
     }
     println!();
@@ -435,22 +781,26 @@ fn real_engine_scenario(n: usize, ctx: usize) {
     }
 }
 
-/// Render the rows as the `BENCH_8.json` artifact (no JSON serializer
+/// Render the rows as the `BENCH_9.json` artifact (no JSON serializer
 /// in the offline vendor set; the schema is flat enough to emit by
 /// hand).  Non-finite values are clamped to 0 so the output always
 /// parses.
 fn render_json(rows: &[ScenarioRow]) -> String {
     let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
-    let mut s = String::from("{\n  \"pr\": 8,\n  \"scenarios\": [\n");
+    let mut s = String::from("{\n  \"pr\": 9,\n  \"scenarios\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \
              \"ttft_p50_ms\": {:.3}, \"ttft_p95_ms\": {:.3}, \
-             \"prefill_ms_mean\": {:.3}, \"cache_hit_rate\": {:.4}}}{}\n",
+             \"prefill_ms_mean\": {:.3}, \"cache_hit_rate\": {:.4}",
             r.name, fin(r.tokens_per_s), fin(r.ttft_p50_ms),
             fin(r.ttft_p95_ms), fin(r.prefill_ms_mean),
-            fin(r.cache_hit_rate),
-            if i + 1 < rows.len() { "," } else { "" }));
+            fin(r.cache_hit_rate)));
+        for (k, v) in &r.extras {
+            s.push_str(&format!(", \"{k}\": {:.4}", fin(*v)));
+        }
+        s.push_str(&format!("}}{}\n",
+                            if i + 1 < rows.len() { "," } else { "" }));
     }
     s.push_str("  ]\n}\n");
     s
@@ -497,6 +847,10 @@ fn main() -> anyhow::Result<()> {
     // the fleet headline: same mixed workload, more engine shards ->
     // strictly more aggregate prefill throughput (asserted inside)
     rows.extend(fleet_scaling_scenario());
+    // the overload headline: open-loop arrivals past capacity, survived
+    // by SLO-aware admission (goodput floor + interactive TTFT + fast
+    // sheds asserted inside)
+    rows.extend(open_loop_scenario());
 
     if let Some(path) = json_path {
         std::fs::write(&path, render_json(&rows))?;

@@ -76,7 +76,7 @@ fn main() {
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
         for i in 0..8 {
             let (sink, _rx) = EventSink::channel();
-            sched.submit(Request::new(i, vec![7; 256], 8), sink);
+            sched.submit(&engine, Request::new(i, vec![7; 256], 8), sink);
         }
         while sched.has_work() {
             sched.run_round(&mut engine).unwrap();

@@ -10,7 +10,7 @@
 //!     FlashPrefill-style discovery, pivotal construction, mask
 //!     packing, abar scatter), artifact-free.  The JSON (per-kernel
 //!     mean_ms + ns_per_token) is merged into the bench-smoke
-//!     trajectory artifact (`BENCH_8.json`) by CI, which schema-checks
+//!     trajectory artifact (`BENCH_9.json`) by CI, which schema-checks
 //!     it and fails any kernel more than 15% over its committed
 //!     ns/token.
 

@@ -31,6 +31,12 @@ SUBCOMMANDS
             [--queue-capacity N] [--pattern-cache]
             [--pattern-cache-capacity N] [--pattern-cache-validation T]
             [--pattern-cache-max-age N]
+            [--admission-enabled] [--admission-max-queue-depth N]
+            [--admission-kv-overcommit F] [--admission-max-queue-rounds N]
+            [--admission-interactive-max-tokens N]
+            [--admission-degrade-queue-depth N]
+            [--admission-degraded-budget-pct P]
+            [--admission-degraded-max-prefills N]
   eval      Table 1: InfiniteBench-sim suite
             [--model M] [--methods a,b,..] [--samples N] [--ctx L]
   ablate    Table 2: ablations [--model M] [--samples N] [--ctx L]
@@ -49,7 +55,8 @@ COMMON  --artifacts DIR   (default: artifacts)
 
 pub fn run_cli() -> Result<()> {
     let args = Args::from_env(&["help", "verbose", "similarity",
-                                "distribution", "pattern-cache"])?;
+                                "distribution", "pattern-cache",
+                                "admission-enabled"])?;
     if args.flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());

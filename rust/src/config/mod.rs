@@ -121,6 +121,69 @@ impl Default for PatternCacheConfig {
     }
 }
 
+/// SLO-aware admission control + overload degradation knobs
+/// (`serve.admission` in TOML).
+///
+/// Off by default: with `enabled = false` submit-time admission, the
+/// per-class priority, queue deadlines, and the degradation ladder are
+/// all inert and the serving stack is bit-identical to a build without
+/// them.  Each sub-knob additionally treats `0` as "off" so the
+/// features can be engaged independently.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Master switch; false = FIFO admission exactly as before.
+    pub enabled: bool,
+    /// Early back-pressure: reject at submit with `QueueDepth` once the
+    /// queue holds this many sessions (0 = only the hard
+    /// `queue_capacity` wall rejects).  Interactive-class requests are
+    /// exempt and may use the full queue capacity.
+    pub max_queue_depth: usize,
+    /// KV headroom ceiling as a fraction of allocator capacity: reject
+    /// at submit with `KvHeadroom` when held + queued demand + this
+    /// request's whole-lifetime blocks exceeds `kv_overcommit ×
+    /// kv_blocks` (0.0 = off).  Values > 1.0 deliberately overcommit,
+    /// betting on queued sessions completing before admission.
+    pub kv_overcommit: f64,
+    /// Deadline proxy in scheduler rounds: a queued session that has
+    /// waited more than this many rounds is shed with
+    /// `DeadlineExceeded` instead of served uselessly late (0 = wait
+    /// forever).  Rounds, not wall time, so virtual-time (SimEngine)
+    /// runs are deterministic.
+    pub max_queue_rounds: usize,
+    /// Request-class boundary: prompts of at most this many tokens are
+    /// "interactive" — admitted ahead of batch requests, exempt from
+    /// `max_queue_depth`, and tracked in the per-class TTFT histograms
+    /// (0 = single-class traffic, no reordering).
+    pub interactive_max_tokens: usize,
+    /// Degradation ladder trigger: queue depth at which the scheduler
+    /// enters degraded mode (0 = never degrade).
+    pub degrade_queue_depth: usize,
+    /// Degraded mode: round budget shrinks to this percentage of
+    /// `max_batch_tokens` (100 = unchanged), trading per-round
+    /// throughput for faster round turnaround (admission, deadlines,
+    /// and decode latency are all per-round).
+    pub degraded_budget_pct: usize,
+    /// Degraded mode: cap on concurrent prefills (0 = unchanged);
+    /// fewer interleaved prefills means less KV held half-finished
+    /// under pressure.
+    pub degraded_max_prefills: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            enabled: false,
+            max_queue_depth: 0,
+            kv_overcommit: 0.0,
+            max_queue_rounds: 0,
+            interactive_max_tokens: 0,
+            degrade_queue_depth: 0,
+            degraded_budget_pct: 100,
+            degraded_max_prefills: 0,
+        }
+    }
+}
+
 /// Serving engine parameters.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -159,6 +222,8 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Cross-request pivotal-pattern cache (SharePrefill only).
     pub pattern_cache: PatternCacheConfig,
+    /// SLO-aware admission control + overload degradation.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServeConfig {
@@ -175,6 +240,7 @@ impl Default for ServeConfig {
             workers: 1,
             shards: 1,
             pattern_cache: PatternCacheConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -254,6 +320,27 @@ impl Config {
         pc.max_age =
             t.usize_or("serve.pattern_cache.max_age", pc.max_age as usize)
                 as u64;
+        let ad = &mut self.serve.admission;
+        ad.enabled = t.bool_or("serve.admission.enabled", ad.enabled);
+        ad.max_queue_depth = t.usize_or("serve.admission.max_queue_depth",
+                                        ad.max_queue_depth);
+        ad.kv_overcommit = t.f64_or("serve.admission.kv_overcommit",
+                                    ad.kv_overcommit);
+        ad.max_queue_rounds =
+            t.usize_or("serve.admission.max_queue_rounds",
+                       ad.max_queue_rounds);
+        ad.interactive_max_tokens =
+            t.usize_or("serve.admission.interactive_max_tokens",
+                       ad.interactive_max_tokens);
+        ad.degrade_queue_depth =
+            t.usize_or("serve.admission.degrade_queue_depth",
+                       ad.degrade_queue_depth);
+        ad.degraded_budget_pct =
+            t.usize_or("serve.admission.degraded_budget_pct",
+                       ad.degraded_budget_pct);
+        ad.degraded_max_prefills =
+            t.usize_or("serve.admission.degraded_max_prefills",
+                       ad.degraded_max_prefills);
         if let Some(v) = t.get("paths.artifacts") {
             self.paths.artifacts = PathBuf::from(v.as_str()?);
         }
@@ -306,6 +393,30 @@ impl Config {
         pc.max_age =
             args.usize_or("pattern-cache-max-age", pc.max_age as usize)?
                 as u64;
+        if args.flag("admission-enabled") {
+            self.serve.admission.enabled = true;
+        }
+        let ad = &mut self.serve.admission;
+        ad.max_queue_depth =
+            args.usize_or("admission-max-queue-depth",
+                          ad.max_queue_depth)?;
+        ad.kv_overcommit =
+            args.f64_or("admission-kv-overcommit", ad.kv_overcommit)?;
+        ad.max_queue_rounds =
+            args.usize_or("admission-max-queue-rounds",
+                          ad.max_queue_rounds)?;
+        ad.interactive_max_tokens =
+            args.usize_or("admission-interactive-max-tokens",
+                          ad.interactive_max_tokens)?;
+        ad.degrade_queue_depth =
+            args.usize_or("admission-degrade-queue-depth",
+                          ad.degrade_queue_depth)?;
+        ad.degraded_budget_pct =
+            args.usize_or("admission-degraded-budget-pct",
+                          ad.degraded_budget_pct)?;
+        ad.degraded_max_prefills =
+            args.usize_or("admission-degraded-max-prefills",
+                          ad.degraded_max_prefills)?;
         Ok(())
     }
 }
@@ -459,6 +570,16 @@ enabled = true
 capacity = 17
 validation = 0.6
 max_age = 9
+
+[serve.admission]
+enabled = true
+max_queue_depth = 11
+kv_overcommit = 1.5
+max_queue_rounds = 21
+interactive_max_tokens = 257
+degrade_queue_depth = 13
+degraded_budget_pct = 55
+degraded_max_prefills = 2
 ";
         let t1 = tomlmini::parse(doc).unwrap();
         let t2 = tomlmini::parse(&tomlmini::emit(&t1)).unwrap();
@@ -481,6 +602,54 @@ max_age = 9
         assert_eq!(c.serve.pattern_cache.capacity, 17);
         assert!((c.serve.pattern_cache.validation - 0.6).abs() < 1e-12);
         assert_eq!(c.serve.pattern_cache.max_age, 9);
+        assert!(c.serve.admission.enabled);
+        assert_eq!(c.serve.admission.max_queue_depth, 11);
+        assert!((c.serve.admission.kv_overcommit - 1.5).abs() < 1e-12);
+        assert_eq!(c.serve.admission.max_queue_rounds, 21);
+        assert_eq!(c.serve.admission.interactive_max_tokens, 257);
+        assert_eq!(c.serve.admission.degrade_queue_depth, 13);
+        assert_eq!(c.serve.admission.degraded_budget_pct, 55);
+        assert_eq!(c.serve.admission.degraded_max_prefills, 2);
+    }
+
+    #[test]
+    fn admission_defaults_off() {
+        // bit-identity contract: every admission knob defaults to the
+        // value that makes the new machinery inert
+        let a = Config::default().serve.admission;
+        assert!(!a.enabled);
+        assert_eq!(a.max_queue_depth, 0);
+        assert_eq!(a.kv_overcommit, 0.0);
+        assert_eq!(a.max_queue_rounds, 0);
+        assert_eq!(a.interactive_max_tokens, 0);
+        assert_eq!(a.degrade_queue_depth, 0);
+        assert_eq!(a.degraded_budget_pct, 100);
+        assert_eq!(a.degraded_max_prefills, 0);
+    }
+
+    #[test]
+    fn admission_cli_overrides() {
+        let args = Args::parse(
+            ["x", "--admission-enabled",
+             "--admission-max-queue-depth", "6",
+             "--admission-kv-overcommit", "2.0",
+             "--admission-max-queue-rounds", "40",
+             "--admission-interactive-max-tokens", "128",
+             "--admission-degrade-queue-depth", "4",
+             "--admission-degraded-budget-pct", "50",
+             "--admission-degraded-max-prefills", "1"]
+                .map(String::from), &["admission-enabled"]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        let a = &c.serve.admission;
+        assert!(a.enabled);
+        assert_eq!(a.max_queue_depth, 6);
+        assert!((a.kv_overcommit - 2.0).abs() < 1e-12);
+        assert_eq!(a.max_queue_rounds, 40);
+        assert_eq!(a.interactive_max_tokens, 128);
+        assert_eq!(a.degrade_queue_depth, 4);
+        assert_eq!(a.degraded_budget_pct, 50);
+        assert_eq!(a.degraded_max_prefills, 1);
     }
 
     #[test]

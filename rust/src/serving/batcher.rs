@@ -80,6 +80,25 @@ impl<T: BatchItem> Batcher<T> {
         self.queue.remove(idx)
     }
 
+    /// Queued items in FIFO order (admission headroom accounting and
+    /// class-priority candidate selection read the whole queue).
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.queue.iter()
+    }
+
+    /// The queued item at `i` (0 = front), mutable — admission retry
+    /// counters live on queued sessions.
+    pub fn get_mut(&mut self, i: usize) -> Option<&mut T> {
+        self.queue.get_mut(i)
+    }
+
+    /// Remove and return the item at `i` (0 = front), preserving the
+    /// FIFO order of everything else — class-priority admission pulls
+    /// an interactive session out of the middle of the queue.
+    pub fn remove_at(&mut self, i: usize) -> Option<T> {
+        self.queue.remove(i)
+    }
+
     /// Form the next batch: FIFO order, stop at the token budget or the
     /// request cap.  The head item is always admitted even if it alone
     /// exceeds the budget (otherwise it would starve).
@@ -165,6 +184,24 @@ mod tests {
         assert_eq!(removed.id, 1);
         assert_eq!(b.len(), 2);
         assert!(b.remove_by(|r| r.id == 42).is_none());
+    }
+
+    #[test]
+    fn indexed_access_preserves_fifo() {
+        let mut b = Batcher::new(100, 8, 8);
+        for i in 0..4 {
+            let _ = b.push(req(i, 1));
+        }
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1, 2, 3]);
+        assert_eq!(b.get_mut(2).unwrap().id, 2);
+        assert!(b.get_mut(9).is_none());
+        // pulling from the middle keeps everyone else in order
+        let pulled = b.remove_at(1).unwrap();
+        assert_eq!(pulled.id, 1);
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 2, 3]);
+        assert!(b.remove_at(3).is_none());
     }
 
     #[test]

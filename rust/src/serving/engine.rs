@@ -240,6 +240,16 @@ pub trait EngineCore {
     fn absorb_pattern_export(&mut self, export: &PatternExport) {
         let _ = export;
     }
+
+    /// Overload signal from the scheduler's degradation ladder: `true`
+    /// while the admission queue is past its pressure threshold, `false`
+    /// once it drains.  Engines may trade accuracy for speed while
+    /// pressured (FlexPrefill-style: tighten the sparse budget γ so
+    /// prefills compute fewer blocks); the default ignores it, so
+    /// engines whose γ is baked into compiled strategies stay exact.
+    fn set_pressure(&mut self, pressured: bool) {
+        let _ = pressured;
+    }
 }
 
 /// Lazy probe provider for one layer (computes each probe at most once).

@@ -137,7 +137,7 @@ fn run_shard<E: EngineCore>(
             };
             match cmd {
                 ShardCmd::Submit(r, sink) => {
-                    sched.submit(r, sink);
+                    sched.submit(&engine, r, sink);
                 }
                 ShardCmd::Cancel(id) => {
                     sched.cancel(id);
@@ -369,9 +369,9 @@ impl Fleet {
                     if let Some(m) = e.metrics {
                         shard_lines.push(format!(
                             "  shard {i}: {} done, {} rejected, {} \
-                             cancelled",
+                             cancelled, {} errored",
                             m.requests_completed, m.requests_rejected,
-                            m.requests_cancelled));
+                            m.requests_cancelled, m.requests_errored));
                         agg.absorb(&m);
                     }
                 }

@@ -66,6 +66,10 @@ impl KvAllocator {
     /// Increase refcount (prefix sharing).
     pub fn retain(&mut self, blocks: &[BlockId]) -> Result<()> {
         for &b in blocks {
+            if b as usize >= self.capacity {
+                bail!("retain of out-of-range block {b} \
+                       (capacity {})", self.capacity);
+            }
             if self.refcount[b as usize] == 0 {
                 bail!("retain of free block {b}");
             }
@@ -77,6 +81,10 @@ impl KvAllocator {
     /// Drop a reference; blocks return to the free list at refcount 0.
     pub fn release(&mut self, blocks: &[BlockId]) -> Result<()> {
         for &b in blocks {
+            if b as usize >= self.capacity {
+                bail!("release of out-of-range block {b} \
+                       (capacity {})", self.capacity);
+            }
             let rc = &mut self.refcount[b as usize];
             if *rc == 0 {
                 bail!("double free of block {b}");
@@ -203,6 +211,27 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(sorted.len(), 2, "free list must hold unique blocks");
+    }
+
+    #[test]
+    fn out_of_range_block_id_is_an_error_not_a_panic() {
+        // a corrupt BlockId from a confused caller must come back as a
+        // structured error like the double-free path does — not panic
+        // the engine thread on an unchecked index (PR 6's documented
+        // indexing-panic lint blind spot, closed here)
+        let mut a = KvAllocator::new(4);
+        let held = a.alloc(2).unwrap();
+        assert!(a.retain(&[99]).is_err(), "retain past capacity");
+        assert!(a.release(&[99]).is_err(), "release past capacity");
+        assert!(a.release(&[4]).is_err(), "first id past capacity");
+        // allocator must stay coherent and usable afterwards
+        assert_eq!(a.used(), 2);
+        a.release(&held).unwrap();
+        assert_eq!(a.available(), 4);
+        // zero-capacity allocator: every id is out of range
+        let mut z = KvAllocator::new(0);
+        assert!(z.retain(&[0]).is_err());
+        assert!(z.release(&[0]).is_err());
     }
 
     #[test]

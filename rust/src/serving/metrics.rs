@@ -10,6 +10,19 @@ pub struct Metrics {
     pub requests_completed: u64,
     pub requests_rejected: u64,
     pub requests_cancelled: u64,
+    /// Sessions that got a terminal `Error` event (engine failure or a
+    /// fleet-synthesized abort).  Without this the summary cannot
+    /// reconcile: completed + rejected + cancelled + errored must equal
+    /// submitted.
+    pub requests_errored: u64,
+    /// Admission-control sheds by cause (each also counts in
+    /// `requests_rejected`); all zero with admission control disabled.
+    pub shed_queue_depth: u64,
+    pub shed_kv_headroom: u64,
+    pub shed_deadline: u64,
+    /// Rounds run with the degradation ladder engaged (shrunk budget /
+    /// capped prefills under queue pressure).
+    pub degraded_rounds: u64,
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub prefill_us: Histogram,
@@ -18,6 +31,12 @@ pub struct Metrics {
     /// Arrival → first token, per request (the continuous-batching
     /// headline: long prompts must not inflate everyone else's TTFT).
     pub ttft_us: Histogram,
+    /// TTFT split by request class when admission control defines one
+    /// (`serve.admission.interactive_max_tokens`): short interactive
+    /// prompts vs everything else.  Both empty with classes disabled —
+    /// `ttft_us` above always holds the combined picture.
+    pub interactive_ttft_us: Histogram,
+    pub batch_ttft_us: Histogram,
     pub density: Summary,
     pub dense_heads: u64,
     pub shared_heads: u64,
@@ -81,12 +100,19 @@ impl Metrics {
         self.requests_completed += other.requests_completed;
         self.requests_rejected += other.requests_rejected;
         self.requests_cancelled += other.requests_cancelled;
+        self.requests_errored += other.requests_errored;
+        self.shed_queue_depth += other.shed_queue_depth;
+        self.shed_kv_headroom += other.shed_kv_headroom;
+        self.shed_deadline += other.shed_deadline;
+        self.degraded_rounds += other.degraded_rounds;
         self.prompt_tokens += other.prompt_tokens;
         self.generated_tokens += other.generated_tokens;
         self.prefill_us.absorb(&other.prefill_us);
         self.decode_us.absorb(&other.decode_us);
         self.queue_us.absorb(&other.queue_us);
         self.ttft_us.absorb(&other.ttft_us);
+        self.interactive_ttft_us.absorb(&other.interactive_ttft_us);
+        self.batch_ttft_us.absorb(&other.batch_ttft_us);
         self.density.absorb(&other.density);
         self.dense_heads += other.dense_heads;
         self.shared_heads += other.shared_heads;
@@ -170,10 +196,20 @@ impl Metrics {
         }
     }
 
+    /// Total admission-control sheds (each also counted in
+    /// `requests_rejected`).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_depth + self.shed_kv_headroom + self.shed_deadline
+    }
+
     pub fn report(&self) -> String {
         let (occ_d, occ_p, occ_i) = self.occupancy();
         format!(
-            "requests: {} done, {} rejected, {} cancelled\n\
+            "requests: {} done, {} rejected, {} cancelled, {} errored\n\
+             admission: {} shed (depth {}, headroom {}, deadline {}), \
+             {} degraded rounds\n\
+             classes: interactive ttft p99 ≤ {:.1} ms ({} samples), \
+             batch ttft p99 ≤ {:.1} ms ({} samples)\n\
              tokens: {} prompt, {} generated\n\
              ttft:    mean {:.1} ms, p99 ≤ {:.1} ms ({} samples)\n\
              prefill: mean {:.1} ms, p99 ≤ {:.1} ms ({} samples)\n\
@@ -189,7 +225,14 @@ impl Metrics {
              prefill, {:.0}% idle)\n\
              prefill throughput: {:.0} tok/s",
             self.requests_completed, self.requests_rejected,
-            self.requests_cancelled,
+            self.requests_cancelled, self.requests_errored,
+            self.shed_total(), self.shed_queue_depth,
+            self.shed_kv_headroom, self.shed_deadline,
+            self.degraded_rounds,
+            self.interactive_ttft_us.quantile_us(0.99) as f64 / 1e3,
+            self.interactive_ttft_us.count(),
+            self.batch_ttft_us.quantile_us(0.99) as f64 / 1e3,
+            self.batch_ttft_us.count(),
             self.prompt_tokens, self.generated_tokens,
             self.ttft_us.mean_us() / 1e3,
             self.ttft_us.quantile_us(0.99) as f64 / 1e3,
@@ -315,6 +358,36 @@ mod tests {
         assert!((a.cache_hit_rate() - 0.75).abs() < 1e-12);
         let r = a.report();
         assert!(r.contains("requests: 3 done, 1 rejected, 0 cancelled"));
+    }
+
+    #[test]
+    fn errored_and_shed_counters_merge_and_report() {
+        let mut a = Metrics::new();
+        a.requests_completed = 2;
+        a.requests_errored = 1;
+        a.shed_queue_depth = 2;
+        a.interactive_ttft_us.record_us(1_000);
+        let mut b = Metrics::new();
+        b.requests_errored = 2;
+        b.shed_kv_headroom = 1;
+        b.shed_deadline = 3;
+        b.degraded_rounds = 4;
+        b.batch_ttft_us.record_us(9_000);
+        a.absorb(&b);
+        assert_eq!(a.requests_errored, 3);
+        assert_eq!(a.shed_total(), 6);
+        assert_eq!(a.degraded_rounds, 4);
+        assert_eq!(a.interactive_ttft_us.count(), 1);
+        assert_eq!(a.batch_ttft_us.count(), 1);
+        let r = a.report();
+        assert!(r.contains("requests: 2 done, 0 rejected, 0 cancelled, \
+                            3 errored"),
+                "errored missing from report: {r}");
+        assert!(r.contains("admission: 6 shed (depth 2, headroom 1, \
+                            deadline 3), 4 degraded rounds"),
+                "admission line missing from report: {r}");
+        assert!(r.contains("classes: interactive"),
+                "class line missing from report: {r}");
     }
 
     #[test]

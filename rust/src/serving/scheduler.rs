@@ -39,6 +39,22 @@
 //! get a terminal `Rejected` event — clients never hang, and the
 //! [`RejectReason`] tells them whether the condition was transient.
 //!
+//! **Overload discipline (`serve.admission.*`, off by default).**  Under
+//! open-loop arrivals the queue can grow without bound; the admission
+//! layer sheds load *early*, at submit, in a fixed decision order:
+//! (1) queue-depth back-pressure (`QueueDepth`, interactive-class
+//! requests exempt), (2) KV-headroom accounting over held + queued
+//! demand (`KvHeadroom`), then (3) the hard `queue_capacity` wall
+//! (`QueueFull`).  Queued sessions that outlive their round-denominated
+//! deadline are shed with `DeadlineExceeded` at the top of each round.
+//! Class priority (prompts ≤ `interactive_max_tokens`) lets short
+//! interactive requests overtake queued batch work at admission, and a
+//! degradation ladder (queue past `degrade_queue_depth`) shrinks the
+//! round budget, caps concurrent prefills, and signals the engine via
+//! [`EngineCore::set_pressure`] to tighten its sparse budget.  With
+//! every knob at its default the entire layer is inert and event
+//! streams are bit-identical to a build without it.
+//!
 //! The cross-request pattern cache needs nothing scheduler-specific to
 //! stay safe under interleaved prefills: warm candidates are
 //! snapshotted per request inside `begin_prefill` and publication
@@ -53,7 +69,7 @@
 
 use anyhow::Result;
 
-use crate::config::ServeConfig;
+use crate::config::{AdmissionConfig, ServeConfig};
 
 use super::batcher::{BatchItem, Batcher};
 use super::engine::{EngineCore, PrefillStats};
@@ -79,6 +95,9 @@ struct Session<E: EngineCore> {
     /// Rounds since this prefill last advanced a chunk (starvation
     /// counter feeding the budget-exempt chunk grant).
     rounds_starved: u64,
+    /// Rounds spent waiting in the admission queue (deadline shedding:
+    /// `serve.admission.max_queue_rounds`).
+    queued_rounds: u64,
 }
 
 impl<E: EngineCore> BatchItem for Session<E> {
@@ -98,7 +117,12 @@ pub struct Scheduler<E: EngineCore> {
     round_budget: usize,
     max_active: usize,
     max_prefills: usize,
+    /// Effective concurrent-prefill cap for the current round: equals
+    /// `max_prefills` normally, the degraded cap while the degradation
+    /// ladder is engaged.
+    cur_max_prefills: usize,
     admit_retries: usize,
+    admission: AdmissionConfig,
     /// When true, every id that receives its terminal event is logged to
     /// `retired` until drained — the fleet front door consumes this so
     /// its session registry (used to synthesize terminal `Error`s after
@@ -123,7 +147,9 @@ impl<E: EngineCore> Scheduler<E> {
             round_budget: cfg.max_batch_tokens.max(1),
             max_active: cfg.max_batch_requests.max(1),
             max_prefills: cfg.max_concurrent_prefills.max(1),
+            cur_max_prefills: cfg.max_concurrent_prefills.max(1),
             admit_retries: cfg.admit_retries,
+            admission: cfg.admission.clone(),
             track_retired: false,
             retired: Vec::new(),
         }
@@ -147,9 +173,25 @@ impl<E: EngineCore> Scheduler<E> {
         }
     }
 
-    /// Submit a request with its event sink; false = queue full (the
-    /// session still receives a terminal `Rejected` event).
-    pub fn submit(&mut self, r: Request, sink: EventSink) -> bool {
+    /// Whole-lifetime KV block demand of a prompt on `engine`.
+    fn blocks_for(&self, engine: &E, prompt_len: usize) -> usize {
+        KvAllocator::blocks_needed(prompt_len, self.decode_tokens,
+                                   engine.layers_total())
+    }
+
+    /// Interactive-class request under the admission config's class
+    /// boundary (always false with classes off).
+    fn is_interactive(&self, prompt_len: usize) -> bool {
+        self.admission.enabled
+            && self.admission.interactive_max_tokens > 0
+            && prompt_len <= self.admission.interactive_max_tokens
+    }
+
+    /// Submit a request with its event sink; false = shed at admission
+    /// (queue depth, KV headroom, or the hard queue-capacity wall — the
+    /// session still receives a terminal `Rejected` event saying which).
+    pub fn submit(&mut self, engine: &E, r: Request, sink: EventSink)
+                  -> bool {
         let s = Session {
             req: r,
             sink,
@@ -163,7 +205,42 @@ impl<E: EngineCore> Scheduler<E> {
             ttft_us: None,
             emitted: 0,
             rounds_starved: 0,
+            queued_rounds: 0,
         };
+        if self.admission.enabled {
+            let prompt_len = s.req.prompt_len();
+            // (1) queue-depth back-pressure: shed batch-class load well
+            // before the hard capacity wall; interactive requests may
+            // use the full queue.
+            let (depth, limit) =
+                (self.queue.len(), self.admission.max_queue_depth);
+            if limit > 0 && depth >= limit
+                && !self.is_interactive(prompt_len) {
+                self.reject(s, RejectReason::QueueDepth { depth, limit });
+                return false;
+            }
+            // (2) KV headroom: held blocks + queued demand + this
+            // request must fit under the overcommit ceiling, otherwise
+            // the queue is a promise the allocator cannot keep.
+            if self.admission.kv_overcommit > 0.0 {
+                let need = self.blocks_for(engine, prompt_len);
+                let queued: usize = self.queue.iter()
+                    .map(|q| self.blocks_for(engine, q.req.prompt_len()))
+                    .sum();
+                let committed = self.kv.used() + queued;
+                let ceiling = (self.admission.kv_overcommit
+                               * self.kv.capacity() as f64) as usize;
+                if committed + need > ceiling {
+                    self.reject(s, RejectReason::KvHeadroom {
+                        blocks_needed: need,
+                        committed,
+                        capacity: ceiling,
+                    });
+                    return false;
+                }
+            }
+        }
+        // (3) the hard queue-capacity wall.
         match self.queue.push(s) {
             Ok(()) => true,
             Err(s) => {
@@ -230,6 +307,18 @@ impl<E: EngineCore> Scheduler<E> {
         self.release_blocks(&mut s);
         s.state = SessionState::Rejected;
         self.metrics.requests_rejected += 1;
+        match &reason {
+            RejectReason::QueueDepth { .. } => {
+                self.metrics.shed_queue_depth += 1;
+            }
+            RejectReason::KvHeadroom { .. } => {
+                self.metrics.shed_kv_headroom += 1;
+            }
+            RejectReason::DeadlineExceeded { .. } => {
+                self.metrics.shed_deadline += 1;
+            }
+            _ => {}
+        }
         s.sink.send(Event::Rejected { id: s.req.id, reason });
         self.log_retired(s.req.id);
     }
@@ -243,10 +332,14 @@ impl<E: EngineCore> Scheduler<E> {
         }
     }
 
-    /// Terminal `Error` for one session the engine failed on (its KV
-    /// reservation must not leak with it).
+    /// Terminal `Error` for one session the engine failed on: its KV
+    /// reservation must not leak, its state must land on the terminal
+    /// `Errored`, and the error must count — completed + rejected +
+    /// cancelled + errored is the reconciliation the summary reports.
     fn fail_session(&mut self, mut s: Session<E>, message: &str) {
         self.release_blocks(&mut s);
+        s.state = SessionState::Errored;
+        self.metrics.requests_errored += 1;
         s.sink.send(Event::Error {
             id: s.req.id,
             message: message.to_string(),
@@ -263,33 +356,47 @@ impl<E: EngineCore> Scheduler<E> {
         }
         all.append(&mut self.prefilling);
         all.append(&mut self.decoding);
-        for mut s in all {
-            self.release_blocks(&mut s);
-            s.sink.send(Event::Error {
-                id: s.req.id,
-                message: message.to_string(),
-            });
-            self.log_retired(s.req.id);
+        for s in all {
+            self.fail_session(s, message);
         }
     }
 
-    /// Fill free prefill slots from the queue head (FIFO).  `count_retry`
-    /// marks the once-per-round admission attempt that burns a KV retry.
+    /// Queue index of the next admission candidate: the first
+    /// interactive-class session when class priority is on, the FIFO
+    /// head otherwise (and always the head with admission disabled).
+    fn candidate_index(&self) -> usize {
+        if self.admission.enabled
+            && self.admission.interactive_max_tokens > 0 {
+            let imax = self.admission.interactive_max_tokens;
+            self.queue.iter()
+                .position(|s| s.req.prompt_len() <= imax)
+                .unwrap_or(0)
+        } else {
+            0
+        }
+    }
+
+    /// Fill free prefill slots from the queue (FIFO, except that class
+    /// priority may pull an interactive session out of the middle).
+    /// `count_retry` marks the once-per-round admission attempt that
+    /// burns a KV retry.
     fn admit(&mut self, engine: &mut E, count_retry: bool) -> Result<()> {
-        while self.prefilling.len() < self.max_prefills {
+        while self.prefilling.len() < self.cur_max_prefills {
             if self.active() >= self.max_active {
                 return Ok(());
             }
-            // Peek the queue head; the `let else` arms below that pop
+            // Peek the candidate; the `let else` arms below that take
             // it again can only see the same non-empty queue, so their
             // `return Ok(())` fallbacks are unreachable no-ops — they
             // exist so this path is panic-free (lint: panic-hygiene).
-            let Some(front) = self.queue.front() else { return Ok(()) };
+            let ci = self.candidate_index();
+            let Some(front) = self.queue.iter().nth(ci) else {
+                return Ok(());
+            };
             let prompt_len = front.req.prompt_len();
-            let need = KvAllocator::blocks_needed(
-                prompt_len, self.decode_tokens, engine.layers_total());
+            let need = self.blocks_for(engine, prompt_len);
             if prompt_len == 0 {
-                let Some(s) = self.queue.pop_front() else {
+                let Some(s) = self.queue.remove_at(ci) else {
                     return Ok(());
                 };
                 self.reject(s, RejectReason::EmptyPrompt);
@@ -297,12 +404,12 @@ impl<E: EngineCore> Scheduler<E> {
             }
             if !self.kv.can_alloc(need) {
                 if count_retry {
-                    let Some(f) = self.queue.front_mut() else {
+                    let Some(f) = self.queue.get_mut(ci) else {
                         return Ok(());
                     };
                     f.admit_attempts += 1;
                     if f.admit_attempts > self.admit_retries {
-                        let Some(s) = self.queue.pop_front() else {
+                        let Some(s) = self.queue.remove_at(ci) else {
                             return Ok(());
                         };
                         self.reject(s, RejectReason::KvExhausted {
@@ -312,14 +419,28 @@ impl<E: EngineCore> Scheduler<E> {
                         continue; // the next queued session may be smaller
                     }
                 }
-                return Ok(()); // head of line waits; FIFO preserved
+                return Ok(()); // the candidate waits; order preserved
             }
-            let Some(mut s) = self.queue.pop_front() else {
+            let Some(mut s) = self.queue.remove_at(ci) else {
                 return Ok(());
             };
+            // KV first, engine second: once the session is out of the
+            // queue every failure must end in a terminal event, so the
+            // allocation error is a `Rejected` rather than a `?` that
+            // would silently drop the session (and `reject` releases
+            // the blocks the engine-refusal arm below holds).
+            match self.kv.alloc(need) {
+                Ok(blocks) => s.blocks = blocks,
+                Err(_) => {
+                    self.reject(s, RejectReason::KvExhausted {
+                        blocks_needed: need,
+                        retries: self.admit_retries,
+                    });
+                    continue;
+                }
+            }
             match engine.begin_prefill(&s.req.tokens) {
                 Ok(task) => {
-                    s.blocks = self.kv.alloc(need)?;
                     s.queue_us = s.req.arrived.elapsed().as_micros() as u64;
                     s.state = SessionState::Prefilling;
                     s.prefill = Some(task);
@@ -414,12 +535,64 @@ impl<E: EngineCore> Scheduler<E> {
         Ok(())
     }
 
+    /// Age every queued session one round and shed the ones past the
+    /// admission deadline (`serve.admission.max_queue_rounds`) with a
+    /// terminal `DeadlineExceeded` — serving them would only burn
+    /// budget on answers nobody is waiting for anymore.
+    fn shed_expired(&mut self) {
+        let mut i = 0;
+        while let Some(s) = self.queue.get_mut(i) {
+            s.queued_rounds += 1;
+            i += 1;
+        }
+        if !self.admission.enabled || self.admission.max_queue_rounds == 0 {
+            return;
+        }
+        let limit = self.admission.max_queue_rounds as u64;
+        while let Some(s) =
+            self.queue.remove_by(|s| s.queued_rounds > limit) {
+            let waited = s.queued_rounds;
+            self.reject(s, RejectReason::DeadlineExceeded {
+                waited_rounds: waited,
+                limit_rounds: limit,
+            });
+        }
+    }
+
+    /// Evaluate the degradation ladder for this round: returns the
+    /// effective round budget, sets the effective concurrent-prefill
+    /// cap, and signals the engine.  Inert (and signalling `false`)
+    /// unless `serve.admission.degrade_queue_depth` is set and the
+    /// queue is past it.
+    fn apply_pressure(&mut self, engine: &mut E) -> usize {
+        let pressured = self.admission.enabled
+            && self.admission.degrade_queue_depth > 0
+            && self.queue.len() >= self.admission.degrade_queue_depth;
+        engine.set_pressure(pressured);
+        self.cur_max_prefills = if pressured
+            && self.admission.degraded_max_prefills > 0 {
+            self.max_prefills.min(self.admission.degraded_max_prefills)
+        } else {
+            self.max_prefills
+        };
+        if pressured {
+            self.metrics.degraded_rounds += 1;
+            (self.round_budget
+             * self.admission.degraded_budget_pct.min(100) / 100)
+                .max(1)
+        } else {
+            self.round_budget
+        }
+    }
+
     /// Run one scheduling round. Returns sessions completed this round.
     pub fn run_round(&mut self, engine: &mut E) -> Result<Vec<Response>> {
         let mut completed = Vec::new();
+        self.shed_expired();
+        let round_budget = self.apply_pressure(engine);
         self.admit(engine, true)?;
         let track_round = self.has_work();
-        let mut budget = self.round_budget;
+        let mut budget = round_budget;
         let (mut spent_decode, mut spent_prefill) = (0usize, 0usize);
         let mut ran_ids: Vec<RequestId> = Vec::new();
         loop {
@@ -517,7 +690,7 @@ impl<E: EngineCore> Scheduler<E> {
         }
         if track_round {
             self.metrics.record_round(spent_decode, spent_prefill,
-                                      spent_exempt, self.round_budget);
+                                      spent_exempt, round_budget);
         }
         Ok(completed)
     }
@@ -538,6 +711,14 @@ impl<E: EngineCore> Scheduler<E> {
         self.metrics.decode_us.record_us(decode_us);
         self.metrics.queue_us.record_us(s.queue_us);
         self.metrics.ttft_us.record_us(ttft_us);
+        if self.admission.enabled
+            && self.admission.interactive_max_tokens > 0 {
+            if self.is_interactive(s.req.prompt_len()) {
+                self.metrics.interactive_ttft_us.record_us(ttft_us);
+            } else {
+                self.metrics.batch_ttft_us.record_us(ttft_us);
+            }
+        }
         self.metrics.generated_tokens += generated.len() as u64;
         self.metrics.requests_completed += 1;
         let response = Response {
@@ -568,10 +749,11 @@ mod tests {
     #[test]
     fn submit_reject_accounting() {
         let cfg = ServeConfig { queue_capacity: 1, ..Default::default() };
+        let engine = SimEngine::new(4);
         let mut s: Scheduler<SimEngine> = Scheduler::new(&cfg);
-        assert!(s.submit(Request::new(0, vec![0; 8], 0),
+        assert!(s.submit(&engine, Request::new(0, vec![0; 8], 0),
                          EventSink::null()));
-        assert!(!s.submit(Request::new(1, vec![0; 8], 0),
+        assert!(!s.submit(&engine, Request::new(1, vec![0; 8], 0),
                           EventSink::null()));
         assert_eq!(s.metrics.requests_rejected, 1);
         assert_eq!(s.pending(), 1);
@@ -584,7 +766,7 @@ mod tests {
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
         let (sink, rx) = EventSink::channel();
         for i in 0..3 {
-            assert!(sched.submit(Request::new(i, vec![7; 64], 2),
+            assert!(sched.submit(&engine, Request::new(i, vec![7; 64], 2),
                                  sink.clone()));
         }
         let mut done = Vec::new();
@@ -616,8 +798,10 @@ mod tests {
         };
         let mut engine = SimEngine::new(4).with_pattern_cache();
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
-        sched.submit(Request::new(0, vec![7; 256], 1), EventSink::null());
-        sched.submit(Request::new(1, vec![7; 256], 1), EventSink::null());
+        sched.submit(&engine, Request::new(0, vec![7; 256], 1),
+                     EventSink::null());
+        sched.submit(&engine, Request::new(1, vec![7; 256], 1),
+                     EventSink::null());
         while sched.has_work() {
             sched.run_round(&mut engine).unwrap();
         }
@@ -635,10 +819,10 @@ mod tests {
         let mut engine = SimEngine::new(4);
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
         sched.track_retirements();
-        assert!(sched.submit(Request::new(0, vec![7; 16], 1),
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 16], 1),
                              EventSink::null()));
         // queue-full rejection is a terminal event too
-        assert!(!sched.submit(Request::new(1, vec![7; 16], 1),
+        assert!(!sched.submit(&engine, Request::new(1, vec![7; 16], 1),
                               EventSink::null()));
         assert_eq!(sched.take_retired(), vec![1]);
         while sched.has_work() {
@@ -648,7 +832,8 @@ mod tests {
         assert!(sched.take_retired().is_empty());
         // off by default: nothing is logged
         let mut quiet: Scheduler<SimEngine> = Scheduler::new(&cfg);
-        quiet.submit(Request::new(0, vec![7; 16], 1), EventSink::null());
+        quiet.submit(&engine, Request::new(0, vec![7; 16], 1),
+                     EventSink::null());
         while quiet.has_work() {
             quiet.run_round(&mut engine).unwrap();
         }
@@ -663,11 +848,252 @@ mod tests {
     }
 
     #[test]
+    fn engine_refusal_after_pop_terminates_and_frees_kv() {
+        // regression for the admit() session leak: the session is out
+        // of the queue and holding its KV reservation when the engine
+        // refuses it — the refusal must be a terminal Rejected and the
+        // blocks must come back, never a silent drop
+        let cfg = ServeConfig::default();
+        let mut engine = SimEngine::new(4).with_max_prompt(32);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 64], 1),
+                             sink.clone()));
+        sched.run_round(&mut engine).unwrap();
+        drop(sink);
+        assert_eq!(sched.metrics.requests_rejected, 1);
+        assert_eq!(sched.kv.used(), 0, "refused session must not hold kv");
+        assert!(!sched.has_work());
+        let events: Vec<Event> = rx.iter().collect();
+        assert_eq!(events.len(), 1, "exactly one (terminal) event");
+        match &events[0] {
+            Event::Rejected { id: 0, reason } => {
+                assert_eq!(reason.kind(), "engine-refused");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_sessions_are_errored_and_reconcile() {
+        // fail_all must land every live session on the terminal Errored
+        // state, bump requests_errored, release KV, and keep the
+        // accounting identity: done + rejected + cancelled + errored
+        // == submitted
+        // small budget: round 1 leaves two sessions mid-prefill and
+        // one still queued, so the failure hits every live phase
+        let cfg = ServeConfig {
+            max_batch_tokens: 64,
+            ..Default::default()
+        };
+        let mut engine = SimEngine::new(8);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        for i in 0..3 {
+            assert!(sched.submit(&engine,
+                                 Request::new(i, vec![7; 128], 4),
+                                 sink.clone()));
+        }
+        sched.run_round(&mut engine).unwrap();
+        assert!(sched.has_work(), "sessions must still be in flight");
+        sched.fail_all("engine died");
+        drop(sink);
+        assert_eq!(sched.metrics.requests_errored, 3);
+        assert_eq!(sched.kv.used(), 0, "failed sessions leaked kv");
+        assert!(!sched.has_work());
+        let m = &sched.metrics;
+        assert_eq!(m.requests_completed + m.requests_rejected
+                   + m.requests_cancelled + m.requests_errored, 3,
+                   "terminal accounting must reconcile with submissions");
+        let events: Vec<Event> = rx.iter().collect();
+        for id in 0..3u64 {
+            let terminals = events.iter()
+                .filter(|e| e.id() == id && e.is_terminal())
+                .count();
+            assert_eq!(terminals, 1, "session {id}: exactly one terminal");
+        }
+        assert!(sched.metrics.report()
+                    .contains("3 errored"),
+                "errored count must surface in the report");
+    }
+
+    #[test]
+    fn queue_depth_shed_spares_interactive_class() {
+        let mut cfg = ServeConfig {
+            max_batch_requests: 1,
+            ..Default::default()
+        };
+        cfg.admission.enabled = true;
+        cfg.admission.max_queue_depth = 2;
+        cfg.admission.interactive_max_tokens = 16;
+        let engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        // two batch-class requests fill the soft depth limit
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 64], 1),
+                             sink.clone()));
+        assert!(sched.submit(&engine, Request::new(1, vec![7; 64], 1),
+                             sink.clone()));
+        // third batch request is shed early with QueueDepth...
+        assert!(!sched.submit(&engine, Request::new(2, vec![7; 64], 1),
+                              sink.clone()));
+        // ...but an interactive request may still use the full queue
+        assert!(sched.submit(&engine, Request::new(3, vec![7; 8], 1),
+                             sink.clone()));
+        drop(sink);
+        assert_eq!(sched.metrics.shed_queue_depth, 1);
+        assert_eq!(sched.metrics.requests_rejected, 1);
+        assert_eq!(sched.pending(), 3);
+        let shed: Vec<Event> = rx.iter().collect();
+        assert_eq!(shed.len(), 1);
+        match &shed[0] {
+            Event::Rejected { id: 2, reason } => {
+                assert_eq!(reason.kind(), "queue-depth");
+                assert!(reason.is_transient());
+            }
+            other => panic!("expected QueueDepth reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kv_headroom_shed_counts_queued_demand() {
+        let mut cfg = ServeConfig {
+            kv_blocks: 32,
+            decode_tokens: 0,
+            ..Default::default()
+        };
+        cfg.admission.enabled = true;
+        cfg.admission.kv_overcommit = 1.0;
+        let engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        // each 256-token prompt wants 256/BLOCK_SIZE(=64) * 4 layers =
+        // 16 of the 32 blocks — two fit exactly under overcommit 1.0
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 256], 0),
+                             EventSink::null()));
+        assert!(sched.submit(&engine, Request::new(1, vec![7; 256], 0),
+                             EventSink::null()));
+        // the third exceeds held(0) + queued(32) + need(16) > 32
+        let (sink, rx) = EventSink::channel();
+        assert!(!sched.submit(&engine, Request::new(2, vec![7; 256], 0),
+                              sink.clone()));
+        drop(sink);
+        assert_eq!(sched.metrics.shed_kv_headroom, 1);
+        let shed: Vec<Event> = rx.iter().collect();
+        match &shed[0] {
+            Event::Rejected { id: 2, reason } => {
+                assert_eq!(reason.kind(), "kv-headroom");
+            }
+            other => panic!("expected KvHeadroom reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_shed_rejects_stale_queued_sessions() {
+        // session 0 needs 4 rounds of prefill (budget 16, chunk cost
+        // 16); session 1 is stuck behind max_batch_requests = 1 and
+        // must be shed once it has waited past the 2-round deadline
+        let mut cfg = ServeConfig {
+            max_batch_tokens: 16,
+            max_batch_requests: 1,
+            chunk_layers: 1,
+            ..Default::default()
+        };
+        cfg.admission.enabled = true;
+        cfg.admission.max_queue_rounds = 2;
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 64], 1),
+                             sink.clone()));
+        assert!(sched.submit(&engine, Request::new(1, vec![7; 64], 1),
+                             sink.clone()));
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        drop(sink);
+        assert_eq!(sched.metrics.requests_completed, 1);
+        assert_eq!(sched.metrics.shed_deadline, 1);
+        assert_eq!(sched.kv.used(), 0);
+        let events: Vec<Event> = rx.iter().collect();
+        let reason = events.iter().find_map(|e| match e {
+            Event::Rejected { id: 1, reason } => Some(reason.clone()),
+            _ => None,
+        }).expect("session 1 must be shed");
+        assert_eq!(reason.kind(), "deadline");
+        assert!(format!("{reason}").contains("deadline"));
+    }
+
+    #[test]
+    fn interactive_class_overtakes_queued_batch_work() {
+        let mut cfg = ServeConfig {
+            max_batch_requests: 1,
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        cfg.admission.enabled = true;
+        cfg.admission.interactive_max_tokens = 16;
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        let (sink, rx) = EventSink::channel();
+        // two batch prompts queue up, then an interactive one arrives
+        assert!(sched.submit(&engine, Request::new(0, vec![7; 256], 1),
+                             sink.clone()));
+        assert!(sched.submit(&engine, Request::new(1, vec![7; 256], 1),
+                             sink.clone()));
+        assert!(sched.submit(&engine, Request::new(2, vec![7; 8], 1),
+                             sink.clone()));
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        drop(sink);
+        let done_order: Vec<u64> = rx.iter().filter_map(|e| match e {
+            Event::Done { id, .. } => Some(id),
+            _ => None,
+        }).collect();
+        assert_eq!(done_order, vec![0, 2, 1],
+                   "interactive request must overtake queued batch work");
+        // per-class TTFT histograms both populated
+        assert_eq!(sched.metrics.interactive_ttft_us.count(), 1);
+        assert_eq!(sched.metrics.batch_ttft_us.count(), 2);
+    }
+
+    #[test]
+    fn degradation_ladder_engages_under_queue_pressure() {
+        let mut cfg = ServeConfig {
+            max_batch_tokens: 64,
+            max_batch_requests: 2,
+            ..Default::default()
+        };
+        cfg.admission.enabled = true;
+        cfg.admission.degrade_queue_depth = 2;
+        cfg.admission.degraded_budget_pct = 50;
+        cfg.admission.degraded_max_prefills = 1;
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        for i in 0..6 {
+            assert!(sched.submit(&engine,
+                                 Request::new(i, vec![7; 64], 1),
+                                 EventSink::null()));
+        }
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert!(sched.metrics.degraded_rounds > 0,
+                "queue of 6 over threshold 2 must trigger degradation");
+        assert!(sched.metrics.degraded_rounds < sched.metrics.rounds,
+                "pressure must lift once the queue drains");
+        assert_eq!(sched.metrics.requests_completed, 6,
+                   "degraded rounds still complete everything");
+        assert_eq!(sched.kv.used(), 0);
+    }
+
+    #[test]
     fn round_occupancy_is_recorded() {
         let cfg = ServeConfig::default();
         let mut engine = SimEngine::new(4);
         let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
-        sched.submit(Request::new(0, vec![7; 64], 2), EventSink::null());
+        sched.submit(&engine, Request::new(0, vec![7; 64], 2),
+                     EventSink::null());
         while sched.has_work() {
             sched.run_round(&mut engine).unwrap();
         }

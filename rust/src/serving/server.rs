@@ -117,7 +117,7 @@ where
                 };
                 match cmd {
                     Command::Submit(r, sink) => {
-                        sched.submit(r, sink);
+                        sched.submit(&engine, r, sink);
                     }
                     Command::Cancel(id) => {
                         sched.cancel(id);

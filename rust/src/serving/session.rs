@@ -24,6 +24,9 @@ pub enum SessionState {
     Done,
     Cancelled,
     Rejected,
+    /// Terminal: the engine failed while serving this session (the
+    /// stream got an `Error` event).
+    Errored,
 }
 
 /// Why a session was refused admission (carried by the terminal
@@ -42,6 +45,19 @@ pub enum RejectReason {
     /// The engine refused the prompt at `begin_prefill` (e.g. it
     /// exceeds the largest compiled seq bucket).
     EngineRefused { message: String },
+    /// Admission control shed the request at submit: the queue is
+    /// deeper than `serve.admission.max_queue_depth` (early back-
+    /// pressure well before the hard `QueueFull` wall).
+    QueueDepth { depth: usize, limit: usize },
+    /// Admission control shed the request at submit: its whole-lifetime
+    /// KV reservation would push committed demand (held + queued) past
+    /// the configured overcommit headroom.
+    KvHeadroom { blocks_needed: usize, committed: usize,
+                 capacity: usize },
+    /// The request waited in the admission queue longer than its
+    /// deadline (`serve.admission.max_queue_rounds` scheduler rounds)
+    /// and was shed rather than served uselessly late.
+    DeadlineExceeded { waited_rounds: u64, limit_rounds: u64 },
 }
 
 impl RejectReason {
@@ -52,6 +68,9 @@ impl RejectReason {
             RejectReason::EmptyPrompt => "empty-prompt",
             RejectReason::KvExhausted { .. } => "kv-exhausted",
             RejectReason::EngineRefused { .. } => "engine-refused",
+            RejectReason::QueueDepth { .. } => "queue-depth",
+            RejectReason::KvHeadroom { .. } => "kv-headroom",
+            RejectReason::DeadlineExceeded { .. } => "deadline",
         }
     }
 
@@ -59,7 +78,10 @@ impl RejectReason {
     /// request later may succeed.
     pub fn is_transient(&self) -> bool {
         matches!(self,
-                 RejectReason::QueueFull | RejectReason::KvExhausted { .. })
+                 RejectReason::QueueFull | RejectReason::KvExhausted { .. }
+                 | RejectReason::QueueDepth { .. }
+                 | RejectReason::KvHeadroom { .. }
+                 | RejectReason::DeadlineExceeded { .. })
     }
 }
 
@@ -74,6 +96,21 @@ impl fmt::Display for RejectReason {
             }
             RejectReason::EngineRefused { message } => {
                 write!(f, "{message}")
+            }
+            RejectReason::QueueDepth { depth, limit } => {
+                write!(f, "admission queue depth {depth} over the \
+                           {limit}-deep admission limit")
+            }
+            RejectReason::KvHeadroom { blocks_needed, committed,
+                                       capacity } => {
+                write!(f, "kv headroom exhausted: {blocks_needed} blocks \
+                           on top of {committed} committed exceeds the \
+                           {capacity}-block overcommit ceiling")
+            }
+            RejectReason::DeadlineExceeded { waited_rounds,
+                                             limit_rounds } => {
+                write!(f, "queued {waited_rounds} rounds, past the \
+                           {limit_rounds}-round deadline")
             }
         }
     }
@@ -267,6 +304,34 @@ mod tests {
         assert!(!RejectReason::EmptyPrompt.is_transient());
         assert_ne!(kv.kind(), RejectReason::EmptyPrompt.kind());
         assert!(format!("{kv}").contains("4 blocks"));
+    }
+
+    #[test]
+    fn admission_reject_reasons_are_transient_and_distinct() {
+        let depth = RejectReason::QueueDepth { depth: 9, limit: 8 };
+        let head = RejectReason::KvHeadroom {
+            blocks_needed: 12, committed: 120, capacity: 128,
+        };
+        let late = RejectReason::DeadlineExceeded {
+            waited_rounds: 33, limit_rounds: 32,
+        };
+        assert_eq!(depth.kind(), "queue-depth");
+        assert_eq!(head.kind(), "kv-headroom");
+        assert_eq!(late.kind(), "deadline");
+        // admission sheds are back-pressure, not client errors: all
+        // three clear on their own once load subsides
+        assert!(depth.is_transient());
+        assert!(head.is_transient());
+        assert!(late.is_transient());
+        let kinds = [depth.kind(), head.kind(), late.kind(),
+                     RejectReason::QueueFull.kind()];
+        let mut dedup = kinds.to_vec();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), kinds.len(), "kinds must be distinct");
+        assert!(format!("{depth}").contains("depth 9"));
+        assert!(format!("{head}").contains("12 blocks"));
+        assert!(format!("{late}").contains("33 rounds"));
     }
 
     #[test]

@@ -30,6 +30,13 @@ const SIM_SERIAL_PCT: u64 = 20;
 /// only; SimEngine has no real heads).
 const SIM_HEADS: usize = 8;
 
+/// Fraction (percent) of normal per-chunk compute a prefill planned
+/// under overload pressure pays: the scheduler's degradation ladder
+/// tightens the sparse budget γ FlexPrefill-style, so pressured
+/// prefills select (and compute) fewer blocks.  Snapshotted at
+/// `begin_prefill`, like γ in the real engine.
+const SIM_DEGRADED_COST_PCT: u64 = 60;
+
 pub struct SimEngine {
     layers: usize,
     /// Prompts longer than this fail `begin_prefill`, mimicking the real
@@ -57,6 +64,9 @@ pub struct SimEngine {
     /// feed.  Bounded by the number of distinct buckets even if never
     /// drained; always empty with the cache off.
     fresh_buckets: Vec<usize>,
+    /// Overload signal from the scheduler's degradation ladder
+    /// ([`EngineCore::set_pressure`]); false outside degraded rounds.
+    pressured: bool,
 }
 
 pub struct SimPrefill {
@@ -65,6 +75,9 @@ pub struct SimPrefill {
     layers_total: usize,
     /// Snapshotted at `begin_prefill`: this bucket was already served.
     warm: bool,
+    /// Snapshotted at `begin_prefill`: planned under overload pressure
+    /// (tightened γ — cheaper chunks, fewer blocks computed).
+    degraded: bool,
     /// Wall-clock µs actually spent spinning in `prefill_chunk`.
     spent_us: u64,
 }
@@ -86,6 +99,7 @@ impl SimEngine {
             warm_buckets: None,
             workers: 1,
             fresh_buckets: Vec::new(),
+            pressured: false,
         }
     }
 
@@ -142,6 +156,7 @@ impl EngineCore for SimEngine {
             layers_done: 0,
             layers_total: self.layers,
             warm,
+            degraded: self.pressured,
             spent_us: 0,
         })
     }
@@ -157,6 +172,9 @@ impl EngineCore for SimEngine {
                 * self.ns_per_token_layer;
             if t.warm {
                 ns = ns * SIM_WARM_COST_PCT / 100;
+            }
+            if t.degraded {
+                ns = ns * SIM_DEGRADED_COST_PCT / 100;
             }
             // Amdahl over the per-head fraction: workers shard the
             // parallel share, the serial share is untouched
@@ -191,14 +209,21 @@ impl EngineCore for SimEngine {
             }
         }
         let workers = self.workers as usize;
+        let base_computed = if t.warm {
+            causal.div_ceil(4)
+        } else {
+            causal.div_ceil(2)
+        };
         let stats = PrefillStats {
             latency_us: 1 + t.spent_us,
             // warm prefills skip the pivotal bootstrap heads, so fewer
-            // causal blocks are computed than on the cold path
-            blocks_computed: if t.warm {
-                causal.div_ceil(4)
+            // causal blocks are computed than on the cold path; a
+            // degraded (pressure-tightened γ) prefill selects fewer
+            // blocks still
+            blocks_computed: if t.degraded {
+                (base_computed * 2).div_ceil(3)
             } else {
-                causal.div_ceil(2)
+                base_computed
             },
             blocks_total: causal,
             shared: t.layers_total,
@@ -264,6 +289,10 @@ impl EngineCore for SimEngine {
         if let Some(w) = self.warm_buckets.as_mut() {
             w.insert(export.seq);
         }
+    }
+
+    fn set_pressure(&mut self, pressured: bool) {
+        self.pressured = pressured;
     }
 }
 
@@ -428,6 +457,28 @@ mod tests {
         });
         let cold = off.take_pattern_exports();
         assert!(cold.is_empty());
+    }
+
+    #[test]
+    fn pressure_snapshot_degrades_cost_and_blocks() {
+        // pressure is snapshotted at begin_prefill (like γ in the real
+        // engine): a prefill planned under pressure computes fewer
+        // blocks and spends less simulated compute; releasing pressure
+        // restores the exact baseline behavior
+        let mut e = SimEngine::new(4).with_work(2_000);
+        let normal = run_one(&mut e, 256);
+        e.set_pressure(true);
+        let degraded = run_one(&mut e, 256);
+        assert!(degraded.blocks_computed < normal.blocks_computed,
+                "tightened γ must select fewer blocks");
+        assert_eq!(degraded.blocks_total, normal.blocks_total);
+        assert!(degraded.latency_us < normal.latency_us,
+                "degraded {} !< normal {}",
+                degraded.latency_us, normal.latency_us);
+        e.set_pressure(false);
+        let after = run_one(&mut e, 256);
+        assert_eq!(after.blocks_computed, normal.blocks_computed,
+                   "pressure released: exact behavior restored");
     }
 
     #[test]

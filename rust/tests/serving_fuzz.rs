@@ -107,6 +107,59 @@ fn gen_config(rng: &mut Rng, max_prefills: usize) -> ServeConfig {
     }
 }
 
+/// Adversarial overload config: the serve.admission.* knobs switched
+/// on with randomized thresholds, so sheds (queue-depth, kv-headroom,
+/// deadline), class priority, and the degradation ladder all fire
+/// somewhere in the matrix.
+fn gen_admission_config(rng: &mut Rng) -> ServeConfig {
+    let mut cfg = ServeConfig {
+        max_batch_tokens: *rng.choose(&[64usize, 512]),
+        max_batch_requests: *rng.choose(&[2usize, 8]),
+        queue_capacity: *rng.choose(&[4usize, 16, 256]),
+        decode_tokens: 1 + rng.below(3),
+        kv_blocks: *rng.choose(&[64usize, 256, 1024]),
+        chunk_layers: 1 + rng.below(2),
+        max_concurrent_prefills: 1 + rng.below(3),
+        ..Default::default()
+    };
+    cfg.admission.enabled = true;
+    cfg.admission.max_queue_depth = *rng.choose(&[0usize, 2, 8]);
+    cfg.admission.kv_overcommit = *rng.choose(&[0.0f64, 1.0, 2.0]);
+    cfg.admission.max_queue_rounds = *rng.choose(&[0usize, 4, 32]);
+    cfg.admission.interactive_max_tokens = *rng.choose(&[0usize, 32]);
+    cfg.admission.degrade_queue_depth = *rng.choose(&[0usize, 3]);
+    cfg.admission.degraded_budget_pct = *rng.choose(&[50usize, 100]);
+    cfg.admission.degraded_max_prefills = rng.below(2);
+    cfg
+}
+
+/// Open-loop bursts: volleys of back-to-back submissions (no rounds in
+/// between — arrivals don't wait for service) separated by a few
+/// scheduling rounds, the arrival shape that drives queues deep enough
+/// to make every admission path fire.
+fn gen_burst_script(rng: &mut Rng, bursts: usize) -> Vec<Op> {
+    let mut script = Vec::new();
+    for _ in 0..bursts {
+        for _ in 0..4 + rng.below(12) {
+            script.push(Op::Submit {
+                len: match rng.below(10) {
+                    0 => 0,
+                    1 => MAX_PROMPT + 1 + rng.below(64),
+                    // bias short: interactive-class arrivals dominate
+                    _ if rng.below(2) == 0 => 1 + rng.below(32),
+                    _ => 1 + rng.below(MAX_PROMPT),
+                },
+                max_new: rng.below(4),
+            });
+        }
+        if rng.below(4) == 0 {
+            script.push(Op::Cancel { nth: rng.below(64) });
+        }
+        script.push(Op::Rounds(1 + rng.below(4)));
+    }
+    script
+}
+
 /// Order/content signature of an event, excluding timing and prefill
 /// stats (which legitimately differ warm vs cold).
 fn sig(e: &Event) -> String {
@@ -153,7 +206,8 @@ fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool,
             Op::Submit { len, max_new } => {
                 let id = next_id;
                 next_id += 1;
-                sched.submit(Request::new(id, vec![1; *len], *max_new),
+                sched.submit(&engine,
+                             Request::new(id, vec![1; *len], *max_new),
                              sink.clone());
             }
             Op::Cancel { nth } => {
@@ -194,7 +248,8 @@ fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool,
     }
     let accounted = sched.metrics.requests_completed
         + sched.metrics.requests_rejected
-        + sched.metrics.requests_cancelled;
+        + sched.metrics.requests_cancelled
+        + sched.metrics.requests_errored;
     assert_eq!(accounted, next_id,
                "request accounting does not add up");
     RunOutcome { events, submitted: next_id }
@@ -260,6 +315,87 @@ fn fuzz_scheduler_interleavings() {
     }
     eprintln!("[fuzz] scheduler interleavings: {cases} cases, \
                {sessions} sessions in {:?}", t0.elapsed());
+}
+
+/// Bursty open-loop flood with the admission knobs live, direct
+/// scheduler drive plus the threaded fleet front door at shards ∈
+/// {1, 2}.  `run_script` asserts the per-run invariants (exactly one
+/// terminal per session ending its stream, zero KV blocks after drain,
+/// done + rejected + cancelled + errored == submitted); the fleet leg
+/// re-checks the terminal-event invariant across threads and parses
+/// the aggregate report to reconcile the same accounting identity.
+#[test]
+fn fuzz_bursty_flood_under_admission_control() {
+    let t0 = Instant::now();
+    let base = fuzz_seed();
+    let mut cases = 0usize;
+    let mut shed = 0u64;
+    for &shards in &[1usize, 2] {
+        for case in 0..3u64 {
+            let mut rng =
+                Rng::new(base ^ 0xF100D ^ ((shards as u64) << 40) ^ case);
+            let cfg = gen_admission_config(&mut rng);
+            let script = gen_burst_script(&mut rng, 4);
+            // direct drive: the strict invariants live in run_script
+            let out = run_script(&script, &cfg, false, 1);
+            for e in &out.events {
+                if let Event::Rejected { reason, .. } = e {
+                    assert!(["queue-full", "empty-prompt", "kv-exhausted",
+                             "engine-refused", "queue-depth",
+                             "kv-headroom", "deadline"]
+                                .contains(&reason.kind()),
+                            "unstructured shed reason: {reason:?}");
+                    shed += 1;
+                }
+            }
+            // threaded leg: same flood through the fleet front door
+            let mut fleet = spawn_fleet(shards, {
+                let cfg = cfg.clone();
+                move |_| Ok((Scheduler::new(&cfg),
+                             SimEngine::new(LAYERS)
+                                 .with_max_prompt(MAX_PROMPT)))
+            });
+            let sessions: Vec<_> = script.iter()
+                .filter_map(|op| match op {
+                    Op::Submit { len, max_new } => {
+                        Some(fleet.submit(vec![1; *len], *max_new))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let submitted = sessions.len() as u64;
+            let report = fleet.shutdown();
+            for s in sessions {
+                let id = s.id;
+                let events = s.collect();
+                let last = events.last().unwrap_or_else(
+                    || panic!("session {id}: empty stream"));
+                assert!(last.is_terminal(),
+                        "session {id}: stream ended without a terminal");
+                assert_eq!(
+                    events.iter().filter(|e| e.is_terminal()).count(), 1,
+                    "session {id}: exactly one terminal event");
+            }
+            // reconcile the aggregate report's requests line
+            let line = report.lines()
+                .find(|l| l.trim_start().starts_with("requests:"))
+                .unwrap_or_else(|| panic!("no requests line: {report}"));
+            let counts: Vec<u64> = line
+                .split(|c: char| !c.is_ascii_digit())
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            assert_eq!(counts.len(), 4, "bad requests line: {line}");
+            assert_eq!(counts.iter().sum::<u64>(), submitted,
+                       "shards {shards}, case {case}: report accounting \
+                        does not reconcile with {submitted} submissions: \
+                        {line}");
+            cases += 1;
+        }
+    }
+    assert!(shed > 0, "flood matrix never exercised a structured shed");
+    eprintln!("[fuzz] bursty admission flood: {cases} cases, \
+               {shed} sheds in {:?}", t0.elapsed());
 }
 
 /// Thread-level fuzz over the server front-end: random submit / cancel
