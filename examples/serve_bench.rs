@@ -6,7 +6,7 @@
 //! EXPERIMENTS.md; CI's `bench-smoke` job runs the deterministic
 //! SimEngine scenarios and archives the machine-readable trajectory.
 //!
-//! Six scenarios:
+//! Seven scenarios:
 //!
 //! 1. **Per-method uniform stream** (needs `make artifacts`): the real
 //!    engine under concurrent equal-length prompts.  Skipped with
@@ -42,8 +42,16 @@
 //!    admitted interactive p99 TTFT stays bounded, sheds are fast and
 //!    structured, and completed + rejected == submitted.
 //!
+//! 7. **Prompt template, prefix-sharing KV cache** (artifact-free):
+//!    every request opens with the same long system-prompt template
+//!    and ends in a short unique tail, served with
+//!    `serve.prefix_cache` off vs on — warm requests adopt the
+//!    template's cached KV blocks and prefill only the tail, so warm
+//!    TTFT collapses versus cold (asserted, with nonzero block reuse;
+//!    CI fails if warm prefill is not strictly below cold).
+//!
 //!   cargo run --release --example serve_bench -- \
-//!       [requests] [ctx] [--sim-only] [--json BENCH_9.json]
+//!       [requests] [ctx] [--sim-only] [--json BENCH_10.json]
 //!
 //! `--json` writes one row per SimEngine scenario (name, tokens/s,
 //! TTFT p50/p95, mean prefill ms, cache hit rate) for the CI artifact.
@@ -81,6 +89,8 @@ struct SessionOutcome {
     cache_hits: usize,
     cache_misses: usize,
     cache_rejected: usize,
+    prefix_blocks_reused: usize,
+    prefix_tokens_skipped: usize,
 }
 
 /// Drain a session's events into the numbers the scenarios report
@@ -94,6 +104,8 @@ fn drain_session(s: shareprefill::serving::SessionHandle)
         cache_hits: 0,
         cache_misses: 0,
         cache_rejected: 0,
+        prefix_blocks_reused: 0,
+        prefix_tokens_skipped: 0,
     };
     let mut done = false;
     for e in s.collect() {
@@ -102,6 +114,8 @@ fn drain_session(s: shareprefill::serving::SessionHandle)
                 out.cache_hits += stats.cache_hits;
                 out.cache_misses += stats.cache_misses;
                 out.cache_rejected += stats.cache_rejected;
+                out.prefix_blocks_reused += stats.prefix_blocks_reused;
+                out.prefix_tokens_skipped += stats.prefix_tokens_skipped;
             }
             Event::Done { response, .. } => {
                 out.ttft_ms = response.ttft_us as f64 / 1e3;
@@ -264,6 +278,108 @@ fn pattern_cache_scenario() -> Vec<ScenarioRow> {
     };
     vec![row("pattern_cache_off", &off, wall_off),
          row("pattern_cache_on", &on, wall_on)]
+}
+
+/// Prompt-template prefix sharing: every request opens with the same
+/// `TEMPLATE_TOKENS`-token system prompt and ends in a short unique
+/// tail, served with `serve.prefix_cache` off vs on (SimEngine with
+/// simulated compute, serial submits so each request after the first
+/// finds the template's blocks cached).  Asserts the PR's headline:
+/// warm prefill strictly below cold, with nonzero block reuse.
+fn prefix_cache_scenario() -> Vec<ScenarioRow> {
+    const TEMPLATE_TOKENS: usize = 2048;
+    const TAIL_TOKENS: usize = 128;
+    const REPEATS: usize = 8;
+    const LAYERS: usize = 8;
+    const NS_PER_TOKEN_LAYER: u64 = 1_000;
+
+    let prompt = |i: usize| -> Vec<i32> {
+        let mut p = vec![7i32; TEMPLATE_TOKENS];
+        p.resize(TEMPLATE_TOKENS + TAIL_TOKENS, 100 + i as i32);
+        p
+    };
+    let run = |prefix_on: bool| {
+        let cfg = ServeConfig {
+            max_batch_tokens: 4096,
+            chunk_layers: 1,
+            decode_tokens: 2,
+            kv_blocks: 4096,
+            max_concurrent_prefills: 1,
+            prefix_cache: shareprefill::config::PrefixCacheConfig {
+                enabled: prefix_on,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let handle = server::spawn(move || {
+            Ok((Scheduler::new(&cfg),
+                SimEngine::new(LAYERS).with_work(NS_PER_TOKEN_LAYER)))
+        });
+        let mut outcomes = Vec::new();
+        for i in 0..REPEATS {
+            // serial submits: each waits, so repeats always run warm
+            if let Some(o) = drain_session(handle.submit(prompt(i), 2)) {
+                outcomes.push(o);
+            }
+        }
+        let report = handle.shutdown();
+        (outcomes, report, t0.elapsed().as_secs_f64())
+    };
+
+    println!("== prefix-sharing KV cache, prompt template \
+              ({TEMPLATE_TOKENS} tok template + {TAIL_TOKENS} tok tail \
+              x{REPEATS}) ==");
+    let (off, _, wall_off) = run(false);
+    let (on, report, wall_on) = run(true);
+    let cold_mean = mean(&off.iter()
+        .map(|o| o.prefill_ms)
+        .collect::<Vec<_>>());
+    let warm: Vec<f64> =
+        on.iter().skip(1).map(|o| o.prefill_ms).collect();
+    let warm_mean = mean(&warm);
+    let reused: usize =
+        on.iter().map(|o| o.prefix_blocks_reused).sum();
+    let skipped: usize =
+        on.iter().map(|o| o.prefix_tokens_skipped).sum();
+    println!("prefix off: prefill mean {cold_mean:8.2} ms");
+    println!("prefix on:  warm prefill mean {warm_mean:8.2} ms \
+              ({:.2}x faster), {reused} blocks reused, {skipped} \
+              prompt tokens skipped", cold_mean / warm_mean);
+    println!("{report}\n");
+    // the PR's headline, asserted so CI fails on a regression: warm
+    // template requests must reuse cached blocks and prefill strictly
+    // faster than the cold/off baseline
+    assert!(reused > 0,
+            "warm template requests must adopt cached KV blocks");
+    assert!(warm_mean < cold_mean,
+            "warm prefix prefill must be strictly below cold \
+             ({warm_mean:.2} ms !< {cold_mean:.2} ms)");
+    let row = |name: &str, outcomes: &[SessionOutcome], wall: f64,
+               reused: usize, skipped: usize| {
+        let mut ttft = Summary::new();
+        for o in outcomes {
+            ttft.add(o.ttft_ms);
+        }
+        ScenarioRow {
+            name: name.to_string(),
+            tokens_per_s: (outcomes.len()
+                           * (TEMPLATE_TOKENS + TAIL_TOKENS)) as f64
+                / wall,
+            ttft_p50_ms: ttft.p50(),
+            ttft_p95_ms: ttft.percentile(95.0),
+            prefill_ms_mean: mean(&outcomes.iter()
+                .map(|o| o.prefill_ms)
+                .collect::<Vec<_>>()),
+            cache_hit_rate: 0.0,
+            extras: vec![
+                ("prefix_blocks_reused", reused as f64),
+                ("prefix_tokens_skipped", skipped as f64),
+            ],
+        }
+    };
+    vec![row("prefix_cache_off", &off, wall_off, 0, 0),
+         row("prefix_cache_on", &on, wall_on, reused, skipped)]
 }
 
 /// Worker scaling: the identical prompt stream at `serve.workers`
@@ -781,13 +897,13 @@ fn real_engine_scenario(n: usize, ctx: usize) {
     }
 }
 
-/// Render the rows as the `BENCH_9.json` artifact (no JSON serializer
+/// Render the rows as the `BENCH_10.json` artifact (no JSON serializer
 /// in the offline vendor set; the schema is flat enough to emit by
 /// hand).  Non-finite values are clamped to 0 so the output always
 /// parses.
 fn render_json(rows: &[ScenarioRow]) -> String {
     let fin = |x: f64| if x.is_finite() { x } else { 0.0 };
-    let mut s = String::from("{\n  \"pr\": 9,\n  \"scenarios\": [\n");
+    let mut s = String::from("{\n  \"pr\": 10,\n  \"scenarios\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"tokens_per_s\": {:.3}, \
@@ -841,6 +957,9 @@ fn main() -> anyhow::Result<()> {
     // the amortization headline: warm-cache prefill cost on a repeated
     // workload vs the cold/cache-off baseline
     rows.extend(pattern_cache_scenario());
+    // the prefix-sharing headline: shared prompt template served off
+    // cached KV blocks -> warm TTFT collapse (asserted inside)
+    rows.extend(prefix_cache_scenario());
     // the scaling headline: same work, more hardware -> strictly less
     // simulated prefill time (asserted inside)
     rows.extend(worker_scaling_scenario());

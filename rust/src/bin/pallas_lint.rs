@@ -24,6 +24,9 @@ OPTIONS
                       (default: ./lint_baseline.toml if present)
   --design FILE       DESIGN.md for the knob-doc half of knob-hygiene
                       (default: ./DESIGN.md if present)
+  --ops FILE          operator's handbook for the knob-table half of
+                      knob-hygiene
+                      (default: ./docs/OPERATIONS.md if present)
   --write-baseline    freeze the observed hot-path panic counts into
                       the baseline file instead of comparing
 
@@ -50,6 +53,7 @@ fn run() -> Result<bool> {
     let mut root: Option<PathBuf> = None;
     let mut baseline_path: Option<PathBuf> = None;
     let mut design_path: Option<PathBuf> = None;
+    let mut ops_path: Option<PathBuf> = None;
     let mut write = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -64,6 +68,10 @@ fn run() -> Result<bool> {
             "--design" => {
                 design_path =
                     Some(PathBuf::from(next_arg(&mut args, "--design")?));
+            }
+            "--ops" => {
+                ops_path =
+                    Some(PathBuf::from(next_arg(&mut args, "--ops")?));
             }
             "--write-baseline" => write = true,
             "--help" | "-h" => {
@@ -94,6 +102,10 @@ fn run() -> Result<bool> {
         let p = PathBuf::from("DESIGN.md");
         p.is_file().then_some(p)
     });
+    let ops_path = ops_path.or_else(|| {
+        let p = PathBuf::from("docs/OPERATIONS.md");
+        p.is_file().then_some(p)
+    });
     let design_text = match &design_path {
         Some(p) => Some(std::fs::read_to_string(p)?),
         None => {
@@ -102,9 +114,18 @@ fn run() -> Result<bool> {
             None
         }
     };
+    let ops_text = match &ops_path {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => {
+            eprintln!("pallas-lint: note: no docs/OPERATIONS.md — \
+                       operator knob-table check skipped");
+            None
+        }
+    };
 
     if write {
-        let report = lint::check_tree(&root, None, design_text.as_deref())?;
+        let report = lint::check_tree(&root, None, design_text.as_deref(),
+                                      ops_text.as_deref())?;
         let path = baseline_path
             .unwrap_or_else(|| PathBuf::from("lint_baseline.toml"));
         std::fs::write(&path, baseline::render(&report.panic_counts))?;
@@ -125,7 +146,8 @@ fn run() -> Result<bool> {
         }
     };
     let report = lint::check_tree(&root, Some(&base),
-                                  design_text.as_deref())?;
+                                  design_text.as_deref(),
+                                  ops_text.as_deref())?;
     for d in &report.diagnostics {
         println!("{d}");
     }

@@ -31,6 +31,7 @@ SUBCOMMANDS
             [--queue-capacity N] [--pattern-cache]
             [--pattern-cache-capacity N] [--pattern-cache-validation T]
             [--pattern-cache-max-age N]
+            [--prefix-cache] [--prefix-cache-capacity N]
             [--admission-enabled] [--admission-max-queue-depth N]
             [--admission-kv-overcommit F] [--admission-max-queue-rounds N]
             [--admission-interactive-max-tokens N]
@@ -56,7 +57,7 @@ COMMON  --artifacts DIR   (default: artifacts)
 pub fn run_cli() -> Result<()> {
     let args = Args::from_env(&["help", "verbose", "similarity",
                                 "distribution", "pattern-cache",
-                                "admission-enabled"])?;
+                                "prefix-cache", "admission-enabled"])?;
     if args.flag("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return Ok(());
@@ -102,11 +103,13 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         .spawn_fleet();
     println!("serving {n} requests @ ctx {ctx}, model {model}, method {} \
               ({} layer(s)/prefill chunk, {} concurrent prefill(s), \
-              {} worker(s), {} shard(s), pattern cache {})",
+              {} worker(s), {} shard(s), pattern cache {}, prefix \
+              cache {})",
              cfg.method.kind.name(), cfg.serve.chunk_layers,
              cfg.serve.max_concurrent_prefills, cfg.serve.workers,
              handle.shard_count(),
-             if cfg.serve.pattern_cache.enabled { "on" } else { "off" });
+             if cfg.serve.pattern_cache.enabled { "on" } else { "off" },
+             if cfg.serve.prefix_cache.enabled { "on" } else { "off" });
     let sessions: Vec<_> = (0..n)
         .map(|_| handle.submit(tasks::latency_prompt(ctx),
                                cfg.serve.decode_tokens))

@@ -121,6 +121,32 @@ impl Default for PatternCacheConfig {
     }
 }
 
+/// Prefix-sharing KV cache knobs (`serve.prefix_cache` in TOML).
+///
+/// The cache reuses *KV blocks* across requests: completed prefills
+/// publish their full prompt chunks under a chained content hash, warm
+/// requests retain the longest matched prefix and start prefill at the
+/// first divergent chunk (copy-on-write on the allocator keeps shared
+/// blocks immutable).  Off by default: with `enabled = false` the
+/// serving stack is bit-identical to a build without the index.
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// Master switch; false = never consult or populate the index.
+    pub enabled: bool,
+    /// Max cached chunk entries in the prefix index (LRU eviction;
+    /// each entry pins one KV block per layer until evicted).
+    pub capacity: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig {
+            enabled: false,
+            capacity: 512,
+        }
+    }
+}
+
 /// SLO-aware admission control + overload degradation knobs
 /// (`serve.admission` in TOML).
 ///
@@ -222,6 +248,8 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Cross-request pivotal-pattern cache (SharePrefill only).
     pub pattern_cache: PatternCacheConfig,
+    /// Content-addressed prefix-sharing KV cache (method-agnostic).
+    pub prefix_cache: PrefixCacheConfig,
     /// SLO-aware admission control + overload degradation.
     pub admission: AdmissionConfig,
 }
@@ -240,6 +268,7 @@ impl Default for ServeConfig {
             workers: 1,
             shards: 1,
             pattern_cache: PatternCacheConfig::default(),
+            prefix_cache: PrefixCacheConfig::default(),
             admission: AdmissionConfig::default(),
         }
     }
@@ -320,6 +349,10 @@ impl Config {
         pc.max_age =
             t.usize_or("serve.pattern_cache.max_age", pc.max_age as usize)
                 as u64;
+        let px = &mut self.serve.prefix_cache;
+        px.enabled = t.bool_or("serve.prefix_cache.enabled", px.enabled);
+        px.capacity =
+            t.usize_or("serve.prefix_cache.capacity", px.capacity);
         let ad = &mut self.serve.admission;
         ad.enabled = t.bool_or("serve.admission.enabled", ad.enabled);
         ad.max_queue_depth = t.usize_or("serve.admission.max_queue_depth",
@@ -393,6 +426,11 @@ impl Config {
         pc.max_age =
             args.usize_or("pattern-cache-max-age", pc.max_age as usize)?
                 as u64;
+        if args.flag("prefix-cache") {
+            self.serve.prefix_cache.enabled = true;
+        }
+        let px = &mut self.serve.prefix_cache;
+        px.capacity = args.usize_or("prefix-cache-capacity", px.capacity)?;
         if args.flag("admission-enabled") {
             self.serve.admission.enabled = true;
         }
@@ -524,6 +562,36 @@ mod tests {
     }
 
     #[test]
+    fn prefix_cache_defaults_off() {
+        // bit-identity contract: the index must be inert out of the box
+        let c = Config::default();
+        assert!(!c.serve.prefix_cache.enabled);
+        assert_eq!(c.serve.prefix_cache.capacity, 512);
+    }
+
+    #[test]
+    fn prefix_cache_toml_overrides() {
+        let t = tomlmini::parse(
+            "[serve.prefix_cache]\nenabled = true\ncapacity = 12\n")
+            .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&t).unwrap();
+        assert!(c.serve.prefix_cache.enabled);
+        assert_eq!(c.serve.prefix_cache.capacity, 12);
+    }
+
+    #[test]
+    fn prefix_cache_cli_overrides() {
+        let args = Args::parse(
+            ["x", "--prefix-cache", "--prefix-cache-capacity", "33"]
+                .map(String::from), &["prefix-cache"]).unwrap();
+        let mut c = Config::default();
+        c.apply_args(&args).unwrap();
+        assert!(c.serve.prefix_cache.enabled);
+        assert_eq!(c.serve.prefix_cache.capacity, 33);
+    }
+
+    #[test]
     fn cli_max_concurrent_prefills() {
         let args = Args::parse(
             ["x", "--max-concurrent-prefills", "1"]
@@ -571,6 +639,10 @@ capacity = 17
 validation = 0.6
 max_age = 9
 
+[serve.prefix_cache]
+enabled = true
+capacity = 41
+
 [serve.admission]
 enabled = true
 max_queue_depth = 11
@@ -602,6 +674,8 @@ degraded_max_prefills = 2
         assert_eq!(c.serve.pattern_cache.capacity, 17);
         assert!((c.serve.pattern_cache.validation - 0.6).abs() < 1e-12);
         assert_eq!(c.serve.pattern_cache.max_age, 9);
+        assert!(c.serve.prefix_cache.enabled);
+        assert_eq!(c.serve.prefix_cache.capacity, 41);
         assert!(c.serve.admission.enabled);
         assert_eq!(c.serve.admission.max_queue_depth, 11);
         assert!((c.serve.admission.kv_overcommit - 1.5).abs() < 1e-12);

@@ -5,8 +5,10 @@
 //! thread), the layering discipline (only `exec` spawns threads, the
 //! pattern engine never reaches into `serving`), the panic policy on
 //! the hot path, and the rule that every `serve.*` knob is reachable
-//! from the CLI and documented.  This module enforces them as a
-//! blocking CI gate (see DESIGN.md "Invariants & enforcement").
+//! from the CLI and documented — both in DESIGN.md's serve-knob table
+//! and in the operator's handbook (`docs/OPERATIONS.md`).  This module
+//! enforces them as a blocking CI gate (see DESIGN.md "Invariants &
+//! enforcement").
 //!
 //! Zero dependencies beyond the vendored `anyhow`: a space-blanking
 //! scrubber ([`scan`]), a sorted source walker ([`walker`]), the four
@@ -59,8 +61,12 @@ pub struct Report {
 /// * `design` — DESIGN.md contents for the knob-documentation half of
 ///   rule 4; `None` skips that half (the flag half still runs when
 ///   the tree has a `cli_main.rs`).
+/// * `ops` — docs/OPERATIONS.md contents for the operator-handbook
+///   half of rule 4 (every knob needs a row in the operator's knob
+///   table); `None` skips it.
 pub fn check_tree(root: &Path, base: Option<&Baseline>,
-                  design: Option<&str>) -> Result<Report> {
+                  design: Option<&str>, ops: Option<&str>)
+                  -> Result<Report> {
     let files = walker::rust_sources(root)?;
     let mut diagnostics = Vec::new();
     let mut panic_counts = BTreeMap::new();
@@ -170,6 +176,20 @@ pub fn check_tree(root: &Path, base: Option<&Baseline>,
                     message: format!(
                         "`{key}` is not mentioned in DESIGN.md — \
                          document the knob in the serve-knob table"),
+                });
+            }
+        }
+        if let Some(handbook) = ops {
+            if !handbook.contains(key.as_str()) {
+                diagnostics.push(Diagnostic {
+                    file: file.clone(),
+                    line,
+                    rule: rules::RULE_KNOBS,
+                    message: format!(
+                        "`{key}` has no row in docs/OPERATIONS.md — \
+                         every serve knob needs an entry in the \
+                         operator's knob table (name, flag, default, \
+                         when to turn it)"),
                 });
             }
         }

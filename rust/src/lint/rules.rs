@@ -7,7 +7,8 @@
 //!   layering        module-dependency allowlist
 //!   determinism     no order-bearing state inside fan_out closures
 //!   panic-hygiene   no unwrap/expect/panic! in the serving hot path
-//!   knob-hygiene    every serve.* key has a CLI flag + DESIGN.md doc
+//!   knob-hygiene    every serve.* key has a CLI flag + a DESIGN.md
+//!                   entry + a row in the docs/OPERATIONS.md knob table
 
 use super::scan::{self, Scrubbed};
 
@@ -230,11 +231,15 @@ pub fn serve_keys(sc: &Scrubbed) -> Vec<(usize, String)> {
 }
 
 /// CLI flag a `serve.*` key must be reachable through: strip the
-/// `serve.` prefix and map separators to `-`.  One irregular mapping:
-/// the cache master switch is the boolean `--pattern-cache`.
+/// `serve.` prefix and map separators to `-`.  Two irregular mappings:
+/// the cache master switches are the booleans `--pattern-cache` and
+/// `--prefix-cache`.
 pub fn flag_for(key: &str) -> String {
     if key == "serve.pattern_cache.enabled" {
         return "pattern-cache".to_string();
+    }
+    if key == "serve.prefix_cache.enabled" {
+        return "prefix-cache".to_string();
     }
     key.trim_start_matches("serve.").replace(['.', '_'], "-")
 }
@@ -352,6 +357,10 @@ mod tests {
                    "pattern-cache");
         assert_eq!(flag_for("serve.pattern_cache.max_age"),
                    "pattern-cache-max-age");
+        assert_eq!(flag_for("serve.prefix_cache.enabled"),
+                   "prefix-cache");
+        assert_eq!(flag_for("serve.prefix_cache.capacity"),
+                   "prefix-cache-capacity");
     }
 
     #[test]

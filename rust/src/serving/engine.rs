@@ -81,6 +81,13 @@ pub struct PrefillStats {
     pub cache_hits: usize,
     pub cache_misses: usize,
     pub cache_rejected: usize,
+    /// Prefix-cache involvement (zero when `serve.prefix_cache` is
+    /// off): KV blocks adopted from the shared prefix index instead of
+    /// being recomputed, and the prompt tokens those blocks covered —
+    /// prefill started at the first divergent chunk.  Stamped by the
+    /// scheduler at admission time, carried through `PrefillDone`.
+    pub prefix_blocks_reused: usize,
+    pub prefix_tokens_skipped: usize,
     /// Worker-pool usage during this prefill: fan-out rounds, items
     /// sharded across workers, and the summed busiest-shard item count
     /// per round (the critical path — `pool_items / (pool_span_items ×
@@ -118,6 +125,12 @@ pub struct PrefillTask {
     kv: Vec<(Tensor, Tensor)>,
     stats: PrefillStats,
     prof: StageProfiler,
+    /// First prompt token whose KV is *not* already covered by shared
+    /// prefix-cache blocks (0 = cold start).  Advisory for this
+    /// artifact-backed engine — it recomputes the full stack and the
+    /// scheduler keeps the retained blocks authoritative — but carried
+    /// so stats and sims agree on what was skipped.
+    start_offset: usize,
     /// This request's pattern state (SharePrefill's pivotal dictionary
     /// et al.) — request-scoped, so tasks of concurrent prompts can
     /// interleave on one engine without sharing patterns.
@@ -136,6 +149,13 @@ impl PrefillTask {
 
     pub fn is_done(&self) -> bool {
         self.layers_done >= self.layers_total
+    }
+
+    /// First token position whose KV must actually be computed — 0 for
+    /// a cold prompt, a multiple of [`crate::BLOCK_SIZE`] when the
+    /// leading chunks were adopted from the prefix cache.
+    pub fn start_offset(&self) -> usize {
+        self.start_offset
     }
 }
 
@@ -249,6 +269,19 @@ pub trait EngineCore {
     /// engines whose γ is baked into compiled strategies stay exact.
     fn set_pressure(&mut self, pressured: bool) {
         let _ = pressured;
+    }
+
+    /// Start a prefill whose first `start_tokens` prompt tokens are
+    /// already covered by retained prefix-cache KV blocks (always a
+    /// multiple of the block size; the scheduler owns the block
+    /// accounting).  Engines that can skip the warm prefix override
+    /// this to start at the divergence point; the default ignores the
+    /// offset and recomputes everything — correct, just not faster,
+    /// because the shared blocks stay valid either way.
+    fn begin_prefill_at(&mut self, tokens: &[i32], start_tokens: usize)
+                        -> Result<Self::Prefill> {
+        let _ = start_tokens;
+        self.begin_prefill(tokens)
     }
 }
 
@@ -583,8 +616,20 @@ impl EngineCore for Engine {
             kv: Vec::with_capacity(spec.num_layers),
             stats,
             prof,
+            start_offset: 0,
             pattern,
         })
+    }
+
+    fn begin_prefill_at(&mut self, tokens: &[i32], start_tokens: usize)
+                        -> Result<PrefillTask> {
+        let mut t = self.begin_prefill(tokens)?;
+        // Advisory here: the artifact-backed stack recomputes the full
+        // prompt (the retained shared blocks are already correct), but
+        // the offset rides along so stats stay truthful.
+        t.start_offset = start_tokens.min(t.real_len);
+        t.stats.prefix_tokens_skipped = t.start_offset;
+        Ok(t)
     }
 
     fn prefill_chunk(&mut self, t: &mut PrefillTask, max_layers: usize)

@@ -169,6 +169,10 @@ fn run_shard<E: EngineCore>(
             return;
         }
         if shutting_down && !sched.has_work() {
+            // release the prefix index's retains first: cached blocks
+            // are deliberate state, not a leak, and must not fail the
+            // clean-exit audit below
+            sched.flush_prefix_cache();
             guard.clean = sched.kv.used() == 0;
             guard.metrics = Some(std::mem::take(&mut sched.metrics));
             return;
@@ -229,6 +233,11 @@ pub struct Fleet {
     restarts: u64,
     /// Metrics harvested from shards that exited before shutdown.
     harvested: Vec<Metrics>,
+    /// Route sessions sharing a prompt's first block chunk to the same
+    /// shard (whose prefix cache holds their KV blocks).  Set by the
+    /// builder iff `serve.prefix_cache` is on; off, placement is
+    /// bit-identical to the load-only policy.
+    prefix_affinity: bool,
 }
 
 impl Fleet {
@@ -238,7 +247,20 @@ impl Fleet {
         let id = self.next_id;
         self.next_id += 1;
         let (sink, events) = EventSink::channel();
-        let shard = self.router.place(id, tokens.len());
+        // prefix key = the prompt's first full-chunk chain hash, the
+        // same content address the shard-local `PrefixIndex` uses, so
+        // same-prefix sessions land where their cached blocks live
+        // (sub-chunk prompts hash nothing and place load-aware)
+        let prefix = if self.prefix_affinity {
+            let head = tokens.len().min(crate::BLOCK_SIZE);
+            super::kvcache::chain_hashes(&tokens[..head])
+                .first()
+                .copied()
+        } else {
+            None
+        };
+        let shard =
+            self.router.place_with_prefix(id, tokens.len(), prefix);
         self.sessions.insert(id, sink.clone());
         // a send to a shard that died since the pump above is not lost:
         // the session is registered, so the supervisor synthesizes its
@@ -453,6 +475,19 @@ impl FleetHandle {
         }
     }
 
+    /// Turn on prefix-affinity placement: sessions sharing a prompt's
+    /// first block chunk co-locate on the shard whose prefix cache
+    /// holds their blocks (with load-aware spill — see
+    /// [`FleetRouter::place_with_prefix`]).  Intended to be flipped
+    /// iff `serve.prefix_cache.enabled` is, so the knob-off fleet
+    /// places bit-identically to the load-only policy.  No-op on a
+    /// single-engine handle (one shard is its own home).
+    pub fn enable_prefix_affinity(&mut self) {
+        if let FleetHandle::Sharded(f) = self {
+            f.prefix_affinity = true;
+        }
+    }
+
     /// Fault injection for tests/fuzzing: make a shard die as if its
     /// thread panicked.  No-op on a single-engine handle.
     pub fn kill_shard(&mut self, shard: usize) {
@@ -527,6 +562,7 @@ where
         next_id: 0,
         restarts: 0,
         harvested: Vec::new(),
+        prefix_affinity: false,
     }))
 }
 
@@ -693,6 +729,48 @@ mod tests {
             e, Event::PrefillDone { stats, .. } if stats.cache_hits > 0));
         assert!(warm, "peer shard must run warm: {events:?}");
         fleet.shutdown();
+    }
+
+    #[test]
+    fn prefix_affinity_colocates_and_reuses_cached_blocks() {
+        let mut cfg = ServeConfig::default();
+        cfg.prefix_cache.enabled = true;
+        let mut fleet = spawn_fleet(2, move |_| {
+            Ok((Scheduler::new(&cfg),
+                SimEngine::new(4).with_work(20_000)))
+        });
+        fleet.enable_prefix_affinity();
+        // a back-to-back same-prompt burst: the load-aware policy
+        // would spread these across both shards; affinity pins them
+        // all to the first session's home
+        let burst: Vec<SessionHandle> =
+            (0..3).map(|_| fleet.submit(vec![7; 256], 1)).collect();
+        let homes: Vec<Option<usize>> = burst
+            .iter()
+            .map(|h| fleet.assignment_of(h.id))
+            .collect();
+        assert!(homes.iter().all(|s| *s == homes[0]),
+                "same-prefix burst must co-locate: {homes:?}");
+        for h in burst {
+            let last =
+                h.collect().pop().expect("stream must not be empty");
+            assert!(matches!(last, Event::Done { .. }),
+                    "expected Done, got {last:?}");
+        }
+        // a fresh same-prefix session lands on the warm home and
+        // adopts the cached KV blocks instead of prefilling cold
+        let warm = fleet.submit(vec![7; 256], 1);
+        assert_eq!(fleet.assignment_of(warm.id), homes[0]);
+        let events = warm.collect();
+        let reused = events.iter().any(|e| matches!(
+            e, Event::PrefillDone { stats, .. }
+                if stats.prefix_blocks_reused > 0));
+        assert!(reused, "home shard must reuse cached blocks: \
+                         {events:?}");
+        // flush-before-audit: prefix retains are not unclean exits
+        let report = fleet.shutdown();
+        assert!(report.contains("0 unclean exits"),
+                "prefix retains flagged as a leak: {report}");
     }
 
     #[test]

@@ -40,7 +40,15 @@ pub struct FleetRouter {
     live: HashMap<RequestId, Charge>,
     /// Full placement history: survives retirement for affinity.
     assigned: HashMap<RequestId, usize>,
+    /// Prefix-affinity homes: first-chunk hash → the shard whose
+    /// prefix cache holds (or will hold) that prompt family's blocks.
+    prefix_home: HashMap<u64, usize>,
 }
+
+/// How many live sessions deeper than the shallowest shard a prefix
+/// home may run before affinity yields to load-aware placement (the
+/// home then moves with the spilled traffic).
+pub const PREFIX_SPILL_DEPTH: usize = 4;
 
 impl FleetRouter {
     pub fn new(shards: usize) -> FleetRouter {
@@ -50,6 +58,7 @@ impl FleetRouter {
             est_tokens: vec![0; shards],
             live: HashMap::new(),
             assigned: HashMap::new(),
+            prefix_home: HashMap::new(),
         }
     }
 
@@ -80,6 +89,42 @@ impl FleetRouter {
         self.live.insert(id, Charge { shard: best, est_tokens });
         self.assigned.insert(id, best);
         best
+    }
+
+    /// Place a session whose prompt opens with the block chunk hashed
+    /// as `prefix` (see `kvcache::chain_hashes`).  Sessions sharing a
+    /// first chunk co-locate on that chunk's *home shard* — the one
+    /// whose prefix cache holds (or is about to hold) their KV blocks —
+    /// so warm hits happen instead of every shard re-prefilling the
+    /// same prefix cold.  Load still wins two ways: a key with no home
+    /// yet is placed load-aware (and that shard becomes the home), and
+    /// a home running more than [`PREFIX_SPILL_DEPTH`] live sessions
+    /// deeper than the shallowest shard spills — the load-aware pick
+    /// takes the session *and* the home, so a hot prefix family
+    /// migrates rather than melting one shard.  `prefix: None` is
+    /// exactly [`FleetRouter::place`], so routing with the prefix cache
+    /// disabled is bit-identical to the load-only policy.
+    pub fn place_with_prefix(&mut self, id: RequestId,
+                             prompt_tokens: usize,
+                             prefix: Option<u64>) -> usize {
+        let Some(key) = prefix else {
+            return self.place(id, prompt_tokens);
+        };
+        if let Some(&home) = self.prefix_home.get(&key) {
+            let shallowest =
+                self.depth.iter().copied().min().unwrap_or(0);
+            if self.depth[home] < shallowest + PREFIX_SPILL_DEPTH {
+                let est_tokens = prompt_tokens.max(1) as u64;
+                self.depth[home] += 1;
+                self.est_tokens[home] += est_tokens;
+                self.live.insert(id, Charge { shard: home, est_tokens });
+                self.assigned.insert(id, home);
+                return home;
+            }
+        }
+        let shard = self.place(id, prompt_tokens);
+        self.prefix_home.insert(key, shard);
+        shard
     }
 
     /// The shard owning `id`, live or retired — affinity means a
@@ -199,6 +244,48 @@ mod tests {
         // Shard 0 is empty again, so the tie-break sends the next
         // session back to it.
         assert_eq!(r.place(1, 64), 0);
+    }
+
+    #[test]
+    fn prefix_key_colocates_sessions_on_one_home_shard() {
+        let mut r = FleetRouter::new(3);
+        // First sighting of the key: load-aware (empty fleet → shard
+        // 0), and shard 0 becomes the key's home.
+        assert_eq!(r.place_with_prefix(0, 256, Some(0xfeed)), 0);
+        // Plain load-aware placement would now pick shard 1; the
+        // shared key pins the follow-ups to the warm home instead.
+        assert_eq!(r.place_with_prefix(1, 256, Some(0xfeed)), 0);
+        assert_eq!(r.place_with_prefix(2, 256, Some(0xfeed)), 0);
+        // A different key is unaffected and spreads load-aware.
+        assert_eq!(r.place_with_prefix(3, 256, Some(0xbeef)), 1);
+        // No key at all behaves exactly like `place`.
+        assert_eq!(r.place_with_prefix(4, 256, None), 2);
+    }
+
+    #[test]
+    fn overloaded_home_spills_and_migrates_the_prefix_home() {
+        let mut r = FleetRouter::new(2);
+        // Pin the key's home to shard 0, then pile on until the home
+        // runs PREFIX_SPILL_DEPTH deeper than the idle shard 1.
+        for id in 0..PREFIX_SPILL_DEPTH as u64 {
+            assert_eq!(r.place_with_prefix(id, 64, Some(1)), 0);
+        }
+        // Depth 4 vs 0: affinity yields, load-aware picks shard 1, and
+        // the home migrates with the spill …
+        assert_eq!(r.place_with_prefix(90, 64, Some(1)), 1);
+        // … so the next same-key session follows it there.
+        assert_eq!(r.place_with_prefix(91, 64, Some(1)), 1);
+    }
+
+    #[test]
+    fn none_prefix_matches_plain_placement_exactly() {
+        let script: &[usize] = &[512, 16, 2048, 64, 64, 1024, 8, 256];
+        let mut plain = FleetRouter::new(3);
+        let mut keyed = FleetRouter::new(3);
+        for (id, &len) in script.iter().enumerate() {
+            assert_eq!(plain.place(id as u64, len),
+                       keyed.place_with_prefix(id as u64, len, None));
+        }
     }
 
     #[test]

@@ -5,13 +5,39 @@
 //!
 //! Refcounting exists so shared prefixes (same prompt served to multiple
 //! requests) can share blocks — exercised by the property tests and the
-//! scheduler's duplicate-prompt fast path.
+//! content-addressed [`PrefixIndex`]: completed prefills publish their
+//! full prompt chunks under a chained hash, warm requests `retain` the
+//! matched prefix and start prefill at the first divergent chunk, and
+//! [`KvAllocator::make_exclusive`] is the copy-on-write primitive that
+//! keeps shared blocks immutable (a block with refcount > 1 is cloned
+//! before any writer may touch it).
 
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
 /// Logical block handle.
 pub type BlockId = u32;
 
+/// Refcounted paged KV block allocator.
+///
+/// Hands out logical block ids from a bounded free list; the engine owns
+/// the physical tensors behind them.  Every allocated block starts at
+/// refcount 1; [`retain`](KvAllocator::retain) adds sharers (prefix
+/// reuse) and [`release`](KvAllocator::release) drops them, returning
+/// the block to the free list at zero.  Misuse (double free, retain of a
+/// free block, out-of-range id) is a structured error, never a panic.
+///
+/// ```
+/// use shareprefill::serving::kvcache::KvAllocator;
+///
+/// let mut kv = KvAllocator::new(8);
+/// let blocks = kv.alloc(2).unwrap();
+/// kv.retain(&blocks).unwrap();   // a second owner (prefix sharing)
+/// kv.release(&blocks).unwrap();  // first owner gone ...
+/// assert_eq!(kv.used(), 2);      // ... but the blocks stay live
+/// kv.release(&blocks).unwrap();
+/// assert_eq!(kv.used(), 0);
+/// ```
 #[derive(Debug)]
 pub struct KvAllocator {
     capacity: usize,
@@ -103,6 +129,247 @@ impl KvAllocator {
                          num_layers: usize) -> usize {
         let tokens = prompt_len + decode;
         tokens.div_ceil(crate::BLOCK_SIZE) * num_layers
+    }
+
+    /// Current refcount of `b`, or `None` past capacity.  Diagnostic
+    /// visibility for the copy-on-write and prefix-sharing invariants
+    /// (the fuzz harness asserts no block is mutated at refcount > 1).
+    pub fn refcount(&self, b: BlockId) -> Option<u16> {
+        self.refcount.get(b as usize).copied()
+    }
+
+    /// Copy-on-write primitive: return a block the caller may mutate.
+    ///
+    /// A block held by exactly one owner is returned as-is; a shared
+    /// block (refcount > 1) has the caller's reference moved onto a
+    /// freshly allocated block — the other owners keep the original
+    /// untouched.  Fails without side effects when the free list cannot
+    /// supply the clone.
+    ///
+    /// ```
+    /// use shareprefill::serving::kvcache::KvAllocator;
+    ///
+    /// let mut kv = KvAllocator::new(4);
+    /// let b = kv.alloc(1).unwrap()[0];
+    /// assert_eq!(kv.make_exclusive(b).unwrap(), b); // sole owner
+    /// kv.retain(&[b]).unwrap();                     // now shared
+    /// let mine = kv.make_exclusive(b).unwrap();
+    /// assert_ne!(mine, b, "shared block is cloned before mutation");
+    /// assert_eq!(kv.refcount(b), Some(1));
+    /// ```
+    pub fn make_exclusive(&mut self, b: BlockId) -> Result<BlockId> {
+        if b as usize >= self.capacity {
+            bail!("make_exclusive of out-of-range block {b} \
+                   (capacity {})", self.capacity);
+        }
+        match self.refcount[b as usize] {
+            0 => bail!("make_exclusive of free block {b}"),
+            1 => Ok(b),
+            _ => {
+                let Some(fresh) = self.free.pop() else {
+                    bail!("kv cache exhausted: copy-on-write of shared \
+                           block {b} needs a free block");
+                };
+                self.refcount[b as usize] -= 1;
+                debug_assert_eq!(self.refcount[fresh as usize], 0);
+                self.refcount[fresh as usize] = 1;
+                Ok(fresh)
+            }
+        }
+    }
+}
+
+/// Chain-hash a prompt into one 64-bit commitment per full KV block's
+/// worth of tokens (`BLOCK_SIZE`).  FNV-1a over the little-endian token
+/// bytes, *chained*: chunk `k`'s hash folds in everything before it, so
+/// equal hashes mean equal whole prefixes (up to 64-bit collisions) and
+/// a [`PrefixIndex`] entry is reachable only through its full ancestry.
+/// The trailing partial chunk is never hashed — only block-aligned
+/// prefixes are shareable.
+pub fn chain_hashes(tokens: &[i32]) -> Vec<u64> {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut out = Vec::with_capacity(tokens.len() / crate::BLOCK_SIZE);
+    for chunk in tokens.chunks_exact(crate::BLOCK_SIZE) {
+        for &t in chunk {
+            for byte in t.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        }
+        out.push(h);
+    }
+    out
+}
+
+#[derive(Debug)]
+struct PrefixEntry {
+    /// One block per layer for this chunk (layer-major within the chunk).
+    blocks: Vec<BlockId>,
+    /// LRU stamp — larger is more recently used.
+    stamp: u64,
+}
+
+/// Content-addressed index from chained prompt-chunk hashes to
+/// refcounted KV block lists — the prefix-sharing cache.
+///
+/// Completed prefills [`insert`](PrefixIndex::insert) their full prompt
+/// chunks; admission [`probe`](PrefixIndex::probe)s for the longest
+/// cached prefix and [`acquire`](PrefixIndex::acquire)s it, retaining
+/// the matched blocks for the new session so prefill can start at the
+/// first divergent chunk.  The index holds its own reference on every
+/// cached block, so LRU eviction (bounded by `capacity` entries) only
+/// releases the *index's* retain — live sessions sharing the block keep
+/// theirs, and the allocator frees the block when the last one ends.
+///
+/// ```
+/// use shareprefill::serving::kvcache::{KvAllocator, PrefixIndex};
+///
+/// let layers = 2;
+/// let mut kv = KvAllocator::new(64);
+/// let mut idx = PrefixIndex::new(16);
+/// let prompt: Vec<i32> = (0..128).collect(); // two full chunks
+///
+/// // cold request: prefill computed everything, then published
+/// let blocks = kv.alloc(2 * layers).unwrap();
+/// idx.insert(&prompt, &blocks, layers, &mut kv).unwrap();
+///
+/// // warm request with the same prompt: both chunks hit
+/// let (matched, shared) = idx.acquire(&prompt, &mut kv).unwrap();
+/// assert_eq!((matched, shared.len()), (2, 2 * layers));
+/// assert_eq!(shared, blocks, "same physical blocks, new retain");
+/// # kv.release(&shared).unwrap();
+/// # kv.release(&blocks).unwrap();
+/// # idx.clear(&mut kv).unwrap();
+/// # assert_eq!(kv.used(), 0);
+/// ```
+#[derive(Debug)]
+pub struct PrefixIndex {
+    entries: BTreeMap<u64, PrefixEntry>,
+    capacity: usize,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    /// An index bounded to `capacity` chunk entries (LRU beyond that).
+    pub fn new(capacity: usize) -> PrefixIndex {
+        PrefixIndex { entries: BTreeMap::new(), capacity, clock: 0 }
+    }
+
+    /// Number of cached chunk entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no chunks are cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total KV blocks the index itself holds a reference on.
+    pub fn block_count(&self) -> usize {
+        self.entries.values().map(|e| e.blocks.len()).sum()
+    }
+
+    /// How many leading full chunks of `tokens` are cached, without
+    /// retaining anything — the admission probe (`can_alloc` is asked
+    /// only for the suffix this many chunks exclude).
+    pub fn probe(&self, tokens: &[i32]) -> usize {
+        chain_hashes(tokens).iter()
+            .take_while(|h| self.entries.contains_key(h))
+            .count()
+    }
+
+    /// Claim the longest cached prefix of `tokens` for a new session:
+    /// every matched chunk's blocks are `retain`ed on the session's
+    /// behalf and LRU-touched.  Returns `(matched_chunks, blocks)` with
+    /// the blocks chunk-major (chunk `k`'s layers at
+    /// `[k*layers .. (k+1)*layers]`), matching the scheduler's session
+    /// block layout.
+    pub fn acquire(&mut self, tokens: &[i32], kv: &mut KvAllocator)
+                   -> Result<(usize, Vec<BlockId>)> {
+        self.clock += 1;
+        let mut out = Vec::new();
+        let mut matched = 0;
+        for h in chain_hashes(tokens) {
+            let Some(e) = self.entries.get_mut(&h) else { break };
+            kv.retain(&e.blocks)?;
+            e.stamp = self.clock;
+            out.extend_from_slice(&e.blocks);
+            matched += 1;
+        }
+        Ok((matched, out))
+    }
+
+    /// Publish a completed prefill: index every full chunk of `tokens`
+    /// whose hash is not yet cached, retaining its `layers` blocks on
+    /// the index's behalf (`blocks` chunk-major, as handed to the
+    /// session).  Already-cached chunks are LRU-touched; at `capacity`
+    /// the least-recently-used entry is evicted first, releasing only
+    /// the index's own retain.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[BlockId],
+                  layers: usize, kv: &mut KvAllocator) -> Result<()> {
+        if self.capacity == 0 || layers == 0 {
+            return Ok(());
+        }
+        self.clock += 1;
+        for (k, h) in chain_hashes(tokens).into_iter().enumerate() {
+            let lo = k * layers;
+            let hi = lo + layers;
+            if hi > blocks.len() {
+                break;
+            }
+            if let Some(e) = self.entries.get_mut(&h) {
+                e.stamp = self.clock;
+                continue;
+            }
+            while self.entries.len() >= self.capacity {
+                self.evict_lru(kv)?;
+            }
+            kv.retain(&blocks[lo..hi])?;
+            self.entries.insert(h, PrefixEntry {
+                blocks: blocks[lo..hi].to_vec(),
+                stamp: self.clock,
+            });
+        }
+        Ok(())
+    }
+
+    /// Release every retain the index holds and forget all entries
+    /// (shutdown / leak accounting; live sessions keep their own
+    /// references).
+    pub fn clear(&mut self, kv: &mut KvAllocator) -> Result<()> {
+        for (_, e) in std::mem::take(&mut self.entries) {
+            kv.release(&e.blocks)?;
+        }
+        Ok(())
+    }
+
+    /// Evict the single least-recently-used entry, releasing only the
+    /// index's own retain; `false` when there was nothing to evict.
+    /// The scheduler calls this under allocator pressure — cached
+    /// prefixes are a luxury that must never starve a live admission.
+    pub fn evict_one(&mut self, kv: &mut KvAllocator) -> Result<bool> {
+        if self.entries.is_empty() {
+            return Ok(false);
+        }
+        self.evict_lru(kv)?;
+        Ok(true)
+    }
+
+    fn evict_lru(&mut self, kv: &mut KvAllocator) -> Result<()> {
+        // oldest stamp wins; hash breaks ties deterministically
+        let mut victim: Option<(u64, u64)> = None;
+        for (&h, e) in &self.entries {
+            match victim {
+                Some((s, vh)) if (s, vh) <= (e.stamp, h) => {}
+                _ => victim = Some((e.stamp, h)),
+            }
+        }
+        let Some((_, h)) = victim else { return Ok(()) };
+        let Some(e) = self.entries.remove(&h) else { return Ok(()) };
+        kv.release(&e.blocks)
     }
 }
 
@@ -268,6 +535,221 @@ mod tests {
                 let live: usize = held.iter().map(Vec::len).sum();
                 assert_eq!(a.used(), live, "conservation violated");
             }
+        });
+    }
+
+    #[test]
+    fn make_exclusive_cow_semantics() {
+        let mut a = KvAllocator::new(4);
+        let b = a.alloc(1).unwrap()[0];
+        // sole owner: no clone
+        assert_eq!(a.make_exclusive(b).unwrap(), b);
+        assert_eq!(a.used(), 1);
+        // shared: caller's ref moves to a fresh block, sharer keeps b
+        a.retain(&[b]).unwrap();
+        let mine = a.make_exclusive(b).unwrap();
+        assert_ne!(mine, b);
+        assert_eq!(a.refcount(b), Some(1));
+        assert_eq!(a.refcount(mine), Some(1));
+        assert_eq!(a.used(), 2, "clone is a real allocation");
+        a.release(&[b]).unwrap();
+        a.release(&[mine]).unwrap();
+        assert_eq!(a.used(), 0, "no leak through the COW path");
+    }
+
+    #[test]
+    fn make_exclusive_misuse_is_an_error_not_a_panic() {
+        let mut a = KvAllocator::new(2);
+        assert!(a.make_exclusive(9).is_err(), "out of range");
+        let b = a.alloc(1).unwrap();
+        a.release(&b).unwrap();
+        assert!(a.make_exclusive(b[0]).is_err(), "free block");
+        // exhausted free list: the shared block must stay shared (no
+        // side effects on a refused clone)
+        let held = a.alloc(2).unwrap();
+        a.retain(&held[..1]).unwrap();
+        assert!(a.make_exclusive(held[0]).is_err());
+        assert_eq!(a.refcount(held[0]), Some(2), "refused COW is a no-op");
+        a.release(&held[..1]).unwrap();
+        a.release(&held).unwrap();
+        assert_eq!(a.used(), 0);
+    }
+
+    /// `chunks` full chunks of the constant token `tag` — the shared
+    /// prefixes the index tests key on.
+    fn chunk_prompt(tag: i32, chunks: usize) -> Vec<i32> {
+        vec![tag; crate::BLOCK_SIZE * chunks]
+    }
+
+    #[test]
+    fn chain_hashes_commit_to_the_whole_prefix() {
+        let bs = crate::BLOCK_SIZE;
+        assert!(chain_hashes(&[]).is_empty());
+        let mut partial = chunk_prompt(1, 1);
+        partial.pop();
+        assert!(chain_hashes(&partial).is_empty(),
+                "partial chunks are never hashed");
+        let a: Vec<i32> = (0..2 * bs as i32).collect();
+        let ha = chain_hashes(&a);
+        assert_eq!(ha.len(), 2);
+        // same prefix ⇒ same hashes, regardless of what follows
+        let mut b = a.clone();
+        b.extend_from_slice(&[7; 10]);
+        assert_eq!(chain_hashes(&b)[..2], ha[..]);
+        // a different FIRST chunk changes the SECOND hash too (chained)
+        let mut c = a.clone();
+        c[0] += 1;
+        let hc = chain_hashes(&c);
+        assert_ne!(hc[0], ha[0]);
+        assert_ne!(hc[1], ha[1], "chunk hash must commit to ancestry");
+        // same second chunk after different firsts must not collide into
+        // the same index slot
+        assert_ne!(hc[1], hc[0]);
+    }
+
+    #[test]
+    fn prefix_index_roundtrip_and_divergence() {
+        let bs = crate::BLOCK_SIZE;
+        let layers = 3;
+        let mut kv = KvAllocator::new(64);
+        let mut idx = PrefixIndex::new(8);
+        let prompt: Vec<i32> = (0..2 * bs as i32).collect();
+        let blocks = kv.alloc(2 * layers).unwrap();
+        idx.insert(&prompt, &blocks, layers, &mut kv).unwrap();
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.block_count(), 2 * layers);
+        for &b in &blocks {
+            assert_eq!(kv.refcount(b), Some(2), "index holds its own ref");
+        }
+
+        // identical prompt: full hit, chunk-major block layout
+        assert_eq!(idx.probe(&prompt), 2);
+        let (m, shared) = idx.acquire(&prompt, &mut kv).unwrap();
+        assert_eq!(m, 2);
+        assert_eq!(shared, blocks);
+        assert_eq!(kv.refcount(blocks[0]), Some(3));
+
+        // divergence in the second chunk: only the first chunk matches
+        let mut div = prompt.clone();
+        div[bs] += 1;
+        assert_eq!(idx.probe(&div), 1);
+        let (m2, s2) = idx.acquire(&div, &mut kv).unwrap();
+        assert_eq!(m2, 1);
+        assert_eq!(&s2[..], &blocks[..layers]);
+
+        // sessions done, index flushed: everything returns to the pool
+        kv.release(&shared).unwrap();
+        kv.release(&s2).unwrap();
+        kv.release(&blocks).unwrap();
+        idx.clear(&mut kv).unwrap();
+        assert_eq!(kv.used(), 0, "zero KV leak through the index");
+    }
+
+    #[test]
+    fn prefix_index_lru_eviction_respects_refcounts() {
+        let layers = 1;
+        let mut kv = KvAllocator::new(16);
+        let mut idx = PrefixIndex::new(2); // two chunk entries max
+        let p1 = chunk_prompt(1, 1);
+        let p2 = chunk_prompt(2, 1);
+        let p3 = chunk_prompt(3, 1);
+        let p4 = chunk_prompt(4, 1);
+        let b1 = kv.alloc(1).unwrap();
+        let b2 = kv.alloc(1).unwrap();
+        idx.insert(&p1, &b1, layers, &mut kv).unwrap();
+        idx.insert(&p2, &b2, layers, &mut kv).unwrap();
+        // a live session still shares p1's block (and touches its LRU)
+        let (_, live) = idx.acquire(&p1, &mut kv).unwrap();
+        // p1 was just touched, so inserting p3 evicts p2 (the LRU)
+        let b3 = kv.alloc(1).unwrap();
+        idx.insert(&p3, &b3, layers, &mut kv).unwrap();
+        assert_eq!(idx.len(), 2);
+        assert_eq!(idx.probe(&p2), 0, "LRU entry evicted");
+        assert_eq!(idx.probe(&p1), 1);
+        assert_eq!(idx.probe(&p3), 1);
+        // force p1's eviction too: the live session must keep its ref
+        let b4 = kv.alloc(1).unwrap();
+        idx.insert(&p4, &b4, layers, &mut kv).unwrap();
+        assert_eq!(idx.probe(&p1), 0, "p1 was the LRU this time");
+        assert_eq!(kv.refcount(live[0]), Some(2),
+                   "session keeps its retain after index eviction; the \
+                    original owner holds the other");
+        kv.release(&live).unwrap();
+        assert_eq!(kv.refcount(live[0]), Some(1));
+        // drain everything: owners drop, index flushes, pool refills
+        for b in [&b1, &b2, &b3, &b4] {
+            kv.release(b).unwrap();
+        }
+        idx.clear(&mut kv).unwrap();
+        assert_eq!(kv.used(), 0, "zero KV leak after eviction churn");
+    }
+
+    #[test]
+    fn prop_prefix_index_conservation() {
+        // randomized insert/acquire/release against the index: at every
+        // step used() == blocks held by live sessions + index retains,
+        // and a final clear() returns the allocator to empty
+        property("prefix index conservation", 60, |g: &mut Gen| {
+            let bs = crate::BLOCK_SIZE;
+            let layers = 1 + g.usize_in(0..3);
+            let mut kv = KvAllocator::new(128);
+            let mut idx = PrefixIndex::new(1 + g.usize_in(0..6));
+            let mut sessions: Vec<Vec<BlockId>> = Vec::new();
+            for _ in 0..30 {
+                match g.usize_in(0..3) {
+                    0 => {
+                        // cold-ish request: acquire prefix, alloc suffix,
+                        // publish the full chunks
+                        let chunks = 1 + g.usize_in(0..4);
+                        let tag = g.usize_in(0..3) as i32;
+                        let prompt: Vec<i32> = (0..chunks * bs)
+                            .map(|i| tag + (i / bs) as i32).collect();
+                        let (m, mut blocks) =
+                            idx.acquire(&prompt, &mut kv).unwrap();
+                        let need = (chunks - m) * layers;
+                        if !kv.can_alloc(need) {
+                            kv.release(&blocks).unwrap();
+                            continue;
+                        }
+                        blocks.extend(kv.alloc(need).unwrap());
+                        idx.insert(&prompt, &blocks, layers, &mut kv)
+                            .unwrap();
+                        sessions.push(blocks);
+                    }
+                    1 if !sessions.is_empty() => {
+                        let i = g.usize_in(0..sessions.len());
+                        let blocks = sessions.swap_remove(i);
+                        kv.release(&blocks).unwrap();
+                    }
+                    _ => {
+                        // COW poke: a shared session block must clone
+                        if let Some(s) = sessions.first_mut() {
+                            let b = s[0];
+                            if kv.refcount(b).unwrap_or(0) > 1 {
+                                if let Ok(nb) = kv.make_exclusive(b) {
+                                    s[0] = nb;
+                                }
+                            }
+                        }
+                    }
+                }
+                // refcount-unit conservation: every session slot and
+                // every index entry owns exactly one reference (used()
+                // counts distinct blocks, which sharing makes smaller)
+                let live: usize = sessions.iter().map(Vec::len).sum();
+                let units: usize = (0..kv.capacity())
+                    .map(|b| kv.refcount(b as BlockId).unwrap_or(0)
+                             as usize)
+                    .sum();
+                assert_eq!(units, live + idx.block_count(),
+                           "refcount conservation violated");
+                assert!(kv.used() <= units, "used() over-counts");
+            }
+            for s in sessions {
+                kv.release(&s).unwrap();
+            }
+            idx.clear(&mut kv).unwrap();
+            assert_eq!(kv.used(), 0, "leak after drain + clear");
         });
     }
 }

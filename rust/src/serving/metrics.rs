@@ -48,6 +48,13 @@ pub struct Metrics {
     pub cache_hit_heads: u64,
     pub cache_miss_heads: u64,
     pub cache_rejected_heads: u64,
+    /// Prefix-cache outcomes (all zero with `serve.prefix_cache` off):
+    /// completed prefills that adopted at least one shared chunk, the
+    /// KV blocks they adopted instead of recomputing, and the prompt
+    /// tokens those chunks covered (the prefill started past them).
+    pub prefix_hits: u64,
+    pub prefix_blocks_reused: u64,
+    pub prefix_tokens_skipped: u64,
     /// Scheduling rounds that had (or could have had) work.
     pub rounds: u64,
     /// Round-budget tokens spent on decode steps (1 per token).
@@ -85,6 +92,11 @@ impl Metrics {
         self.cache_hit_heads += stats.cache_hits as u64;
         self.cache_miss_heads += stats.cache_misses as u64;
         self.cache_rejected_heads += stats.cache_rejected as u64;
+        if stats.prefix_blocks_reused > 0 {
+            self.prefix_hits += 1;
+        }
+        self.prefix_blocks_reused += stats.prefix_blocks_reused as u64;
+        self.prefix_tokens_skipped += stats.prefix_tokens_skipped as u64;
         self.pool_rounds += stats.pool_rounds as u64;
         self.pool_items += stats.pool_items as u64;
         self.pool_span_items += stats.pool_span_items as u64;
@@ -121,6 +133,9 @@ impl Metrics {
         self.cache_hit_heads += other.cache_hit_heads;
         self.cache_miss_heads += other.cache_miss_heads;
         self.cache_rejected_heads += other.cache_rejected_heads;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_blocks_reused += other.prefix_blocks_reused;
+        self.prefix_tokens_skipped += other.prefix_tokens_skipped;
         self.rounds += other.rounds;
         self.decode_budget_tokens += other.decode_budget_tokens;
         self.prefill_budget_tokens += other.prefill_budget_tokens;
@@ -154,6 +169,17 @@ impl Metrics {
             0.0
         } else {
             self.cache_hit_heads as f64 / total as f64
+        }
+    }
+
+    /// Fraction of all lifetime prompt tokens the prefix cache let
+    /// prefills start past (0.0 before any prompt completed, and with
+    /// `serve.prefix_cache` off).
+    pub fn prefix_skip_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            0.0
+        } else {
+            self.prefix_tokens_skipped as f64 / self.prompt_tokens as f64
         }
     }
 
@@ -219,6 +245,8 @@ impl Metrics {
              patterns: dense {}, shared {}, vslash {}, query-aware {}\n\
              pattern cache: {} hits, {} misses, {} invalidated \
              ({:.0}% hit rate)\n\
+             prefix cache: {} hits, {} blocks reused, {:.0}% prefill \
+             skipped\n\
              workers: {} ({} fan-out rounds, {} items, occupancy \
              {:.0}%, imbalance {:.0}%)\n\
              rounds:  {} (budget occupancy: {:.0}% decode, {:.0}% \
@@ -247,6 +275,8 @@ impl Metrics {
             self.query_aware_heads,
             self.cache_hit_heads, self.cache_miss_heads,
             self.cache_rejected_heads, self.cache_hit_rate() * 100.0,
+            self.prefix_hits, self.prefix_blocks_reused,
+            self.prefix_skip_rate() * 100.0,
             self.pool_workers.max(1), self.pool_rounds, self.pool_items,
             self.worker_occupancy() * 100.0,
             (1.0 - self.worker_occupancy()) * 100.0,
@@ -303,6 +333,34 @@ mod tests {
         assert!(r.contains("pattern cache: 3 hits, 1 misses, 2 \
                             invalidated (50% hit rate)"),
                 "cache line missing from report: {r}");
+    }
+
+    #[test]
+    fn prefix_counters_record_absorb_and_report() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefix_skip_rate(), 0.0);
+        m.prompt_tokens = 256;
+        m.record_prefill(&PrefillStats {
+            prefix_blocks_reused: 8,
+            prefix_tokens_skipped: 128,
+            ..Default::default()
+        });
+        m.record_prefill(&PrefillStats::default()); // cold: no hit
+        assert_eq!(m.prefix_hits, 1);
+        assert_eq!(m.prefix_blocks_reused, 8);
+        assert!((m.prefix_skip_rate() - 0.5).abs() < 1e-12);
+        let mut other = Metrics::new();
+        other.prompt_tokens = 0;
+        other.prefix_hits = 2;
+        other.prefix_blocks_reused = 4;
+        other.prefix_tokens_skipped = 64;
+        m.absorb(&other);
+        assert_eq!(m.prefix_hits, 3);
+        assert_eq!(m.prefix_blocks_reused, 12);
+        let r = m.report();
+        assert!(r.contains("prefix cache: 3 hits, 12 blocks reused, \
+                            75% prefill skipped"),
+                "prefix line missing from report: {r}");
     }
 
     #[test]

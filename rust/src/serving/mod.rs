@@ -20,6 +20,7 @@ pub mod sim;
 pub use engine::{DecodeSession, Engine, EngineBuilder, EngineCore,
                  PatternExport, PrefillResult, PrefillStats, PrefillTask};
 pub use fleet::{spawn_fleet, FleetHandle, FleetRouter};
+pub use kvcache::{BlockId, KvAllocator, PrefixIndex};
 pub use request::{Request, RequestId, Response};
 pub use scheduler::Scheduler;
 pub use server::{ServerBuilder, ServerHandle};

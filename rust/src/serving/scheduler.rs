@@ -73,7 +73,7 @@ use crate::config::{AdmissionConfig, ServeConfig};
 
 use super::batcher::{BatchItem, Batcher};
 use super::engine::{EngineCore, PrefillStats};
-use super::kvcache::{BlockId, KvAllocator};
+use super::kvcache::{BlockId, KvAllocator, PrefixIndex};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use super::session::{Event, EventSink, RejectReason, SessionState};
@@ -98,6 +98,11 @@ struct Session<E: EngineCore> {
     /// Rounds spent waiting in the admission queue (deadline shedding:
     /// `serve.admission.max_queue_rounds`).
     queued_rounds: u64,
+    /// Prefix-cache adoption at admission: shared KV blocks retained
+    /// from the index and the prompt tokens they covered (both 0 on a
+    /// cold admit or with `serve.prefix_cache` off).
+    prefix_blocks: usize,
+    prefix_tokens: usize,
 }
 
 impl<E: EngineCore> BatchItem for Session<E> {
@@ -123,6 +128,13 @@ pub struct Scheduler<E: EngineCore> {
     cur_max_prefills: usize,
     admit_retries: usize,
     admission: AdmissionConfig,
+    /// Content-addressed prefix sharing (`serve.prefix_cache.*`): maps
+    /// chained prompt-chunk hashes to retained KV block runs so a
+    /// request whose prompt extends an already-served one adopts the
+    /// shared blocks and prefills only its divergent suffix.  `None`
+    /// with the knob off — every admission then takes the exact
+    /// pre-existing cold path.
+    prefix: Option<PrefixIndex>,
     /// When true, every id that receives its terminal event is logged to
     /// `retired` until drained — the fleet front door consumes this so
     /// its session registry (used to synthesize terminal `Error`s after
@@ -150,6 +162,9 @@ impl<E: EngineCore> Scheduler<E> {
             cur_max_prefills: cfg.max_concurrent_prefills.max(1),
             admit_retries: cfg.admit_retries,
             admission: cfg.admission.clone(),
+            prefix: cfg.prefix_cache.enabled.then(|| {
+                PrefixIndex::new(cfg.prefix_cache.capacity)
+            }),
             track_retired: false,
             retired: Vec::new(),
         }
@@ -165,6 +180,25 @@ impl<E: EngineCore> Scheduler<E> {
     /// Empty unless [`Scheduler::track_retirements`] was enabled.
     pub fn take_retired(&mut self) -> Vec<RequestId> {
         std::mem::take(&mut self.retired)
+    }
+
+    /// KV blocks currently retained by the prefix index alone
+    /// (0 with `serve.prefix_cache` off).  `kv.used()` converges to
+    /// this once every session retires — the cache deliberately keeps
+    /// prompt blocks alive for reuse.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.block_count())
+    }
+
+    /// Drop every prefix-cache retention (shutdown / leak accounting):
+    /// after the last session retires and this runs, `kv.used()` must
+    /// be exactly 0 again.
+    pub fn flush_prefix_cache(&mut self) {
+        if let Some(p) = self.prefix.as_mut() {
+            p.clear(&mut self.kv).expect(
+                "invariant: the index only retains blocks this \
+                 scheduler handed out");
+        }
     }
 
     fn log_retired(&mut self, id: RequestId) {
@@ -206,6 +240,8 @@ impl<E: EngineCore> Scheduler<E> {
             emitted: 0,
             rounds_starved: 0,
             queued_rounds: 0,
+            prefix_blocks: 0,
+            prefix_tokens: 0,
         };
         if self.admission.enabled {
             let prompt_len = s.req.prompt_len();
@@ -394,7 +430,17 @@ impl<E: EngineCore> Scheduler<E> {
                 return Ok(());
             };
             let prompt_len = front.req.prompt_len();
-            let need = self.blocks_for(engine, prompt_len);
+            // Prefix cache: leading chunks already indexed need no
+            // fresh blocks — admission only has to find the divergent
+            // suffix plus decode growth (the probe is read-only; the
+            // retains happen in `acquire` once the session is popped).
+            let layers = engine.layers_total();
+            let matched = match self.prefix.as_ref() {
+                Some(p) => p.probe(&front.req.tokens),
+                None => 0,
+            };
+            let need = self.blocks_for(engine, prompt_len)
+                .saturating_sub(matched * layers);
             if prompt_len == 0 {
                 let Some(s) = self.queue.remove_at(ci) else {
                     return Ok(());
@@ -403,6 +449,27 @@ impl<E: EngineCore> Scheduler<E> {
                 continue;
             }
             if !self.kv.can_alloc(need) {
+                // Allocator pressure sheds the cache's own retains
+                // before any request waits or is rejected: evict LRU
+                // entries until the candidate fits, then re-evaluate it
+                // from the top (eviction may have dropped the chunks
+                // its `matched` counted on).  Terminates: each pass
+                // shrinks the index, and an empty index evicts nothing.
+                if let Some(p) = self.prefix.as_mut() {
+                    let mut evicted = false;
+                    while !self.kv.can_alloc(need) {
+                        let more = p.evict_one(&mut self.kv).expect(
+                            "invariant: the index only retains blocks \
+                             this scheduler handed out");
+                        if !more {
+                            break;
+                        }
+                        evicted = true;
+                    }
+                    if evicted {
+                        continue;
+                    }
+                }
                 if count_retry {
                     let Some(f) = self.queue.get_mut(ci) else {
                         return Ok(());
@@ -424,13 +491,30 @@ impl<E: EngineCore> Scheduler<E> {
             let Some(mut s) = self.queue.remove_at(ci) else {
                 return Ok(());
             };
+            // Adopt the cached prefix first: matched chunks are
+            // retained out of the index (shared, chunk-major) into
+            // `s.blocks`, so every failure path below — which funnels
+            // through `reject` → `release_blocks` — drops the retains
+            // along with any fresh allocation.
+            if let Some(p) = self.prefix.as_mut() {
+                let (chunks, shared) = p
+                    .acquire(&s.req.tokens, &mut self.kv)
+                    .expect("invariant: indexed prefix blocks stay \
+                             allocated until the index releases them");
+                debug_assert_eq!(chunks, matched,
+                                 "probe/acquire must agree within one \
+                                  admission");
+                s.prefix_tokens = chunks * crate::BLOCK_SIZE;
+                s.prefix_blocks = shared.len();
+                s.blocks = shared;
+            }
             // KV first, engine second: once the session is out of the
             // queue every failure must end in a terminal event, so the
             // allocation error is a `Rejected` rather than a `?` that
             // would silently drop the session (and `reject` releases
             // the blocks the engine-refusal arm below holds).
             match self.kv.alloc(need) {
-                Ok(blocks) => s.blocks = blocks,
+                Ok(blocks) => s.blocks.extend(blocks),
                 Err(_) => {
                     self.reject(s, RejectReason::KvExhausted {
                         blocks_needed: need,
@@ -439,7 +523,7 @@ impl<E: EngineCore> Scheduler<E> {
                     continue;
                 }
             }
-            match engine.begin_prefill(&s.req.tokens) {
+            match engine.begin_prefill_at(&s.req.tokens, s.prefix_tokens) {
                 Ok(task) => {
                     s.queue_us = s.req.arrived.elapsed().as_micros() as u64;
                     s.state = SessionState::Prefilling;
@@ -515,13 +599,32 @@ impl<E: EngineCore> Scheduler<E> {
                  task");
             let max_new = s.req.max_new_tokens
                 .min(self.decode_tokens.max(1));
-            let (dec, stats) = match engine.start_decode(task, max_new) {
+            let (dec, mut stats) = match engine.start_decode(task, max_new) {
                 Ok(x) => x,
                 Err(e) => {
                     self.fail_session(s, &format!("{e:#}"));
                     return Err(e);
                 }
             };
+            // The scheduler's block accounting is authoritative for the
+            // prefix fields (engines only carry an advisory view).
+            stats.prefix_blocks_reused = s.prefix_blocks;
+            stats.prefix_tokens_skipped = s.prefix_tokens;
+            // Publication point, mirroring the pattern cache: only a
+            // *completed* prefill indexes its full prompt chunks (a
+            // cancelled one never does).  `s.blocks` is chunk-major —
+            // acquire returned the matched chunks in that layout and
+            // the fresh suffix blocks extend it — and decode growth
+            // lives past the full prompt chunks, so indexed blocks are
+            // never written again (no copy-on-write needed on this
+            // path; `KvAllocator::make_exclusive` covers engines that
+            // do mutate shared tails).
+            if let Some(p) = self.prefix.as_mut() {
+                p.insert(&s.req.tokens, &s.blocks,
+                         engine.layers_total(), &mut self.kv)
+                    .expect("invariant: the index only retains blocks \
+                             this scheduler handed out");
+            }
             self.metrics.record_prefill(&stats);
             self.metrics.prompt_tokens += s.req.prompt_len() as u64;
             s.sink.send(Event::PrefillDone { id, stats: stats.clone() });
@@ -810,6 +913,145 @@ mod tests {
         assert_eq!(sched.metrics.cache_hit_heads, 4, "second request warm");
         assert!(sched.metrics.cache_hit_rate() > 0.0);
         assert!(sched.metrics.report().contains("pattern cache:"));
+        assert_eq!(sched.kv.used(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_reuses_shared_prompt_blocks() {
+        // serialized prefills: the second identical prompt admits only
+        // after the first published its chunks, so it adopts both full
+        // chunks (2 × 4 layers = 8 blocks) and skips 128 prompt tokens
+        let mut cfg = ServeConfig {
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        cfg.prefix_cache.enabled = true;
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        sched.submit(&engine, Request::new(0, vec![7; 128], 2),
+                     EventSink::null());
+        sched.submit(&engine, Request::new(1, vec![7; 128], 2),
+                     EventSink::null());
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.run_round(&mut engine).unwrap());
+        }
+        assert_eq!(sched.metrics.requests_completed, 2);
+        assert_eq!(sched.metrics.prefix_hits, 1, "second request warm");
+        assert_eq!(sched.metrics.prefix_blocks_reused, 8);
+        assert_eq!(sched.metrics.prefix_tokens_skipped, 128);
+        assert!(sched.metrics.report().contains("prefix cache: 1 hits"));
+        // prefix reuse must not change outputs
+        assert_eq!(done[0].generated, done[1].generated);
+        // the index deliberately keeps the prompt chunks alive...
+        assert_eq!(sched.prefix_cached_blocks(), 8);
+        assert_eq!(sched.kv.used(), 8);
+        // ...until flushed, at which point nothing may leak
+        sched.flush_prefix_cache();
+        assert_eq!(sched.prefix_cached_blocks(), 0);
+        assert_eq!(sched.kv.used(), 0, "prefix cache leaked kv blocks");
+    }
+
+    #[test]
+    fn prefix_cache_off_streams_are_bit_identical() {
+        // the knob-off discipline: enabling the cache must not change a
+        // single token or terminal payload, only latency and stats
+        fn run(enable: bool) -> Vec<String> {
+            let mut cfg = ServeConfig {
+                max_concurrent_prefills: 1,
+                ..Default::default()
+            };
+            cfg.prefix_cache.enabled = enable;
+            let mut engine = SimEngine::new(4);
+            let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+            let (sink, rx) = EventSink::channel();
+            sched.submit(&engine, Request::new(0, vec![7; 128], 2),
+                         sink.clone());
+            sched.submit(&engine, Request::new(1, vec![7; 128], 2),
+                         sink.clone());
+            sched.submit(&engine, Request::new(2, vec![9; 64], 1),
+                         sink.clone());
+            while sched.has_work() {
+                sched.run_round(&mut engine).unwrap();
+            }
+            drop(sink);
+            rx.iter().filter_map(|e| match e {
+                Event::Token { id, token, index } => {
+                    Some(format!("tok {id} {index} {token}"))
+                }
+                Event::Done { id, response } => {
+                    Some(format!("done {id} {:?}", response.generated))
+                }
+                _ => None,
+            }).collect()
+        }
+        let off = run(false);
+        let on = run(true);
+        assert!(!off.is_empty());
+        assert_eq!(off, on, "prefix cache changed the output stream");
+    }
+
+    #[test]
+    fn allocator_pressure_evicts_prefix_retains() {
+        // the index holds every block after request 0 retires; a
+        // different prompt needing the full allocator must evict the
+        // cache's retains rather than wait or be rejected
+        let mut cfg = ServeConfig {
+            kv_blocks: 16,
+            decode_tokens: 0,
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        cfg.prefix_cache.enabled = true;
+        let mut engine = SimEngine::new(4);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        // 256 tokens → 4 chunks × 4 layers = all 16 blocks
+        sched.submit(&engine, Request::new(0, vec![7; 256], 0),
+                     EventSink::null());
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert_eq!(sched.prefix_cached_blocks(), 16, "index holds all kv");
+        sched.submit(&engine, Request::new(1, vec![9; 256], 0),
+                     EventSink::null());
+        while sched.has_work() {
+            sched.run_round(&mut engine).unwrap();
+        }
+        assert_eq!(sched.metrics.requests_completed, 2);
+        assert_eq!(sched.metrics.requests_rejected, 0,
+                   "pressure eviction must spare the admission");
+        // the divergent prompt's own chunks are indexed now
+        assert_eq!(sched.prefix_cached_blocks(), 16);
+        sched.flush_prefix_cache();
+        assert_eq!(sched.kv.used(), 0);
+    }
+
+    #[test]
+    fn warm_prefix_prefill_beats_cold() {
+        // with simulated compute attached, the fully-cached repeat
+        // prompt must report a strictly cheaper prefill than its cold
+        // predecessor (the tentpole's headline effect)
+        let mut cfg = ServeConfig {
+            max_concurrent_prefills: 1,
+            ..Default::default()
+        };
+        cfg.prefix_cache.enabled = true;
+        let mut engine = SimEngine::new(4).with_work(2_000);
+        let mut sched: Scheduler<SimEngine> = Scheduler::new(&cfg);
+        sched.submit(&engine, Request::new(0, vec![7; 256], 1),
+                     EventSink::null());
+        sched.submit(&engine, Request::new(1, vec![7; 256], 1),
+                     EventSink::null());
+        let mut done = Vec::new();
+        while sched.has_work() {
+            done.extend(sched.run_round(&mut engine).unwrap());
+        }
+        let cold = done.iter().find(|r| r.id == 0).unwrap();
+        let warm = done.iter().find(|r| r.id == 1).unwrap();
+        assert!(warm.prefill_us < cold.prefill_us,
+                "warm {} !< cold {}", warm.prefill_us, cold.prefill_us);
+        assert_eq!(sched.metrics.prefix_tokens_skipped, 256);
+        sched.flush_prefix_cache();
         assert_eq!(sched.kv.used(), 0);
     }
 

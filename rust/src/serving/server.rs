@@ -75,6 +75,23 @@ impl ServerHandle {
 /// worker thread* (PJRT client construction included — its handles never
 /// cross threads).  Generic over [`EngineCore`] so tests and benches can
 /// serve the artifact-free `SimEngine`.
+///
+/// # Example (artifact-free: serve the simulated engine)
+///
+/// ```
+/// use shareprefill::config::Config;
+/// use shareprefill::serving::scheduler::Scheduler;
+/// use shareprefill::serving::server::spawn;
+/// use shareprefill::serving::sim::SimEngine;
+///
+/// let serve = Config::default().serve;
+/// let handle = spawn(move || {
+///     Ok((Scheduler::new(&serve), SimEngine::new(4)))
+/// });
+/// let response = handle.submit_blocking(vec![7; 64], 2).unwrap();
+/// assert_eq!(response.generated.len(), 2);
+/// assert!(handle.shutdown().contains("requests: 1 done"));
+/// ```
 pub fn spawn<E, F>(factory: F) -> ServerHandle
 where
     E: EngineCore + 'static,
@@ -133,6 +150,9 @@ where
                 return;
             }
             if shutting_down && !sched.has_work() {
+                // release the prefix index's retains so the report's
+                // world ends with every KV block accounted for
+                sched.flush_prefix_cache();
                 let _ = rep_tx.send(sched.metrics.report());
                 return;
             }
@@ -144,6 +164,24 @@ where
 /// Builder-style server construction: one typed entry point from
 /// [`Config`] to a running server, replacing the ad-hoc closure+tuple
 /// wiring each caller used to repeat.
+///
+/// # Example (needs compiled model artifacts at runtime)
+///
+/// ```no_run
+/// use shareprefill::config::MethodKind;
+/// use shareprefill::serving::ServerBuilder;
+///
+/// let mut fleet = ServerBuilder::new()
+///     .model("sim-llama")
+///     .method(MethodKind::SharePrefill)
+///     .workers(4)
+///     .prefix_cache(true)
+///     .spawn_fleet();
+/// let session = fleet.submit(vec![1, 2, 3], 8);
+/// let response = session.wait().unwrap();
+/// println!("{} tokens, report:\n{}", response.generated.len(),
+///          fleet.shutdown());
+/// ```
 pub struct ServerBuilder {
     config: Config,
     model: String,
@@ -207,6 +245,14 @@ impl ServerBuilder {
         self
     }
 
+    /// Toggle content-addressed prefix sharing — repeat or extended
+    /// prompts adopt cached KV blocks and prefill only their divergent
+    /// suffix (keeps the other `serve.prefix_cache` knobs).
+    pub fn prefix_cache(mut self, enabled: bool) -> ServerBuilder {
+        self.config.serve.prefix_cache.enabled = enabled;
+        self
+    }
+
     /// Engine shards behind the fleet front door (`serve.shards`;
     /// 1 = the plain single-engine server path).
     pub fn shards(mut self, n: usize) -> ServerBuilder {
@@ -237,8 +283,9 @@ impl ServerBuilder {
     pub fn spawn_fleet(self) -> super::fleet::FleetHandle {
         let ServerBuilder { config, model } = self;
         let shards = config.serve.shards;
+        let prefix_on = config.serve.prefix_cache.enabled;
         let serve = config.serve.clone();
-        super::fleet::spawn_fleet(shards, move |_shard| {
+        let mut handle = super::fleet::spawn_fleet(shards, move |_shard| {
             let registry = crate::runtime::open_registry(&config)?;
             let engine = EngineBuilder::new(registry, &model)
                 .method_config(config.method.clone())
@@ -246,7 +293,12 @@ impl ServerBuilder {
                 .workers(config.serve.workers)
                 .build()?;
             Ok((Scheduler::new(&serve), engine))
-        })
+        });
+        if prefix_on {
+            // co-locate same-prefix sessions with their cached blocks
+            handle.enable_prefix_affinity();
+        }
+        handle
     }
 }
 

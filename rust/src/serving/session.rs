@@ -7,6 +7,25 @@
 //! TTFT-relevant moment), one `Token` per decoded token, and exactly one
 //! terminal event (`Done`, `Cancelled`, `Rejected`, or `Error`) — clients
 //! never hang waiting on a dropped request.
+//!
+//! # Stream contract
+//!
+//! Every session's stream obeys three invariants the server tests (and
+//! the serving fuzzer) hold it to: *exactly one* terminal event, always
+//! last; `Token` events indexed contiguously from 0; `PrefillDone`
+//! before the first `Token`.  Driving a stream by hand:
+//!
+//! ```
+//! use shareprefill::serving::session::{Event, EventSink, SessionHandle};
+//!
+//! let (sink, rx) = EventSink::channel();
+//! let handle = SessionHandle { id: 7, events: rx };
+//! sink.send(Event::Token { id: 7, token: 42, index: 0 });
+//! sink.send(Event::Cancelled { id: 7 });
+//! let events = handle.collect(); // stops at the terminal event
+//! assert_eq!(events.len(), 2);
+//! assert!(events.last().is_some_and(|e| e.is_terminal()));
+//! ```
 
 use anyhow::{bail, Result};
 use std::fmt;

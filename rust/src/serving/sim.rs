@@ -71,6 +71,10 @@ pub struct SimEngine {
 
 pub struct SimPrefill {
     prompt_len: usize,
+    /// Prompt tokens already covered by shared prefix-cache KV blocks
+    /// ([`EngineCore::begin_prefill_at`]); the simulated per-chunk cost
+    /// only charges for the suffix past this point.  0 = cold.
+    start: usize,
     layers_done: usize,
     layers_total: usize,
     /// Snapshotted at `begin_prefill`: this bucket was already served.
@@ -153,12 +157,23 @@ impl EngineCore for SimEngine {
             .is_some_and(|w| w.contains(&Self::bucket_of(tokens.len())));
         Ok(SimPrefill {
             prompt_len: tokens.len(),
+            start: 0,
             layers_done: 0,
             layers_total: self.layers,
             warm,
             degraded: self.pressured,
             spent_us: 0,
         })
+    }
+
+    fn begin_prefill_at(&mut self, tokens: &[i32], start_tokens: usize)
+                        -> Result<SimPrefill> {
+        let mut t = self.begin_prefill(tokens)?;
+        // Warm-prefix entry: only the suffix past the shared blocks
+        // costs simulated compute.  `start_tokens == 0` is bit-identical
+        // to a plain `begin_prefill` (the knob-off discipline).
+        t.start = start_tokens.min(t.prompt_len);
+        Ok(t)
     }
 
     fn prefill_chunk(&mut self, t: &mut SimPrefill, max_layers: usize)
@@ -168,7 +183,7 @@ impl EngineCore for SimEngine {
             (t.layers_done + max_layers.max(1)).min(t.layers_total);
         if self.ns_per_token_layer > 0 {
             let advanced = (t.layers_done - before) as u64;
-            let mut ns = advanced * t.prompt_len as u64
+            let mut ns = advanced * (t.prompt_len - t.start) as u64
                 * self.ns_per_token_layer;
             if t.warm {
                 ns = ns * SIM_WARM_COST_PCT / 100;
@@ -239,6 +254,10 @@ impl EngineCore for SimEngine {
             pool_items: t.layers_total * SIM_HEADS,
             pool_span_items: t.layers_total * SIM_HEADS.div_ceil(workers),
             pool_workers: workers,
+            // the scheduler overwrites both prefix fields with its
+            // authoritative block accounting; this is the engine-local
+            // view for engines driven without a scheduler
+            prefix_tokens_skipped: t.start,
             ..Default::default()
         };
         Ok((SimDecode {
@@ -479,6 +498,54 @@ mod tests {
         let after = run_one(&mut e, 256);
         assert_eq!(after.blocks_computed, normal.blocks_computed,
                    "pressure released: exact behavior restored");
+    }
+
+    #[test]
+    fn warm_prefix_charges_only_the_suffix() {
+        // same prompt, half its tokens covered by shared prefix blocks:
+        // strictly cheaper simulated prefill, same decode tokens
+        let mut e = SimEngine::new(4).with_work(2_000);
+        let prompt = vec![7; 256];
+        let mut cold = e.begin_prefill(&prompt).unwrap();
+        while !e.prefill_chunk(&mut cold, 1).unwrap() {}
+        let (mut dc, sc) = e.start_decode(cold, 2).unwrap();
+        while e.decode_step(&mut dc).unwrap().is_some() {}
+        let mut warm = e.begin_prefill_at(&prompt, 128).unwrap();
+        while !e.prefill_chunk(&mut warm, 1).unwrap() {}
+        let (mut dw, sw) = e.start_decode(warm, 2).unwrap();
+        while e.decode_step(&mut dw).unwrap().is_some() {}
+        assert!(sw.latency_us < sc.latency_us,
+                "warm-prefix {} !< cold {}", sw.latency_us, sc.latency_us);
+        assert_eq!(sw.prefix_tokens_skipped, 128);
+        assert_eq!(sc.prefix_tokens_skipped, 0);
+        assert_eq!(e.generated(&dc), e.generated(&dw),
+                   "prefix reuse changed decoded tokens");
+        assert_eq!(sc.blocks_computed, sw.blocks_computed,
+                   "block accounting is prefix-independent");
+    }
+
+    #[test]
+    fn begin_prefill_at_zero_is_bit_identical() {
+        let mut a = SimEngine::new(3);
+        let mut b = SimEngine::new(3);
+        let ta = a.begin_prefill(&[1; 200]).unwrap();
+        let tb = b.begin_prefill_at(&[1; 200], 0).unwrap();
+        let (mut da, sa) = {
+            let mut t = ta;
+            while !a.prefill_chunk(&mut t, 1).unwrap() {}
+            a.start_decode(t, 3).unwrap()
+        };
+        let (mut db, sb) = {
+            let mut t = tb;
+            while !b.prefill_chunk(&mut t, 1).unwrap() {}
+            b.start_decode(t, 3).unwrap()
+        };
+        while a.decode_step(&mut da).unwrap().is_some() {}
+        while b.decode_step(&mut db).unwrap().is_some() {}
+        assert_eq!(a.generated(&da), b.generated(&db));
+        assert_eq!(sa.blocks_computed, sb.blocks_computed);
+        assert_eq!(sa.latency_us, sb.latency_us);
+        assert_eq!(sa.prefix_tokens_skipped, sb.prefix_tokens_skipped);
     }
 
     #[test]

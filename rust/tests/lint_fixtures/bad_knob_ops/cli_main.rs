@@ -1,0 +1,2 @@
+// lint fixture: the CLI flag backing the knob in config/mod.rs.
+pub const USAGE: &str = "serve [--workers N]";

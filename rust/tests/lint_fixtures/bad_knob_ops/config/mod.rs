@@ -1,0 +1,5 @@
+// lint fixture: serve.workers is wired to the CLI and the design doc,
+// but the operator's handbook the test passes has no row for it.
+pub fn apply(t: &Toml, c: &mut Cfg) {
+    c.workers = t.usize_or("serve.workers", c.workers);
+}

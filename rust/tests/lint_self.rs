@@ -16,7 +16,12 @@ fn fixtures() -> PathBuf {
 
 fn check(tree: &str, base: &baseline::Baseline, design: Option<&str>)
          -> Vec<lint::Diagnostic> {
-    lint::check_tree(&fixtures().join(tree), Some(base), design)
+    check_ops(tree, base, design, None)
+}
+
+fn check_ops(tree: &str, base: &baseline::Baseline, design: Option<&str>,
+             ops: Option<&str>) -> Vec<lint::Diagnostic> {
+    lint::check_tree(&fixtures().join(tree), Some(base), design, ops)
         .expect("fixture tree must be walkable")
         .diagnostics
 }
@@ -32,7 +37,8 @@ fn keys(diags: &[lint::Diagnostic]) -> Vec<(String, usize, &str)> {
 #[test]
 fn good_tree_is_clean() {
     let design = "knob table: serve.workers maps to --workers";
-    let diags = check("good_tree", &empty(), Some(design));
+    let ops = "| serve.workers | --workers | 1 | more prefill threads |";
+    let diags = check_ops("good_tree", &empty(), Some(design), Some(ops));
     assert!(diags.is_empty(), "unexpected findings: {diags:?}");
 }
 
@@ -119,11 +125,32 @@ fn bad_knobs_exact_diagnostics() {
 }
 
 #[test]
+fn bad_knob_ops_exact_diagnostics() {
+    // serve.workers is wired to the CLI and named in the design doc,
+    // but the operator's handbook has no row for it: exactly the one
+    // new diagnostic, anchored on the key's parse site
+    let design = "knob table: serve.workers maps to --workers";
+    let diags = check_ops("bad_knob_ops", &empty(), Some(design),
+                          Some("operator handbook with no knob table"));
+    assert_eq!(keys(&diags), vec![
+        ("config/mod.rs".to_string(), 4, rules::RULE_KNOBS),
+    ]);
+    assert!(diags[0].message.contains("OPERATIONS.md"),
+            "handbook half: {}", diags[0].message);
+    // with the row present the tree is clean again
+    let ops = "| serve.workers | --workers | 1 | prefill threads |";
+    assert!(check_ops("bad_knob_ops", &empty(), Some(design), Some(ops))
+                .is_empty());
+    // and ops = None (no handbook shipped) skips the half entirely
+    assert!(check("bad_knob_ops", &empty(), Some(design)).is_empty());
+}
+
+#[test]
 fn write_baseline_counts_match_found_sites() {
     // base = None is the --write-baseline path: no ratchet comparison,
     // panic_counts carries what would be frozen
     let report = lint::check_tree(&fixtures().join("bad_panic"),
-                                  None, None).unwrap();
+                                  None, None, None).unwrap();
     assert!(report.diagnostics.is_empty(),
             "write mode must not emit ratchet findings");
     assert_eq!(report.panic_counts.get("serving/sched.rs"), Some(&2));
@@ -186,8 +213,10 @@ fn shipped_tree_is_lint_clean() {
         .expect("committed baseline parses");
     let design = std::fs::read_to_string(root.join("DESIGN.md"))
         .expect("DESIGN.md is readable");
+    let ops = std::fs::read_to_string(root.join("docs/OPERATIONS.md"))
+        .expect("docs/OPERATIONS.md is readable");
     let report = lint::check_tree(&root.join("rust/src"), Some(&base),
-                                  Some(&design)).unwrap();
+                                  Some(&design), Some(&ops)).unwrap();
     for d in &report.diagnostics {
         eprintln!("{d}");
     }

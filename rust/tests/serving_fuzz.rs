@@ -16,6 +16,14 @@
 //!   same terminals), and the first-completed (cold) prefill reports
 //!   bit-identical block accounting — the cache may only change *warm*
 //!   requests' cost, never any request's output;
+//! * replaying the **identical script with the prefix-sharing KV
+//!   cache on** (`serve.prefix_cache`) also produces a bit-identical
+//!   event stream — shared-prefix admissions adopt cached blocks and
+//!   skip prefill work, but no session's output may change, no shared
+//!   block is ever mutated (the scheduler's insert path is append-only
+//!   by construction; the allocator's refcount/COW invariants are
+//!   property-tested in `kvcache`), and once the index is flushed the
+//!   drained scheduler holds zero KV blocks;
 //! * replaying the identical script at a **different worker-pool
 //!   width** (1 vs `SHAREPREFILL_WORKERS`, default 4) also produces a
 //!   bit-identical event stream — the head-parallel pool may only
@@ -229,6 +237,9 @@ fn run_script(script: &[Op], cfg: &ServeConfig, cache_on: bool,
         guard += 1;
         assert!(guard < 100_000, "scheduler failed to drain");
     }
+    // prefix-cache retains are deliberate state, not a leak: release
+    // them before the leak audit (no-op when the knob is off)
+    sched.flush_prefix_cache();
     assert_eq!(sched.kv.used(), 0, "kv blocks leaked after drain");
     drop(sink);
     let events: Vec<Event> = rx.iter().collect();
@@ -396,6 +407,72 @@ fn fuzz_bursty_flood_under_admission_control() {
     assert!(shed > 0, "flood matrix never exercised a structured shed");
     eprintln!("[fuzz] bursty admission flood: {cases} cases, \
                {shed} sheds in {:?}", t0.elapsed());
+}
+
+/// The prefix-sharing dimension: the identical script replayed with
+/// `serve.prefix_cache` on (random index capacities, eviction
+/// included) must be bit-identical to the knob-off run — same event
+/// order, same tokens, same terminals, same reject kinds.  All fuzz
+/// prompts share token content, so same-length-class submissions are
+/// exactly the shared-template workload the cache accelerates; the
+/// warm runs must differ only in skipped prefill work.  `run_script`
+/// separately asserts zero KV blocks after the index flush, on every
+/// run.  A final crafted serial case proves the matrix exercised a
+/// genuinely warm admission (nonzero block reuse).
+#[test]
+fn fuzz_prefix_cache_dimension() {
+    let t0 = Instant::now();
+    let base = fuzz_seed();
+    let mut cases = 0usize;
+    let mut reused = 0u64;
+    for &concurrency in &[1usize, 2, 4] {
+        for case in 0..6u64 {
+            let mut rng = Rng::new(
+                base ^ 0x70F1 ^ ((concurrency as u64) << 32) ^ case);
+            let cfg = gen_config(&mut rng, concurrency);
+            let mut warm_cfg = cfg.clone();
+            warm_cfg.prefix_cache.enabled = true;
+            // tiny capacities force LRU eviction mid-script
+            warm_cfg.prefix_cache.capacity =
+                *rng.choose(&[1usize, 4, 512]);
+            let script = gen_script(&mut rng, 40);
+            let off = run_script(&script, &cfg, false, 1);
+            let on = run_script(&script, &warm_cfg, false, 1);
+            let off_sigs: Vec<String> =
+                off.events.iter().map(sig).collect();
+            let on_sigs: Vec<String> =
+                on.events.iter().map(sig).collect();
+            assert_eq!(off_sigs, on_sigs,
+                       "prefix cache changed the event stream \
+                        (concurrency {concurrency}, case {case})");
+            for e in &on.events {
+                if let Event::PrefillDone { stats, .. } = e {
+                    reused += stats.prefix_blocks_reused as u64;
+                }
+            }
+            cases += 1;
+        }
+    }
+    // crafted warm case: a completed 256-token prompt republishes its
+    // chunks, so an identical follow-up must adopt them — guarantees
+    // the reuse counter below cannot be satisfied vacuously
+    let mut warm_cfg = ServeConfig::default();
+    warm_cfg.prefix_cache.enabled = true;
+    let script = vec![
+        Op::Submit { len: 256, max_new: 1 },
+        Op::Rounds(64),
+        Op::Submit { len: 256, max_new: 1 },
+    ];
+    let out = run_script(&script, &warm_cfg, false, 1);
+    for e in &out.events {
+        if let Event::PrefillDone { stats, .. } = e {
+            reused += stats.prefix_blocks_reused as u64;
+        }
+    }
+    assert!(reused > 0,
+            "prefix matrix never exercised a warm admission");
+    eprintln!("[fuzz] prefix-cache dimension: {cases} cases, {reused} \
+               blocks reused in {:?}", t0.elapsed());
 }
 
 /// Thread-level fuzz over the server front-end: random submit / cancel

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link checker (zero-dep; CI's blocking `docs` job).
+
+Walks every *.md file in the repository, extracts inline links
+`[text](target)` outside fenced code blocks, and verifies each
+repo-relative target resolves to an existing file or directory.
+External schemes (http/https/mailto), pure `#anchor` links, and image
+embeds `![..](..)` (the retrieved-paper dumps quote figure references
+from PDF conversion) are skipped; `#fragment` suffixes are stripped
+before the existence check.  Exits nonzero listing every broken link.
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "target", "node_modules"}
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files():
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in sorted(filenames):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def main():
+    broken = []
+    for path in md_files():
+        in_fence = False
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                if line.lstrip().startswith("```"):
+                    in_fence = not in_fence
+                    continue
+                if in_fence:
+                    continue
+                for m in LINK.finditer(line):
+                    if m.start() > 0 and line[m.start() - 1] == "!":
+                        continue
+                    target = m.group(1)
+                    if target.startswith(("http://", "https://",
+                                          "mailto:", "#")):
+                        continue
+                    rel = target.split("#", 1)[0]
+                    if not rel:
+                        continue
+                    base = ROOT if rel.startswith("/") \
+                        else os.path.dirname(path)
+                    resolved = os.path.normpath(
+                        os.path.join(base, rel.lstrip("/")))
+                    if not os.path.exists(resolved):
+                        broken.append("%s:%d: %s" % (
+                            os.path.relpath(path, ROOT), lineno, target))
+    if broken:
+        print("%d broken intra-repo markdown link(s):" % len(broken))
+        for b in broken:
+            print("  " + b)
+        return 1
+    print("markdown links OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
